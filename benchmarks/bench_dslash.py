@@ -1,0 +1,54 @@
+"""Paper §5 (sustained GFLOP/s of the dslash-dominated solver).
+
+CPU wall-times here are *interpret-mode* lower bounds used for relative
+comparisons (jnp packed op vs Pallas path); absolute TPU projections come
+from the dry-run roofline (EXPERIMENTS.md §Roofline), exactly as the paper
+separates simulation traces from device numbers.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LatticeShape, dslash_flops, pack_gauge, pack_spinor
+from repro.core.wilson import dslash_packed
+from repro.data import lattice_problem
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for dims in ((4, 4, 4, 8), (8, 8, 8, 8), (8, 8, 8, 16)):
+        lat = LatticeShape(*dims)
+        up, pp = lattice_problem(lat, mass=0.1)
+        m = 0.1
+        jnp_op = jax.jit(lambda u, p: dslash_packed(u, p, m))
+        t_jnp = _time(jnp_op, up, pp)
+        fl = dslash_flops(lat.volume)
+        rows.append((f"dslash_jnp_{lat}", t_jnp * 1e6,
+                     f"{fl / t_jnp / 1e9:.3f}GFLOP/s"))
+        # bf16 storage variant (the paper's low-precision datapath)
+        up16, pp16 = up.astype(jnp.bfloat16), pp.astype(jnp.bfloat16)
+        t_16 = _time(jax.jit(lambda u, p: dslash_packed(u, p, m)), up16, pp16)
+        rows.append((f"dslash_jnp_bf16_{lat}", t_16 * 1e6,
+                     f"{fl / t_16 / 1e9:.3f}GFLOP/s"))
+    # Pallas kernel, interpret mode (correctness path; slow by design)
+    lat = LatticeShape(4, 4, 4, 8)
+    up, pp = lattice_problem(lat, mass=0.1)
+    from repro.kernels.wilson_dslash import dslash as dslash_k
+    t_pal = _time(jax.jit(lambda u, p: dslash_k(u, p, 0.1)), up, pp, iters=1)
+    rows.append((f"dslash_pallas_interp_{lat}", t_pal * 1e6,
+                 f"{dslash_flops(lat.volume) / t_pal / 1e9:.3f}GFLOP/s"))
+    return rows

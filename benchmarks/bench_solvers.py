@@ -1,0 +1,67 @@
+"""Solver comparison table: iterations + collectives per iteration.
+
+The paper motivates minimizing "global communications ... for total error
+estimates"; ``pipecg`` restructures CG to ONE fused reduction per
+iteration.  This bench counts all-reduces in the lowered HLO of one
+iteration body per solver (8 fake devices, subprocess), plus CPU
+convergence behaviour.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core import LatticeShape
+from repro.core import distributed as dist
+from repro.data import lattice_problem
+from repro.core.wilson import dslash_packed
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+lat = LatticeShape(4, 4, 4, 8)
+up, pp = lattice_problem(lat, mass=0.3)
+upd, ppd = dist.shard_lattice_fields(mesh, up, pp)
+
+out = {}
+for sv in ("cg", "pipecg", "mpcg"):
+    x, st = dist.solve_wilson(mesh, upd, ppd, 0.3, solver=sv, tol=1e-6,
+                              maxiter=500)
+    res = dslash_packed(up, jax.device_get(x), 0.3) - pp
+    rel = float(jnp.linalg.norm(res.ravel()) / jnp.linalg.norm(pp.ravel()))
+    # count reductions in the whole compiled solve (while-body counted once
+    # == per-iteration collective count for the loop)
+    import functools
+    f = functools.partial(dist.solve_wilson, mesh, solver=sv, tol=1e-6,
+                          maxiter=500)
+    txt = jax.jit(lambda u, b: dist.solve_wilson(mesh, u, b, 0.3, solver=sv,
+                                                 tol=1e-6, maxiter=500)
+                  ).lower(upd, ppd).compile().as_text()
+    out[sv] = {"iters": int(st.iterations), "rel_res": rel,
+               "all_reduce_in_body": txt.count(" all-reduce(")}
+print("RESULT" + json.dumps(out))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    if r.returncode != 0:
+        return [("solver_comparison", -1.0, "FAILED:" + r.stderr[-200:])]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][-1]
+    d = json.loads(line[len("RESULT"):])
+    rows = []
+    for sv, v in d.items():
+        rows.append((f"solver_{sv}", float(v["iters"]),
+                     f"rel_res={v['rel_res']:.2e};"
+                     f"all_reduces={v['all_reduce_in_body']}"))
+    return rows

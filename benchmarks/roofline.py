@@ -1,0 +1,100 @@
+"""Roofline aggregation: reads experiments/dryrun/*.json into the
+EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+Conventions (see also repro.launch.dryrun):
+  * cost_analysis / collective bytes come from the per-device SPMD HLO of
+    reduced-depth UNROLLED lowerings, linearly extrapolated to full depth
+    (XLA counts while bodies once) — so all three terms are PER-CHIP
+    seconds and the chips factor in the roofline formulas is already
+    applied.
+  * "bytes accessed" from CPU-compiled HLO over-counts TPU HBM traffic
+    (CPU fuses less), so the memory term is an upper bound; relative
+    before/after comparisons in §Perf remain valid.
+  * model FLOPs = 6·N_active·tokens (train) or 2·N_active·tokens (serve).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = {"compute": 197e12, "hbm": 819e9, "ici": 50e9}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(n) -> str:
+    return f"{n / 2**30:.2f}GiB"
+
+
+def table(cells: list[dict], mesh: str = "pod") -> str:
+    """Markdown roofline table for one mesh."""
+    hdr = ("| arch | shape | fits (arg+temp/chip) | compute_s | memory_s | "
+           "collective_s | dominant | useful_flops | note |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — "
+                         f"| — | SKIP: {c['reason'][:60]}… |")
+            continue
+        r = c["roofline"]
+        per_dev = c["per_device_bytes"]
+        fits = "Y" if per_dev < 16 * 2**30 else "OVER"
+        ufr = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fits} {fmt_bytes(per_dev)} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{ufr:.2f} | compile {c['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def summarize(cells: list[dict]) -> dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    doms = {}
+    for c in ok:
+        doms[c["roofline"]["dominant"]] = \
+            doms.get(c["roofline"]["dominant"], 0) + 1
+    return {"ok": len(ok), "skipped": len(skipped), "dominant": doms}
+
+
+def run() -> list[tuple[str, float, str]]:
+    cells = load_cells()
+    s = summarize(cells)
+    rows = [("dryrun_cells_ok", float(s["ok"]),
+             f"skipped={s['skipped']};dominant={s['dominant']}")]
+    worst = None
+    for c in cells:
+        if c["status"] != "ok" or c["mesh"] != "pod":
+            continue
+        r = c["roofline"]
+        tot = r["compute_s"] + 1e-12
+        frac = r["compute_s"] / max(r["compute_s"], r["memory_s"],
+                                    r["collective_s"])
+        if worst is None or frac < worst[1]:
+            worst = (f"{c['arch']}/{c['shape']}", frac)
+    if worst:
+        rows.append(("worst_roofline_fraction", worst[1], worst[0]))
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(table(cells, "pod"))
+    print()
+    print(table(cells, "multipod"))
+    print(summarize(cells))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_dslash           — paper §5 sustained-GFLOP/s table
+  bench_mixed_precision  — paper §2/§3.2 two-precision CG (Ref. [10])
+  bench_overlap          — paper Fig. 2 transfer/compute overlap
+  bench_solvers          — collectives-per-iteration (pipelined CG)
+  roofline               — §Roofline aggregation from the dry-run JSONs
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_dslash, bench_mixed_precision, bench_overlap,
+                        bench_solvers, roofline)
+
+MODULES = [("dslash", bench_dslash),
+           ("mixed_precision", bench_mixed_precision),
+           ("overlap", bench_overlap), ("solvers", bench_solvers),
+           ("roofline", roofline)]
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in MODULES:
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},-1,ERROR")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill once, decode greedily — the code path
+the ``prefill_32k`` / ``decode_32k`` dry-run shapes lower at scale.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or
+                  ["--arch", "glm4-9b", "--requests", "4",
+                   "--prompt-len", "32", "--gen", "12"]))

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: mixed-precision Conjugate Gradient for
+the Dirac-Wilson operator, adapted from FPGA dataflow to TPU (see DESIGN.md).
+
+Public surface:
+  lattice   — geometry, SU(3) fields, layout packing
+  wilson    — the Dirac-Wilson operator (natural + packed layouts)
+  solvers   — cg / cgnr / mpcg / pipecg / bicgstab
+  precision — (low, high) precision-pair policies
+  distributed — shard_map domain decomposition + halo-overlap dslash
+"""
+
+from repro.core.lattice import (LatticeShape, field_dot, field_norm2,
+                                pack_gauge, pack_spinor, random_gauge,
+                                random_spinor, unit_gauge, unpack_gauge,
+                                unpack_spinor)
+from repro.core.precision import PrecisionPolicy
+from repro.core.solvers import (SolveStats, bicgstab, cg, cg_trace, cgnr,
+                                mpcg, pipecg)
+from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, apply_gamma5, dslash,
+                               dslash_dagger, dslash_dagger_packed,
+                               dslash_flops, dslash_packed, normal_op,
+                               normal_op_packed)

@@ -1,0 +1,206 @@
+"""Distributed Dirac-Wilson solver: 4D domain decomposition over the device
+mesh with halo exchange and communication/compute overlap.
+
+This is the scale-out layer the paper motivates via HPCG ("boundary values
+have to be frequently exchanged between the neighbours as well as global
+communications ... to establish total error estimates"):
+
+* The lattice is block-decomposed over mesh axes (default: T over ``data``,
+  Z over ``model``, and — multi-pod — Y over ``pod``).  Each device owns a
+  contiguous 4D sub-volume; X (the lane axis) is never sharded.
+
+* ``dslash_halo`` evaluates the *bulk* stencil entirely locally (periodic
+  rolls) and then **corrects only the boundary planes** with
+  `collective_permute`d halo planes.  The bulk compute does not depend on
+  the halos, so XLA's latency-hiding scheduler overlaps the ppermutes with
+  the bulk — the inter-chip version of the paper's streaming overlap (T4).
+  The price is one extra plane of hop evaluations per sharded direction —
+  O(1/T_local) redundant compute traded for full overlap, the same trade
+  the FPGA paper makes with its redundant cyclic-buffer reloads.
+
+* Global reductions inside CG go through an injected ``dot``/``norm2``
+  performing a single fused ``psum`` over all mesh axes; with ``pipecg``
+  this is ONE collective per iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import solvers
+from repro.core.wilson import (apply_gamma5_packed, dslash_packed,
+                               hop_term_packed)
+
+# lattice axis index -> name, for error messages
+_LAT_AXIS_NAMES = {0: "T", 1: "Z", 2: "Y"}
+
+
+def _take(arr: jax.Array, axis: int, idx: int) -> jax.Array:
+    """Single plane at static index ``idx`` (0 or -1), keeping the dim."""
+    sl = [slice(None)] * arr.ndim
+    sl[axis] = slice(idx, idx + 1) if idx >= 0 else slice(idx, None)
+    return arr[tuple(sl)]
+
+
+def _add_at(arr: jax.Array, axis: int, idx: int, delta: jax.Array):
+    sl = [slice(None)] * arr.ndim
+    sl[axis] = slice(idx, idx + 1) if idx >= 0 else slice(idx, None)
+    return arr.at[tuple(sl)].add(delta.astype(arr.dtype))
+
+
+def dslash_halo(up: jax.Array, pp: jax.Array, mass,
+                sharded: Mapping[int, tuple[str, int]],
+                r: float = 1.0, use_pallas: bool = False) -> jax.Array:
+    """Dirac-Wilson dslash on a LOCAL shard; call inside ``shard_map``.
+
+    Args:
+      up:      local (4, Tl, Zl, Yl, 18, X) gauge shard.
+      pp:      local (Tl, Zl, Yl, 24, X) spinor shard.
+      sharded: {lattice_axis (0=T,1=Z,2=Y): (mesh_axis_name, axis_size)}.
+      use_pallas: run the bulk stencil through the Pallas plane-streaming
+        kernel (the TPU deployment path; r=1 only) instead of the jnp op.
+    """
+    # 1) bulk: local periodic stencil (independent of any communication)
+    if use_pallas:
+        from repro.kernels.wilson_dslash.kernel import dslash_pallas
+        out = dslash_pallas(up, pp, mass)
+    else:
+        out = dslash_packed(up, pp, mass, r=r)
+
+    # 2) halo exchange + boundary-plane corrections per sharded direction
+    for mu, (ax, n) in sorted(sharded.items()):
+        if n == 1:
+            continue
+        fwd = [(i, (i + 1) % n) for i in range(n)]  # recv from prev rank
+        bwd = [(i, (i - 1) % n) for i in range(n)]  # recv from next rank
+        first = _take(pp, mu, 0)
+        last = _take(pp, mu, -1)
+        u_mu = up[mu]
+        u_last = _take(u_mu, mu, -1)
+
+        psi_prev = lax.ppermute(last, ax, fwd)    # psi at my (axis)-1 edge
+        u_prev = lax.ppermute(u_last, ax, fwd)    # U_mu at that edge
+        psi_next = lax.ppermute(first, ax, bwd)   # psi at my (axis)+1 edge
+
+        # backward hop into plane 0: bulk used local wrap (last plane)
+        wrong_b = hop_term_packed(u_last, last, mu, forward=False, r=r)
+        right_b = hop_term_packed(u_prev, psi_prev, mu, forward=False, r=r)
+        out = _add_at(out, mu, 0, right_b - wrong_b)
+
+        # forward hop into plane -1: U is local (output site), psi was wrapped
+        wrong_f = hop_term_packed(u_last, first, mu, forward=True, r=r)
+        right_f = hop_term_packed(u_last, psi_next, mu, forward=True, r=r)
+        out = _add_at(out, mu, -1, right_f - wrong_f)
+    return out
+
+
+def dslash_dagger_halo(up, pp, mass, sharded, r: float = 1.0):
+    return apply_gamma5_packed(
+        dslash_halo(up, apply_gamma5_packed(pp), mass, sharded, r=r))
+
+
+def normal_op_halo(up, pp, mass, sharded, r: float = 1.0):
+    return dslash_dagger_halo(up, dslash_halo(up, pp, mass, sharded, r=r),
+                              mass, sharded, r=r)
+
+
+# ---------------------------------------------------------------------------
+# Mesh plumbing
+# ---------------------------------------------------------------------------
+
+def lattice_specs(mesh: Mesh, axis_map: Mapping[int, str] | None = None):
+    """(psi_spec, gauge_spec, sharded) for decomposing (T,Z,Y) over ``mesh``.
+
+    Default axis map: T->data, Z->model, and Y->pod when present.
+    """
+    if axis_map is None:
+        axis_map = {0: "data", 1: "model"}
+        if "pod" in mesh.axis_names:
+            axis_map[2] = "pod"
+    sharded = {mu: (name, mesh.shape[name]) for mu, name in axis_map.items()}
+    spin = [None] * 5
+    for mu, name in axis_map.items():
+        spin[mu] = name
+    psi_spec = P(*spin)
+    gauge_spec = P(None, *spin)
+    return psi_spec, gauge_spec, sharded
+
+
+def make_psum_dots(mesh: Mesh):
+    """Local-shard inner products with a single fused psum across the mesh."""
+    axes = tuple(mesh.axis_names)
+
+    def dot(a, b):
+        local = jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+        return lax.psum(local, axes)
+
+    def norm2(a):
+        a32 = a.astype(jnp.float32)
+        return lax.psum(jnp.sum(a32 * a32), axes)
+
+    return dot, norm2
+
+
+def solve_wilson(mesh: Mesh, up: jax.Array, b: jax.Array, mass, *,
+                 solver: str = "cg", tol: float = 1e-6, maxiter: int = 1000,
+                 inner_tol: float = 5e-2, low_dtype=jnp.bfloat16,
+                 axis_map: Mapping[int, str] | None = None, r: float = 1.0,
+                 residual_replacement_every: int = 25):
+    """Solve D x = b (via the HPD normal equations) on a device mesh.
+
+    ``solver``: "cg" | "pipecg" | "mpcg".  Returns (x, SolveStats), both
+    with the same sharding as the inputs / replicated scalars.
+    """
+    psi_spec, gauge_spec, sharded = lattice_specs(mesh, axis_map)
+    dot, norm2 = make_psum_dots(mesh)
+
+    def local_solve(up_l, b_l):
+        op = functools.partial(normal_op_halo, mass=mass, sharded=sharded,
+                               r=r)
+        rhs = dslash_dagger_halo(up_l, b_l, mass, sharded, r=r)
+        if solver == "cg":
+            return solvers.cg(lambda v: op(up_l, v), rhs, tol=tol,
+                              maxiter=maxiter, dot=dot, norm2=norm2)
+        if solver == "pipecg":
+            return solvers.pipecg(
+                lambda v: op(up_l, v), rhs, tol=tol, maxiter=maxiter,
+                residual_replacement_every=residual_replacement_every,
+                dot=dot, norm2=norm2)
+        if solver == "mpcg":
+            up_low = up_l.astype(low_dtype)
+            return solvers.mpcg(
+                lambda v: op(up_low, v), lambda v: op(up_l, v), rhs,
+                tol=tol, inner_tol=inner_tol, inner_maxiter=maxiter,
+                low_dtype=low_dtype, dot=dot, norm2=norm2)
+        if solver == "cg16":
+            # pure low-precision CG (no reliable updates): NOT accurate to
+            # tol — exists to measure the low-precision iteration cost that
+            # mpcg's inner loop pays (EXPERIMENTS.md §Perf H3)
+            up_low = up_l.astype(low_dtype)
+            x, st = solvers.cg(lambda v: op(up_low, v),
+                               rhs.astype(low_dtype), tol=tol,
+                               maxiter=maxiter, dot=dot, norm2=norm2)
+            return x.astype(b_l.dtype), st
+        raise ValueError(f"unknown solver {solver!r}")
+
+    shmapped = jax.shard_map(
+        local_solve, mesh=mesh,
+        in_specs=(gauge_spec, psi_spec),
+        out_specs=(psi_spec, solvers.SolveStats(P(), P(), P(), P())),
+        check_vma=False)
+    return jax.jit(shmapped)(up, b)
+
+
+def shard_lattice_fields(mesh: Mesh, up: jax.Array, pp: jax.Array,
+                         axis_map: Mapping[int, str] | None = None):
+    """device_put global packed fields with the lattice decomposition."""
+    psi_spec, gauge_spec, _ = lattice_specs(mesh, axis_map)
+    return (jax.device_put(up, NamedSharding(mesh, gauge_spec)),
+            jax.device_put(pp, NamedSharding(mesh, psi_spec)))

@@ -1,0 +1,64 @@
+"""Precision-pair policy — the paper's "two data types" as a config object.
+
+The FPGA implementation templates its whole datapath on a (low, high)
+precision pair (paper §2, Ref. [10]).  We carry the same idea through the
+solver stack *and* the LM training stack:
+
+* solvers: bulk iterations in ``low``, reliable updates in ``high``;
+* training: activations/matmuls in ``compute`` (= low), master weights &
+  optimizer state in ``param`` (= high), gradient all-reduce optionally in
+  ``grad`` (compression knob).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "float32": jnp.float32,
+    "float64": jnp.float64,
+}
+
+
+def parse_dtype(name):
+    if not isinstance(name, str):
+        return name
+    return _DTYPES[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """(low, high) pair for solvers; (compute, param, grad) for training."""
+
+    low: str = "bfloat16"
+    high: str = "float32"
+    grad: str | None = None  # None -> same as high (no grad compression)
+
+    @property
+    def low_dtype(self):
+        return parse_dtype(self.low)
+
+    @property
+    def high_dtype(self):
+        return parse_dtype(self.high)
+
+    @property
+    def grad_dtype(self):
+        return parse_dtype(self.grad) if self.grad else self.high_dtype
+
+    # aliases for the training stack
+    @property
+    def compute_dtype(self):
+        return self.low_dtype
+
+    @property
+    def param_dtype(self):
+        return self.high_dtype
+
+
+TPU_DEFAULT = PrecisionPolicy(low="bfloat16", high="float32")
+CPU_TEST = PrecisionPolicy(low="float32", high="float32")

@@ -1,0 +1,299 @@
+"""Krylov solvers: CG, CGNR, mixed-precision reliable-update CG, pipelined CG,
+BiCGStab.
+
+Design notes
+------------
+
+* Every solver takes the operator as a *callable* ``op(x) -> Ax`` and the
+  inner product as injectable callables ``dot``/``norm2``.  This is what
+  makes the same solver run (a) single-device, (b) inside ``shard_map``
+  where vectors are local shards and the injected ``dot`` performs the
+  ``psum`` — the paper's "global communications ... for total error
+  estimates" become a single fused collective per iteration.
+
+* ``mpcg`` is the paper's central algorithmic feature (its Ref. [10],
+  Strzodka–Göddeke): run bulk CG iterations in a *low*-precision type and
+  periodically recompute the true residual / accumulate the solution in a
+  *high*-precision type ("reliable update" / defect correction).
+
+* ``pipecg`` (Ghysels–Vanroose) restructures CG so each iteration has ONE
+  fused reduction, issued alongside the matvec — the cluster-scale
+  analogue of the paper's transfer/compute overlap (T4 in DESIGN.md).
+
+* All solvers are ``lax.while_loop`` based and fully jittable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import field_dot, field_norm2
+
+Array = jax.Array
+Op = Callable[[Array], Array]
+
+
+class SolveStats(NamedTuple):
+    iterations: Array          # total (inner) iterations executed
+    outer_iterations: Array    # outer/reliable-update cycles (1 for plain CG)
+    residual_norm2: Array      # final TRUE residual squared (high precision)
+    converged: Array           # bool
+
+
+def _real(x):
+    return jnp.real(x) if jnp.iscomplexobj(x) else x
+
+
+# ---------------------------------------------------------------------------
+# Conjugate Gradient (HPD operator)
+# ---------------------------------------------------------------------------
+
+def cg(op: Op, b: Array, x0: Array | None = None, *,
+       tol: float = 1e-8, maxiter: int = 1000,
+       dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+    """Standard conjugate gradient for a Hermitian positive-definite ``op``.
+
+    Stops when ``||r||^2 <= tol^2 * ||b||^2`` or at ``maxiter``.
+    """
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - op(x) if x0 is not None else b
+    p = r
+    rs = _real(norm2(r))
+    bs = _real(norm2(b))
+    limit = (tol ** 2) * bs
+
+    def cond(carry):
+        k, x, r, p, rs = carry
+        return jnp.logical_and(k < maxiter, rs > limit)
+
+    def body(carry):
+        k, x, r, p, rs = carry
+        ap = op(p)
+        alpha = (rs / _real(dot(p, ap))).astype(b.dtype)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = _real(norm2(r))
+        beta = (rs_new / rs).astype(b.dtype)
+        p = r + beta * p
+        return (k + 1, x, r, p, rs_new)
+
+    k, x, r, p, rs = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), x, r, p, rs))
+    stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
+                       residual_norm2=rs, converged=rs <= limit)
+    return x, stats
+
+
+def cg_trace(op: Op, b: Array, *, iters: int,
+             dot=field_dot, norm2=field_norm2) -> tuple[Array, Array]:
+    """CG for a fixed number of iterations, recording ||r||^2 per iteration.
+
+    Used by convergence benchmarks (paper §2/§3.2 mixed-precision study);
+    ``lax.scan`` based so the whole history lowers to one XLA program.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = _real(norm2(r))
+
+    def step(carry, _):
+        x, r, p, rs = carry
+        ap = op(p)
+        pap = _real(dot(p, ap))
+        safe = pap != 0
+        alpha = jnp.where(safe, rs / jnp.where(safe, pap, 1.0), 0.0)
+        alpha = alpha.astype(b.dtype)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = _real(norm2(r))
+        beta = jnp.where(rs > 0, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
+        p = r + beta.astype(b.dtype) * p
+        return (x, r, p, rs_new), rs_new
+
+    (x, r, p, rs), hist = jax.lax.scan(step, (x, r, p, rs), None, length=iters)
+    return x, hist
+
+
+# ---------------------------------------------------------------------------
+# CGNR — CG on the normal equations (the paper's solver for Dirac-Wilson)
+# ---------------------------------------------------------------------------
+
+def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
+    """Solve D x = b for non-Hermitian D via D^dag D x = D^dag b."""
+    return cg(lambda v: d_dag_op(d_op(v)), d_dag_op(b), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision reliable-update CG  (the paper's Ref. [10] variant)
+# ---------------------------------------------------------------------------
+
+def mpcg(op_low: Op, op_high: Op, b: Array, *,
+         tol: float = 1e-6, inner_tol: float = 5e-2,
+         inner_maxiter: int = 200, max_outer: int = 50,
+         low_dtype=jnp.bfloat16,
+         dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+    """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
+    high-precision true-residual "reliable updates".
+
+    Each outer cycle solves ``A d = r`` approximately in low precision
+    (relative tolerance ``inner_tol``), then updates ``x += d`` and
+    recomputes the TRUE residual ``r = b - A x`` in high precision.
+    Equivalent to defect correction / iterative refinement with a CG
+    inner solver; converges to the high-precision tolerance while doing
+    most arithmetic in the cheap type.
+    """
+    high = b.dtype
+    bs = _real(norm2(b))
+    limit = (tol ** 2) * bs
+
+    def cond(carry):
+        outer, inner_total, x, r, rs = carry
+        return jnp.logical_and(outer < max_outer, rs > limit)
+
+    def body(carry):
+        outer, inner_total, x, r, rs = carry
+        r_low = r.astype(low_dtype)
+        d, st = cg(op_low, r_low, tol=inner_tol, maxiter=inner_maxiter,
+                   dot=dot, norm2=norm2)
+        x = x + d.astype(high)
+        r = b - op_high(x)                     # reliable update (true residual)
+        rs = _real(norm2(r))
+        return (outer + 1, inner_total + st.iterations, x, r, rs)
+
+    init = (jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+            jnp.zeros_like(b), b, bs)
+    outer, inner_total, x, r, rs = jax.lax.while_loop(cond, body, init)
+    stats = SolveStats(iterations=inner_total, outer_iterations=outer,
+                       residual_norm2=rs, converged=rs <= limit)
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# Pipelined CG — one fused reduction per iteration (Ghysels–Vanroose)
+# ---------------------------------------------------------------------------
+
+def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
+           residual_replacement_every: int = 25,
+           dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+    """Pipelined CG: the two inner products of an iteration are fused into a
+    single reduction which the scheduler can overlap with the matvec
+    ``A w`` — per-iteration collective count drops from 2-3 to 1.
+
+    Pipelined CG's three-term recurrences drift in floating point, so every
+    ``residual_replacement_every`` iterations the TRUE residual
+    ``r = b - A x`` is recomputed and the recurrences restarted — the same
+    reliable-update idea the paper applies across precisions (Ref. [10]),
+    applied here across recurrence drift.  Set 0 to disable.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    w = op(r)
+    dt = b.dtype
+    rr = int(residual_replacement_every)
+
+    # fused reduction: gamma = (r,r), delta = (w,r) — computed together so a
+    # distributed `dot` implementation can batch them into one collective.
+    def fused_dots(r, w):
+        return _real(norm2(r)), _real(dot(w, r))
+
+    gamma, delta = fused_dots(r, w)
+    bs = _real(norm2(b))
+    limit = (tol ** 2) * bs
+
+    zero = jnp.zeros_like(b)
+    init = (jnp.asarray(0, jnp.int32), x, r, w, zero, zero, zero,
+            gamma, delta, jnp.asarray(1.0, gamma.dtype),
+            jnp.asarray(0.0, gamma.dtype), jnp.asarray(True))
+
+    def cond(c):
+        k, *_, gamma, delta, alpha_prev, gamma_prev, restart = c
+        return jnp.logical_and(k < maxiter, gamma > limit)
+
+    def body(c):
+        (k, x, r, w, z, q, p, gamma, delta, alpha_prev, gamma_prev,
+         restarted) = c
+        m = op(w)  # ← overlaps the (gamma, delta) reduction
+        beta = jnp.where(restarted, 0.0,
+                         gamma / jnp.where(gamma_prev == 0, 1.0, gamma_prev))
+        denom = delta - beta * gamma / jnp.where(alpha_prev == 0, 1.0,
+                                                 alpha_prev)
+        alpha = gamma / jnp.where(denom == 0, 1.0, denom)
+        z = m + beta.astype(dt) * z
+        q = w + beta.astype(dt) * q
+        p = r + beta.astype(dt) * p
+        x = x + alpha.astype(dt) * p
+        r = r - alpha.astype(dt) * q
+        w = w - alpha.astype(dt) * z
+
+        if rr > 0:
+            do_replace = (k + 1) % rr == 0
+
+            def replace(x, r, w):
+                r_true = b - op(x)
+                return r_true, op(r_true)
+
+            r, w = jax.lax.cond(do_replace, replace,
+                                lambda x, r, w: (r, w), x, r, w)
+        else:
+            do_replace = jnp.asarray(False)
+        gamma_new, delta_new = fused_dots(r, w)
+        return (k + 1, x, r, w, z, q, p, gamma_new, delta_new, alpha, gamma,
+                do_replace)
+
+    out = jax.lax.while_loop(cond, body, init)
+    k, x, gamma = out[0], out[1], out[7]
+    stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
+                       residual_norm2=gamma, converged=gamma <= limit)
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# BiCGStab — direct non-Hermitian solve (D x = b without normal equations)
+# ---------------------------------------------------------------------------
+
+def bicgstab(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
+             dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+    """BiCGStab for general (non-Hermitian) operators such as D itself."""
+    x = jnp.zeros_like(b)
+    r = b
+    rhat = r
+    dt = b.dtype
+    # scalar carries take the dtype of the injected dot (complex for complex b)
+    one = dot(b, b) * 0 + 1
+    bs = _real(norm2(b))
+    limit = (tol ** 2) * bs
+
+    init = (jnp.asarray(0, jnp.int32), x, r, jnp.zeros_like(b),
+            jnp.zeros_like(b), one, one, one, _real(norm2(r)))
+
+    def cond(c):
+        k, x, r, p, v, rho, alpha, omega, rs = c
+        return jnp.logical_and(k < maxiter, rs > limit)
+
+    def body(c):
+        k, x, r, p, v, rho, alpha, omega, rs = c
+        rho_new = dot(rhat, r)
+        beta = (rho_new / jnp.where(rho == 0, 1.0, rho)) * \
+               (alpha / jnp.where(omega == 0, 1.0, omega))
+        p = r + beta.astype(dt) * (p - omega.astype(dt) * v)
+        v = op(p)
+        denom = dot(rhat, v)
+        alpha_new = rho_new / jnp.where(denom == 0, 1.0, denom)
+        s = r - alpha_new.astype(dt) * v
+        t = op(s)
+        tn = _real(norm2(t))
+        omega_new = dot(t, s) / jnp.where(tn == 0, 1.0, tn)
+        x = x + alpha_new.astype(dt) * p + omega_new.astype(dt) * s
+        r = s - omega_new.astype(dt) * t
+        return (k + 1, x, r, p, v, rho_new, alpha_new, omega_new,
+                _real(norm2(r)))
+
+    k, x, r, p, v, rho, alpha, omega, rs = jax.lax.while_loop(cond, body, init)
+    stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
+                       residual_norm2=rs, converged=rs <= limit)
+    return x, stats

@@ -1,0 +1,97 @@
+"""Jitted wrappers for the fused CG updates on arbitrary field shapes.
+
+Fields are flattened to a (rows, 128) streaming view; a zero pad (which
+contributes 0 to the residual reduction and is sliced off afterwards)
+handles sizes that are not multiples of 128*block_rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cg_fused.kernel import (LANE, cg_update_pallas,
+                                           cg_xpay_pallas)
+from repro.kernels.cg_fused.ref import cg_update_ref, cg_xpay_ref
+
+
+def _pick_block_rows(rows: int) -> int:
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            return cand
+    return 1
+
+
+def _to_stream(v: jax.Array):
+    n = v.size
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    flat = jnp.pad(v.reshape(-1), (0, pad))
+    return flat.reshape(rows, LANE), pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def cg_update(alpha, x, r, p, ap, *, interpret: bool = True,
+              use_pallas: bool = True):
+    """Fused (x + alpha p, r - alpha Ap, ||r_new||^2) for any field shape."""
+    if not use_pallas:
+        return cg_update_ref(alpha, x, r, p, ap)
+    shape = x.shape
+    xs, _ = _to_stream(x)
+    rs_, _ = _to_stream(r)
+    ps, _ = _to_stream(p)
+    aps, _ = _to_stream(ap)
+    br = _pick_block_rows(xs.shape[0])
+    xo, ro, rs = cg_update_pallas(alpha, xs, rs_, ps, aps,
+                                  block_rows=br, interpret=interpret)
+    n = x.size
+    return (xo.reshape(-1)[:n].reshape(shape),
+            ro.reshape(-1)[:n].reshape(shape), rs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def cg_xpay(beta, r, p, *, interpret: bool = True, use_pallas: bool = True):
+    """p <- r + beta p for any field shape."""
+    if not use_pallas:
+        return cg_xpay_ref(beta, r, p)
+    shape = p.shape
+    rstream, _ = _to_stream(r)
+    pstream, _ = _to_stream(p)
+    br = _pick_block_rows(pstream.shape[0])
+    po = cg_xpay_pallas(beta, rstream, pstream, block_rows=br,
+                        interpret=interpret)
+    return po.reshape(-1)[:p.size].reshape(shape)
+
+
+def cg_pallas(op, b, *, tol=1e-8, maxiter=1000, interpret=True):
+    """CG whose vector algebra runs through the fused Pallas kernels.
+
+    The matvec ``op`` is arbitrary (e.g. the wilson_dslash normal op);
+    everything else is two fused streaming passes per iteration.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = jnp.sum(r.astype(jnp.float32) ** 2)
+    bs = rs
+    limit = (tol ** 2) * bs
+
+    def cond(c):
+        k, x, r, p, rs = c
+        return jnp.logical_and(k < maxiter, rs > limit)
+
+    def body(c):
+        k, x, r, p, rs = c
+        ap = op(p)
+        pap = jnp.sum(p.astype(jnp.float32) * ap.astype(jnp.float32))
+        alpha = rs / pap
+        x, r, rs_new = cg_update(alpha, x, r, p, ap, interpret=interpret)
+        beta = rs_new / rs
+        p = cg_xpay(beta, r, p, interpret=interpret)
+        return (k + 1, x, r, p, rs_new)
+
+    k, x, r, p, rs = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), x, r, p, rs))
+    return x, (k, rs)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused CG vector-update kernels."""
+
+import jax.numpy as jnp
+
+
+def cg_update_ref(alpha, x, r, p, ap):
+    a32 = jnp.float32(alpha) if not hasattr(alpha, "dtype") else \
+        alpha.astype(jnp.float32)
+    x32 = x.astype(jnp.float32) + a32 * p.astype(jnp.float32)
+    r32 = r.astype(jnp.float32) - a32 * ap.astype(jnp.float32)
+    return (x32.astype(x.dtype), r32.astype(r.dtype),
+            jnp.sum(r32 * r32, dtype=jnp.float32))
+
+
+def cg_xpay_ref(beta, r, p):
+    b32 = jnp.float32(beta) if not hasattr(beta, "dtype") else \
+        beta.astype(jnp.float32)
+    return (r.astype(jnp.float32)
+            + b32 * p.astype(jnp.float32)).astype(p.dtype)

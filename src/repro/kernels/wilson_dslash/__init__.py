@@ -1,0 +1,3 @@
+from repro.kernels.wilson_dslash.kernel import dslash_pallas
+from repro.kernels.wilson_dslash.ops import dslash, dslash_dagger, normal_op
+from repro.kernels.wilson_dslash.ref import dslash_ref

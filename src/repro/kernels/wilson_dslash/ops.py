@@ -1,0 +1,51 @@
+"""Jitted public entry points for the wilson_dslash Pallas kernel.
+
+``dslash(up, pp, mass)`` — D psi
+``dslash_dagger(...)``   — D^dag psi  (gamma5 D gamma5, reusing the kernel)
+``normal_op(...)``       — D^dag D psi (the CGNR operator)
+
+``use_pallas=False`` falls back to the pure-jnp reference — the same
+escape hatch the paper's package offers ("compiled and executed exclusively
+on CPU for debugging and reference benchmarking").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wilson import apply_gamma5_packed, dslash_packed
+from repro.kernels.wilson_dslash.kernel import dslash_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+def dslash(up: jax.Array, pp: jax.Array, mass: float, *,
+           bz: int | None = None, interpret: bool = True,
+           use_pallas: bool = True) -> jax.Array:
+    if not use_pallas:
+        return dslash_packed(up, pp, mass)
+    return dslash_pallas(up, pp, mass, bz=bz, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+def dslash_dagger(up: jax.Array, pp: jax.Array, mass: float, *,
+                  bz: int | None = None, interpret: bool = True,
+                  use_pallas: bool = True) -> jax.Array:
+    out = dslash(up, apply_gamma5_packed(pp), mass, bz=bz,
+                 interpret=interpret, use_pallas=use_pallas)
+    return apply_gamma5_packed(out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+def normal_op(up: jax.Array, pp: jax.Array, mass: float, *,
+              bz: int | None = None, interpret: bool = True,
+              use_pallas: bool = True) -> jax.Array:
+    return dslash_dagger(up, dslash(up, pp, mass, bz=bz, interpret=interpret,
+                                    use_pallas=use_pallas),
+                         mass, bz=bz, interpret=interpret,
+                         use_pallas=use_pallas)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the wilson_dslash Pallas kernel.
+
+The reference is the packed-layout operator from the core library, which is
+itself validated against the natural-layout complex operator (and the
+latter against gamma-matrix algebra identities) in tests/test_wilson.py.
+"""
+
+from repro.core.wilson import dslash_packed as dslash_ref  # noqa: F401
+from repro.core.wilson import (dslash_dagger_packed as dslash_dagger_ref,  # noqa: F401
+                               normal_op_packed as normal_op_ref)  # noqa: F401

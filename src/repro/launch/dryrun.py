@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against 512 placeholder devices and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module (before
+any jax import) — jax locks the device count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, subprocesses
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis / cost_analysis / per-collective byte counts; EXPERIMENTS.md
+§Dry-run and §Roofline are generated from these files.
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device OPERAND bytes of every collective in the optimized HLO.
+
+    The HLO dump puts only the RESULT type on the lhs
+    (``%ag = f32[4,128]{..} all-gather(%x), replica_groups=[2,4]<=[8]``),
+    so operand size is recovered per kind from the result + group size G
+    (parsed from ``replica_groups=[n_groups,G]``):
+        all-gather:      operand = result / G
+        reduce-scatter:  operand = result * G
+        others:          operand = result
+    ``-start`` async forms counted once; ``-done`` skipped.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        lhs, rhs = s[:eq], s[eq + 3:]
+        kind = None
+        for k in _COLL_KINDS:
+            if re.match(rf"[a-z0-9\[\]{{}},()\s]*{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None or f"{kind}-done" in rhs:
+            continue
+        res_bytes = sum(_bytes_of(d, dims)
+                        for d, dims in _SHAPE_RE.findall(rhs[:rhs.find("(")]))
+        if res_bytes == 0:  # result type sits on the lhs in this dump format
+            res_bytes = sum(_bytes_of(d, dims)
+                            for d, dims in _SHAPE_RE.findall(lhs))
+        if res_bytes == 0:  # scalar or tuple w/o dims: look left of the call
+            res_bytes = sum(_bytes_of(d, dims)
+                            for d, dims in _SHAPE_RE.findall(rhs))
+        g = 1
+        mg = _GROUPS_RE.search(rhs)
+        if mg:
+            g = int(mg.group(2))
+        if kind == "all-gather":
+            op_bytes = res_bytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = res_bytes * g
+        else:
+            op_bytes = res_bytes
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += op_bytes
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def _lower_compile(jax, mesh, arch, shape_name, cfg=None, unroll=False):
+    """(lowered, compiled, seconds) for one cell, optionally with scans
+    unrolled (reduced-depth cost passes)."""
+    from repro.launch.specs import input_specs
+    from repro.models.scan_ctl import unrolled_scans
+    import contextlib
+    fn, kwargs, in_sh, out_sh = input_specs(arch, shape_name, mesh, cfg=cfg)
+    jfn = jax.jit(fn,
+                  in_shardings=None if in_sh is None else
+                  tuple(in_sh[k] for k in kwargs),
+                  out_shardings=out_sh)
+    ctx = unrolled_scans() if unroll else contextlib.nullcontext()
+    t0 = time.time()
+    with ctx:
+        lowered = jfn.lower(*kwargs.values())
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return lowered, compiled, t_lower, time.time() - t0
+
+
+def _cost_metrics(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(colls["total_bytes"]),
+            "coll_count": float(colls["total_count"]),
+            "collectives": colls}
+
+
+def _extrapolate(m1: dict, m2: dict, k1: int, k2: int, L: int) -> dict:
+    """Linear depth extrapolation.  XLA occasionally optimizes the deeper
+    reduced lowering harder (CSE across unrolled layers), which would give
+    a NEGATIVE per-layer delta; clamp at 0 and floor the total at the
+    larger observation."""
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes", "coll_count"):
+        per = max(0.0, (m2[key] - m1[key]) / (k2 - k1))
+        out[key] = max(m1[key] + (L - k1) * per, m1[key], m2[key])
+        out[f"{key}_per_layer"] = per
+    return out
+
+
+def _reduced_cfg(cfg, k: int):
+    import dataclasses
+    kw = {"num_layers": k}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str):
+    import jax
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs, skip_reason
+    from repro.models.config import SHAPES
+
+    reason = skip_reason(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok"}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}.json".replace("/", "_"))
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] SKIP {arch} {shape_name} {mesh_kind}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.devices.size
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+
+    # 1) full-depth lowering+compile: THE runnability artifact
+    #    (sharding coherence, memory_analysis, compile success)
+    lowered, compiled, t_lower, t_compile = _lower_compile(
+        jax, mesh, arch, shape_name)
+    mem = compiled.memory_analysis()
+    print(mem)                      # proves it fits (bytes per device)
+    full_metrics = _cost_metrics(compiled)
+
+    # 2) cost pass: XLA counts while bodies once, so lower reduced-depth
+    #    configs with every scan unrolled and extrapolate linearly in depth
+    #    (EXPERIMENTS.md §Conventions)
+    from repro.models.transformer import stack_plan
+    p = len(cfg.block_pattern) if cfg.family == "hybrid" else 1
+    k1, k2 = p, 2 * p
+    _, comp1, *_ = _lower_compile(jax, mesh, arch, shape_name,
+                                  cfg=_reduced_cfg(cfg, k1), unroll=True)
+    m1 = _cost_metrics(comp1)
+    _, comp2, *_ = _lower_compile(jax, mesh, arch, shape_name,
+                                  cfg=_reduced_cfg(cfg, k2), unroll=True)
+    m2 = _cost_metrics(comp2)
+    ext = _extrapolate(m1, m2, k1, k2, cfg.num_layers)
+
+    flops = ext["flops"]
+    bytes_accessed = ext["bytes"]
+    coll_bytes = ext["coll_bytes"]
+    # per-device HLO: terms are per-chip (see EXPERIMENTS.md conventions)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6 * cfg.active_param_count() * tokens
+    else:
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind == "prefill" else 1)
+        model_flops = 2 * cfg.active_param_count() * tokens
+
+    mem_fields = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_fields[f] = int(getattr(mem, f, -1))
+
+    rec.update({
+        "chips": int(n_chips),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_fields,
+        "per_device_bytes": mem_fields["argument_size_in_bytes"]
+        + mem_fields["temp_size_in_bytes"],
+        "cost_method": f"2-point depth extrapolation (k={k1},{k2} unrolled)",
+        "cost_reduced": {"k1": k1, "m1": {k: m1[k] for k in
+                                          ("flops", "bytes", "coll_bytes")},
+                         "k2": k2, "m2": {k: m2[k] for k in
+                                          ("flops", "bytes", "coll_bytes")}},
+        "cost_extrapolated": {k: ext[k] for k in
+                              ("flops", "bytes", "coll_bytes", "coll_count")},
+        "collectives_reduced_k2": m2["collectives"],
+        "collectives_fullscan": full_metrics["collectives"],
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": float(model_flops),
+        "hlo_flops_per_device": flops,
+        "useful_flops_ratio": float(model_flops / n_chips / flops)
+        if flops else None,
+    })
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    dom = rec["roofline"]["dominant"]
+    print(f"[dryrun] OK {arch} {shape_name} {mesh_kind}: "
+          f"compute={compute_s*1e3:.1f}ms memory={memory_s*1e3:.1f}ms "
+          f"coll={coll_s*1e3:.1f}ms dom={dom} "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def run_all(out_dir: str, meshes=("pod", "multipod"), archs=None,
+            shapes=None, timeout=3000):
+    """Run every cell in a fresh subprocess (isolation + memory release)."""
+    from repro import configs as _c
+    from repro.models.config import SHAPES as _S
+    archs = archs or _c.all_arch_names()
+    shapes = shapes or list(_S.keys())
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                path = os.path.join(
+                    out_dir, f"{arch}__{shape}__{mesh}.json")
+                if os.path.exists(path):
+                    print(f"[dryrun] cached {path}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--out-dir", out_dir]
+                r = subprocess.run(cmd, timeout=timeout)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh))
+                    print(f"[dryrun] FAIL {arch} {shape} {mesh}")
+    print(f"[dryrun] all done; {len(failures)} failures: {failures}")
+    return failures
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out-dir", default="experiments/dryrun")
+    args = p.parse_args(argv)
+    if args.all:
+        failures = run_all(args.out_dir)
+        return 1 if failures else 0
+    run_cell(args.arch, args.shape, args.mesh, args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hill-climbing measurements: lower+compile VARIANTS of the three
+chosen cells and record their roofline terms side by side.
+
+Each variant is (cell, config-overrides); results land in
+experiments/perf/<tag>.json with the same schema as the dry-run cells, so
+the EXPERIMENTS.md §Perf table diffs them directly.
+
+  python -m repro.launch.perf_variants --run h1   # glm4 train_4k ladder
+  python -m repro.launch.perf_variants --run h2   # nemotron decode ladder
+  python -m repro.launch.perf_variants --all
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+# (tag, arch, shape, overrides)
+H1 = [  # glm4-9b train_4k: activation-memory ladder
+    ("h1a_baseline_no_seqshard", "glm4-9b", "train_4k",
+     {"seq_shard": False}),
+    ("h1b_seq_shard", "glm4-9b", "train_4k", {}),
+    ("h1c_no_remat", "glm4-9b", "train_4k", {"remat": False}),
+]
+H2 = [  # nemotron-4-340b decode_32k: KV-cache sharding ladder
+    ("h2a_baseline_replicated_kv", "nemotron-4-340b", "decode_32k",
+     {"kv_seq_shard": False}),
+    ("h2b_seq_sharded_kv", "nemotron-4-340b", "decode_32k", {}),
+]
+H4 = [  # qwen3-moe train_4k: dispatch-buffer sharding (bonus climb)
+    ("h4a_baseline_ep_only", "qwen3-moe-235b-a22b", "train_4k",
+     {"moe_dispatch_shard": False}),
+    ("h4b_cap_sharded", "qwen3-moe-235b-a22b", "train_4k", {}),
+]
+H5 = [  # yi-9b train_4k: KV-head replication for the TP-divisibility gap
+    # baseline = the sweep cell (attention replicated over TP: kv=4, g=8,
+    # neither divides 16); optimized = rep=4 virtual kv heads
+    ("h5b_kv_replicated_heads", "yi-9b", "train_4k", {}),
+]
+RUNS = {"h1": H1, "h2": H2, "h4": H4, "h5": H5}
+
+
+def run_variant(tag: str, arch: str, shape_name: str, overrides: dict,
+                mesh_kind: str, out_dir: str):
+    import jax
+    from repro import configs
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = dataclasses.replace(configs.get(arch), **overrides)
+
+    # full-depth compile (memory proof)
+    lowered, compiled, t_lower, t_compile = dr._lower_compile(
+        jax, mesh, arch, shape_name, cfg=cfg)
+    mem = compiled.memory_analysis()
+    print(mem)
+
+    # cost pass: reduced depth, unrolled, extrapolated
+    p = len(cfg.block_pattern) if cfg.family == "hybrid" else 1
+    k1, k2 = p, 2 * p
+    _, c1, *_ = dr._lower_compile(jax, mesh, arch, shape_name,
+                                  cfg=dr._reduced_cfg(cfg, k1), unroll=True)
+    _, c2, *_ = dr._lower_compile(jax, mesh, arch, shape_name,
+                                  cfg=dr._reduced_cfg(cfg, k2), unroll=True)
+    m1, m2 = dr._cost_metrics(c1), dr._cost_metrics(c2)
+    ext = dr._extrapolate(m1, m2, k1, k2, cfg.num_layers)
+
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        model_flops = 6 * cfg.active_param_count() * \
+            shape.seq_len * shape.global_batch
+    else:
+        model_flops = 2 * cfg.active_param_count() * shape.global_batch
+    n_chips = mesh.devices.size
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "overrides": {k: str(v) for k, v in
+                                      overrides.items()},
+        "chips": int(n_chips), "compile_s": round(t_compile, 2),
+        "per_device_bytes": int(mem.argument_size_in_bytes
+                                + mem.temp_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "cost_extrapolated": {k: ext[k] for k in
+                              ("flops", "bytes", "coll_bytes",
+                               "coll_count")},
+        "roofline": {
+            "compute_s": ext["flops"] / dr.PEAK_FLOPS_BF16,
+            "memory_s": ext["bytes"] / dr.HBM_BW,
+            "collective_s": ext["coll_bytes"] / dr.ICI_BW},
+        "model_flops_global": float(model_flops),
+        "useful_flops_ratio": float(model_flops / n_chips / ext["flops"])
+        if ext["flops"] else None,
+    }
+    r = rec["roofline"]
+    r["dominant"] = max(("compute", "memory", "collective"),
+                        key=lambda k: r[f"{k}_s"])
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[perf] {tag}: temp={mem.temp_size_in_bytes/2**30:.1f}GiB "
+          f"compute={r['compute_s']*1e3:.0f}ms "
+          f"memory={r['memory_s']*1e3:.0f}ms "
+          f"coll={r['collective_s']*1e3:.0f}ms dom={r['dominant']}")
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--run", choices=list(RUNS) + ["one"])
+    p.add_argument("--tag")
+    p.add_argument("--mesh", default="pod")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out-dir", default="experiments/perf")
+    args = p.parse_args(argv)
+
+    if args.all or args.run in RUNS:
+        runs = sum(RUNS.values(), []) if args.all else RUNS[args.run]
+        rc = 0
+        for tag, arch, shape, ov in runs:
+            if os.path.exists(os.path.join(args.out_dir, f"{tag}.json")):
+                print(f"[perf] cached {tag}")
+                continue
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.perf_variants",
+                 "--run", "one", "--tag", tag, "--mesh", args.mesh,
+                 "--out-dir", args.out_dir], timeout=2400)
+            rc |= r.returncode
+        return rc
+    # --run one --tag <tag>: execute in THIS process
+    for tag, arch, shape, ov in sum(RUNS.values(), []):
+        if tag == args.tag:
+            run_variant(tag, arch, shape, ov, args.mesh, args.out_dir)
+            return 0
+    print(f"unknown tag {args.tag}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

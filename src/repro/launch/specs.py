@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins + sharding specs for every dry-run cell.
+
+``input_specs(arch, shape_name, mesh)`` returns (fn, kwargs, in_shardings,
+out_shardings) such that
+
+    jax.jit(fn, in_shardings=..., out_shardings=...).lower(**kwargs)
+
+lowers the exact (architecture × input-shape × mesh) cell with NO device
+allocation (weak-type-correct ShapeDtypeStructs all the way down).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import encdec as ED
+from repro.models import steps as S
+from repro.models import transformer as TF
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig
+
+BF16 = jnp.bfloat16
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeConfig, *, seq: int,
+                  batch: int, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    out: dict[str, Any] = {}
+    if cfg.is_encdec:
+        enc_len = min(seq, cfg.encoder_seq_len or seq)
+        out["tokens"] = sds((batch, seq), jnp.int32)
+        out["frames"] = sds((batch, enc_len, cfg.d_model), dtype)
+    elif cfg.num_prefix_embeds:
+        out["tokens"] = sds((batch, seq - cfg.num_prefix_embeds), jnp.int32)
+        out["prefix_embeds"] = sds((batch, cfg.num_prefix_embeds,
+                                    cfg.d_model), dtype)
+    else:
+        out["tokens"] = sds((batch, seq), jnp.int32)
+    return out
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    """Cells skipped by design (recorded in DESIGN.md / EXPERIMENTS.md)."""
+    cfg = configs.get(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 524k dense attention is O(S^2); "
+                "long-context decode runs only for ssm/hybrid families")
+    return None
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                cfg: ModelConfig | None = None):
+    """Build (fn, kwargs, in_shardings, out_shardings) for one cell.
+    ``cfg`` overrides the registry config (reduced-depth cost passes)."""
+    cfg = cfg or configs.get(arch)
+    shape = SHAPES[shape_name]
+    mod = ED if cfg.is_encdec else TF
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+        state_shape = jax.eval_shape(
+            lambda: S.init_train_state(cfg, jax.random.PRNGKey(0), opt_cfg))
+        batch_shape = _batch_struct(cfg, shape, seq=shape.seq_len,
+                                    batch=shape.global_batch, dtype=BF16)
+        fn = S.make_train_step(cfg, opt_cfg, mesh=mesh, compute_dtype=BF16)
+        st_spec = S.state_specs(cfg, state_shape)
+        b_spec = S.batch_specs(cfg, batch_shape, mesh)
+        in_sh = {"state": _named(mesh, st_spec), "batch": _named(mesh, b_spec)}
+        out_sh = (_named(mesh, st_spec), None)
+
+        def train_step(state, batch):
+            return fn(state, batch)
+
+        return train_step, {"state": state_shape, "batch": batch_shape}, \
+            in_sh, out_sh
+
+    # serving: params are the bf16 inference copy
+    params_shape = jax.eval_shape(
+        lambda: mod.init_params(cfg, jax.random.PRNGKey(0), BF16))
+    p_spec = S.state_specs(cfg, params_shape)
+
+    if shape.kind == "prefill":
+        batch_shape = _batch_struct(cfg, shape, seq=shape.seq_len,
+                                    batch=shape.global_batch, dtype=BF16)
+        fn = S.make_prefill_step(cfg, cache_len=shape.seq_len, mesh=mesh,
+                                 compute_dtype=BF16)
+
+        def prefill_step(params, batch):
+            return fn(params, batch)
+
+        in_sh = {"params": _named(mesh, p_spec),
+                 "batch": _named(mesh, S.batch_specs(cfg, batch_shape, mesh))}
+        return prefill_step, {"params": params_shape,
+                              "batch": batch_shape}, in_sh, None
+
+    if shape.kind == "decode":
+        batch = shape.global_batch
+        if cfg.is_encdec:
+            enc_len = min(cfg.encoder_seq_len or shape.seq_len,
+                          shape.seq_len)
+            caches_shape = jax.eval_shape(
+                lambda: ED.init_caches(cfg, batch, shape.seq_len, enc_len,
+                                       BF16))
+        else:
+            caches_shape = jax.eval_shape(
+                lambda: TF.init_caches(cfg, batch, shape.seq_len, BF16))
+        tok_shape = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = S.make_decode_step(cfg, mesh=mesh, compute_dtype=BF16)
+
+        def decode_step(params, caches, tokens, pos):
+            return fn(params, caches, tokens, pos)
+
+        c_spec = S.cache_specs(cfg, caches_shape, mesh)
+        dp = P(S.dp_axes_for(mesh, batch), None)
+        in_sh = {"params": _named(mesh, p_spec),
+                 "caches": _named(mesh, c_spec),
+                 "tokens": NamedSharding(mesh, dp),
+                 "pos": NamedSharding(mesh, P())}
+        return decode_step, {"params": params_shape, "caches": caches_shape,
+                             "tokens": tok_shape, "pos": pos_shape}, \
+            in_sh, None
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,143 @@
+"""Attention blocks with KV caches (full, sliding-window ring buffer) and
+cross-attention for the encoder-decoder family.
+
+Caches are plain dicts of arrays so they pytree-flatten naturally and get
+ShapeDtypeStruct stand-ins in the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Self-attention block (GQA + RoPE; optional sliding window)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, a = cfg.d_model, cfg.attn_dim
+    kv = cfg.num_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (d, a), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kv), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kv), dtype) * s,
+        "wo": jax.random.normal(ks[3], (a, d), dtype) * (s / np.sqrt(2)),
+    }
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype,
+                  ring: bool = False) -> dict:
+    """Empty per-layer KV cache. ``ring=True`` -> sliding-window buffer of
+    size cfg.window with explicit position slots."""
+    if ring:
+        length = min(length, cfg.window)
+    shape = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if ring:
+        cache["pos"] = jnp.full((length,), -1, jnp.int32)
+    return cache
+
+
+def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+               pos0: jax.Array | int = 0,
+               window: int = 0,
+               cache: dict | None = None,
+               update_cache: bool = False,
+               causal: bool = True):
+    """Self-attention.
+
+    Train/prefill: x is (B, S, d), pos0 the absolute position of x[:,0].
+    Decode: x is (B, 1, d) and ``cache`` holds past K/V; the new K/V is
+    written at ``pos0`` (or ring slot pos0 % window).
+    Returns (out, new_cache_or_None).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.dot(x, p["wq"], "bsd,da->bsa").reshape(b, s, hq, hd)
+    k = L.dot(x, p["wk"], "bsd,da->bsa").reshape(b, s, hkv, hd)
+    v = L.dot(x, p["wv"], "bsd,da->bsa").reshape(b, s, hkv, hd)
+
+    q_pos = pos0 + jnp.arange(s, dtype=jnp.int32)
+    q = L.rope(q, q_pos[None, :], cfg.rope_theta)
+    k = L.rope(k, q_pos[None, :], cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        kk, vv, kv_pos = k, v, q_pos
+    else:
+        ring = "pos" in cache
+        if ring:
+            w = cache["k"].shape[1]
+            if s == 1:        # decode: write one slot, attend over the ring
+                slot = pos0 % w
+                kk = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, slot, 0, 0))
+                vv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, slot, 0, 0))
+                kv_pos = jax.lax.dynamic_update_slice(cache["pos"], q_pos,
+                                                      (slot,))
+                new_cache = {"k": kk, "v": vv, "pos": kv_pos}
+            else:
+                # prefill: attend over the fresh sequence (each query sees
+                # its own window); the cache keeps the trailing w tokens at
+                # their canonical ring slots pos % w
+                if s >= w:
+                    tk, tv, tp = k[:, -w:], v[:, -w:], q_pos[-w:]
+                else:
+                    tk, tv, tp = k, v, q_pos
+                slots = tp % w
+                ck = cache["k"].at[:, slots].set(tk)
+                cv = cache["v"].at[:, slots].set(tv)
+                cp = cache["pos"].at[slots].set(tp)
+                new_cache = {"k": ck, "v": cv, "pos": cp}
+                kk, vv, kv_pos = k, v, q_pos
+        else:
+            kk = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos0, 0, 0))
+            vv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos0, 0, 0))
+            kv_pos = jnp.arange(kk.shape[1], dtype=jnp.int32)
+            new_cache = {"k": kk, "v": vv}
+        if not update_cache:
+            new_cache = None
+
+    out = L.attention(q, kk, vv, q_pos=q_pos, kv_pos=kv_pos,
+                      causal=causal, window=window)
+    out = L.dot(out.reshape(b, s, hq * hd), p["wo"], "bsa,ad->bsd")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attn_apply(p: dict, x: jax.Array, enc: jax.Array | None,
+                     cfg: ModelConfig, *,
+                     cache: dict | None = None, update_cache: bool = False):
+    """Cross-attention over encoder output ``enc`` (B, Se, d).  At decode
+    time pass the prefill-computed ``cache`` instead of ``enc``."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.dot(x, p["wq"], "bsd,da->bsa").reshape(b, s, hq, hd)
+    if cache is None:
+        se = enc.shape[1]
+        k = L.dot(enc, p["wk"], "bsd,da->bsa").reshape(b, se, hkv, hd)
+        v = L.dot(enc, p["wv"], "bsd,da->bsa").reshape(b, se, hkv, hd)
+        new_cache = {"k": k, "v": v} if update_cache else None
+    else:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache if update_cache else None
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    q_pos = jnp.zeros((s,), jnp.int32)  # non-causal: positions unused
+    out = L.attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=False)
+    out = L.dot(out.reshape(b, s, hq * hd), p["wo"], "bsa,ad->bsd")
+    return out, new_cache

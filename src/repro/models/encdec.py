@@ -1,0 +1,188 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-large-v2).
+
+Per the assignment the speech frontend is a STUB: the encoder consumes
+pre-computed frame embeddings (B, Se, d) supplied via ``input_specs()``.
+The decoder is a standard causal transformer with per-layer cross
+attention over the encoder output; decode shapes carry a decoder
+self-attention KV cache plus a prefill-computed cross-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain_batch
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), F32),
+            "ln2": jnp.zeros((cfg.d_model,), F32),
+            "attn": B.attn_init(ks[0], cfg, dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.zeros((cfg.d_model,), F32),
+            "lnx": jnp.zeros((cfg.d_model,), F32),
+            "ln2": jnp.zeros((cfg.d_model,), F32),
+            "attn": B.attn_init(ks[0], cfg, dtype),
+            "xattn": B.cross_attn_init(ks[1], cfg, dtype),
+            "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype,
+                              cfg.tie_embeddings,
+                              padded_vocab=cfg.padded_vocab),
+        "enc_norm": jnp.zeros((cfg.d_model,), F32),
+        "final_norm": jnp.zeros((cfg.d_model,), F32),
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, frames: jax.Array,
+           compute_dtype=jnp.float32) -> jax.Array:
+    """frames: (B, Se, d) stub frontend embeddings -> encoder output."""
+    h = frames.astype(compute_dtype)
+
+    def body(h, lp):
+        a, _ = B.attn_apply(lp["attn"], L.rms_norm(h, lp["ln1"]), cfg,
+                            pos0=0, window=0, cache=None, causal=False)
+        h = h + a
+        h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"]), cfg.mlp)
+        return constrain_batch(h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    from repro.models.scan_ctl import maybe_scan
+    h, _ = maybe_scan(body, h, params["encoder"])
+    return L.rms_norm(h, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_stack(cfg, params, h, *, pos0, enc_out, self_caches, cross_caches,
+               update_cache: bool):
+    def body(h, xs):
+        lp, sc, cc = xs
+        a, nsc = B.attn_apply(lp["attn"], L.rms_norm(h, lp["ln1"]), cfg,
+                              pos0=pos0, window=0, cache=sc,
+                              update_cache=update_cache)
+        h = h + a
+        x, ncc = B.cross_attn_apply(lp["xattn"], L.rms_norm(h, lp["lnx"]),
+                                    enc_out, cfg, cache=cc,
+                                    update_cache=update_cache)
+        h = h + x
+        h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"]), cfg.mlp)
+        ys = (nsc, ncc) if update_cache else None
+        return constrain_batch(h), ys
+
+    if cfg.remat and not update_cache:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    from repro.models.scan_ctl import maybe_scan
+    h, ys = maybe_scan(body, h, (params["decoder"], self_caches,
+                                 cross_caches))
+    return h, ys
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frames,
+            compute_dtype=jnp.float32):
+    """Training: encoder over frames, causal decoder over tokens."""
+    enc_out = encode(cfg, params, frames, compute_dtype)
+    h = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    h, _ = _dec_stack(cfg, params, h, pos0=0, enc_out=enc_out,
+                      self_caches=None, cross_caches=None,
+                      update_cache=False)
+    h = L.rms_norm(h, params["final_norm"])
+    return L.logits_out(params["embed"], h, cfg.vocab_size), {"load_balance_loss":
+                                              jnp.zeros((), F32)}
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, frames, cache_len: int,
+            compute_dtype=jnp.float32):
+    """Encode + run the decoder prompt; returns (logits, caches) where
+    caches = (self_kv, cross_kv) stacked over decoder layers."""
+    b, s = tokens.shape
+    enc_out = encode(cfg, params, frames, compute_dtype)
+    self_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape),
+        B.make_kv_cache(cfg, b, cache_len, compute_dtype))
+    # cross cache is produced by the layer itself; seed with zeros
+    se = frames.shape[1]
+    zero_x = {"k": jnp.zeros((b, se, cfg.num_kv_heads, cfg.head_dim),
+                             compute_dtype),
+              "v": jnp.zeros((b, se, cfg.num_kv_heads, cfg.head_dim),
+                             compute_dtype)}
+    cross_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), zero_x)
+    # recompute cross k/v from enc_out inside the stack (cache=None path)
+    h = L.embed_lookup(params["embed"], tokens, compute_dtype)
+
+    def body(h, xs):
+        lp, sc = xs
+        a, nsc = B.attn_apply(lp["attn"], L.rms_norm(h, lp["ln1"]), cfg,
+                              pos0=0, window=0, cache=sc, update_cache=True)
+        h = h + a
+        x, ncc = B.cross_attn_apply(lp["xattn"], L.rms_norm(h, lp["lnx"]),
+                                    enc_out, cfg, cache=None,
+                                    update_cache=True)
+        h = h + x
+        h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"]), cfg.mlp)
+        return constrain_batch(h), (nsc, ncc)
+
+    from repro.models.scan_ctl import maybe_scan
+    h, (self_c, cross_c) = maybe_scan(body, h, (params["decoder"], self_c))
+    h = L.rms_norm(h[:, -1:], params["final_norm"])
+    return L.logits_out(params["embed"], h, cfg.vocab_size), (self_c, cross_c)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                enc_len: int, dtype=jnp.float32):
+    """(self_kv, cross_kv) cache skeletons for decode input_specs."""
+    stack = lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape)
+    self_c = jax.tree.map(stack, B.make_kv_cache(cfg, batch, cache_len,
+                                                 dtype))
+    kv = {"k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                         dtype),
+          "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                         dtype)}
+    cross_c = jax.tree.map(stack, kv)
+    return self_c, cross_c
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, caches, *,
+                compute_dtype=jnp.float32):
+    self_c, cross_c = caches
+    h = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    h, (self_c, cross_c) = _dec_stack(
+        cfg, params, h, pos0=pos, enc_out=None,
+        self_caches=self_c, cross_caches=cross_c, update_cache=True)
+    h = L.rms_norm(h, params["final_norm"])
+    return L.logits_out(params["embed"], h, cfg.vocab_size), (self_c, cross_c)

@@ -1,0 +1,285 @@
+"""Shared neural-net layers: RMSNorm, RoPE, online-softmax attention
+(full / sliding-window / cross), MLP variants, embeddings.
+
+Conventions:
+  * activations keep the configured compute dtype (bf16 on TPU); every
+    contraction accumulates in f32 (``preferred_element_type``) — the
+    paper's narrow-storage / wide-accumulate discipline (DESIGN.md T1).
+  * attention is **chunked online-softmax** (flash-style scan over KV
+    chunks): O(seq) memory, which is what makes the 32k-prefill shapes
+    lowerable — the stencil-streaming idea (T2/T3) applied to attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def dot(x: jax.Array, w: jax.Array, sub: str) -> jax.Array:
+    """einsum with f32 accumulation, result cast back to x.dtype."""
+    return jnp.einsum(sub, x, w, preferred_element_type=F32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(F32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding on the last axis. x: (..., S, H, hd); pos: (..., S)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=F32) / hd))
+    ang = pos.astype(F32)[..., None] * freqs          # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: flash-style online softmax over KV chunks, with a custom VJP
+# that saves only (q, k, v, out, logsumexp) and RECOMPUTES scores blockwise
+# in the backward — O(seq) residual memory instead of O(seq^2/chunk) stored
+# probabilities.  This is the T2/T3 stencil-streaming discipline applied to
+# attention, and what lets the 32k-token train/prefill cells fit HBM.
+# ---------------------------------------------------------------------------
+
+def _mask_for(pj, q_pos, causal: bool, window: int):
+    valid = pj[None, :] >= 0
+    if causal:
+        valid &= pj[None, :] <= q_pos[:, None]
+    if window > 0:
+        valid &= q_pos[:, None] - pj[None, :] < window
+    return valid  # (sq, chunk)
+
+
+def _chunk_kv(t, chunk):
+    b, skv, hkv, hd = t.shape
+    return t.reshape(b, skv // chunk, chunk, hkv, hd).swapaxes(0, 1)
+
+
+def _flash_fwd_inner(qg, k, v, q_pos, kv_pos, causal, window, chunk):
+    from repro.models.scan_ctl import maybe_scan
+    b, sq, hkv, g, hd = qg.shape
+    scale = 1.0 / np.sqrt(hd)
+    kc = _chunk_kv(k, chunk)
+    vc = _chunk_kv(v, chunk)
+    pc = kv_pos.reshape(-1, chunk)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                       preferred_element_type=F32) * scale
+        valid = _mask_for(pj, q_pos, causal, window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(k.dtype), vj,
+                        preferred_element_type=F32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, F32)
+    l0 = jnp.zeros((b, hkv, g, sq), F32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), F32)
+    (m, l, acc), _ = maybe_scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,hkv,g,sq,hd) f32
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))           # logsumexp
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash(qg, k, v, q_pos, kv_pos, causal, window, chunk):
+    out, _ = _flash_fwd_inner(qg, k, v, q_pos, kv_pos, causal, window, chunk)
+    return out
+
+
+def _flash_fwd(qg, k, v, q_pos, kv_pos, causal, window, chunk):
+    out, lse = _flash_fwd_inner(qg, k, v, q_pos, kv_pos, causal, window,
+                                chunk)
+    return out, (qg, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, res, dout):
+    from repro.models.scan_ctl import maybe_scan
+    from repro.parallel.sharding import constrain_heads, tp_axis_for
+    qg, k, v, q_pos, kv_pos, out, lse = res
+    b, sq, hkv, g, hd = qg.shape
+    scale = 1.0 / np.sqrt(hd)
+    kc = _chunk_kv(k, chunk)
+    vc = _chunk_kv(v, chunk)
+    pc = kv_pos.reshape(-1, chunk)
+    # mirror the forward's TP layout so SPMD never has to reshard the
+    # (b,h,g,sq,chunk) score tensors (see DESIGN.md §5)
+    h_ax = 1 if tp_axis_for(hkv) else 2                # score head axis
+    dout = constrain_heads(dout.astype(F32), h_ax)
+    out = constrain_heads(out, h_ax)
+    lse = constrain_heads(lse, h_ax)
+    delta = jnp.sum(dout * out, axis=-1)               # (b,hkv,g,sq)
+    delta = constrain_heads(delta, h_ax)
+
+    def step(dq, blk):
+        kj, vj, pj = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                       preferred_element_type=F32) * scale
+        valid = _mask_for(pj, q_pos, causal, window)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        p = constrain_heads(p, h_ax)
+        dv_j = jnp.einsum("bhgqk,bhgqd->bkhd", p, dout,
+                          preferred_element_type=F32)
+        dv_j = constrain_heads(dv_j, 2)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dout, vj,
+                        preferred_element_type=F32)
+        ds = p * (dp - delta[..., None]) * scale
+        ds = constrain_heads(ds, h_ax)
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kj,
+                             preferred_element_type=F32)
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg.astype(F32),
+                          preferred_element_type=F32)
+        dk_j = constrain_heads(dk_j, 2)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, hd), F32)
+    dq0 = constrain_heads(dq0, 2 if tp_axis_for(hkv) else 3)
+    dq, (dkc, dvc) = maybe_scan(step, dq0, (kc, vc, pc))
+    dk = dkc.swapaxes(0, 1).reshape(k.shape[0], -1, *k.shape[2:])
+    dv = dvc.swapaxes(0, 1).reshape(v.shape[0], -1, *v.shape[2:])
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_pos: jax.Array, kv_pos: jax.Array,
+              causal: bool = True, window: int = 0,
+              chunk: int = 1024) -> jax.Array:
+    """Grouped-query flash attention (chunked online softmax).
+
+    q: (B, Sq, Hq, hd);  k, v: (B, Skv, Hkv, hd);  Hq % Hkv == 0.
+    q_pos: (Sq,) int32; kv_pos: (Skv,) int32 (−1 marks an empty cache slot).
+    window > 0 limits attention to the last ``window`` positions.
+    """
+    from repro.parallel.sharding import (constrain_heads, tp_axis_for,
+                                         tp_size)
+
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    # KV-head replication (EXPERIMENTS.md §Perf H5): when neither the kv
+    # heads nor the GQA group divides the TP axis but rep=tp/hkv does,
+    # duplicate each kv head rep× so attention shards over tp virtual kv
+    # heads (rep-1 extra K/V copies per chip beats full replication).
+    t = tp_size()
+    if (sq > 1 and t and hkv % t and g % t and t % hkv == 0
+            and g % (t // hkv) == 0 and t // hkv > 1):
+        rep = t // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        hkv *= rep
+        g //= rep
+    qg = q.reshape(b, sq, hkv, g, hd)
+    # TP sharding: kv-heads over `model` when divisible, else the GQA group
+    # dim (keeps softmax fully chip-local; K/V replicate across the groups)
+    qg = constrain_heads(qg, 2 if tp_axis_for(hkv) else 3)
+    k = constrain_heads(k, 2)
+    v = constrain_heads(v, 2)
+
+    if sq == 1:
+        # decode: one query — run the whole cache as a single chunk.  The
+        # max/sum/PV contractions over S then partition cleanly when the
+        # cache is SEQUENCE-sharded over `model` (GQA archs whose kv-head
+        # count cannot cover the TP axis; see EXPERIMENTS.md §Perf H2).
+        chunk = skv
+    chunk = min(chunk, skv)
+    if skv % chunk:  # pad KV to a chunk multiple with masked slots
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+
+    out = _flash(qg, k, v, q_pos, kv_pos, causal, window, chunk)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_apply(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(dot(x, p["wg"], "bsd,df->bsf").astype(F32)).astype(x.dtype)
+        h = h * dot(x, p["wu"], "bsd,df->bsf")
+    elif kind == "geglu":
+        h = jax.nn.gelu(dot(x, p["wg"], "bsd,df->bsf").astype(F32),
+                        approximate=True).astype(x.dtype)
+        h = h * dot(x, p["wu"], "bsd,df->bsf")
+    elif kind == "squared_relu":
+        h = jax.nn.relu(dot(x, p["wu"], "bsd,df->bsf"))
+        h = h * h
+    else:
+        raise ValueError(kind)
+    return dot(h, p["wd"], "bsf,fd->bsd")
+
+
+def mlp_init(key, d: int, ff: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    std_in, std_out = 0.02, 0.02 / np.sqrt(2.0)
+    p = {"wu": jax.random.normal(ks[0], (d, ff), dtype) * std_in,
+         "wd": jax.random.normal(ks[1], (ff, d), dtype) * std_out}
+    if kind in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(ks[2], (d, ff), dtype) * std_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype, tie: bool,
+               padded_vocab: int | None = None) -> dict:
+    pv = padded_vocab or vocab
+    ks = jax.random.split(key)
+    p = {"tok": jax.random.normal(ks[0], (pv, d), dtype) * 0.02}
+    if not tie:
+        p["out"] = jax.random.normal(ks[1], (pv, d), dtype) * 0.02
+    return p
+
+
+def embed_lookup(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def logits_out(p: dict, x: jax.Array, vocab: int | None = None) -> jax.Array:
+    w = p.get("out", p["tok"])
+    logits = jnp.einsum("bsd,vd->bsv", x, w, preferred_element_type=F32)
+    pv = w.shape[0]
+    if vocab is not None and pv != vocab:  # mask vocab-padding rows
+        logits = jnp.where(jnp.arange(pv) < vocab, logits, NEG_INF)
+    return logits

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity,
+scatter/gather dispatch (no O(N·E·C) one-hot tensors), optional shared
+expert (qwen2-moe style).
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism);
+``num_experts_padded`` rounds the expert count up so it divides the axis
+(e.g. qwen2's 60 -> 64; pads are masked out of routing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+from repro.parallel import sharding as shd
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+F32 = jnp.float32
+
+
+def constrain_experts(buf):
+    """(G, E, cap, d) expert buffers: capacity groups over (pod, data),
+    experts over `model` (expert parallelism).  The reshard from
+    token-layout to this layout is the canonical MoE all-to-all."""
+    mesh = shd._CTX["mesh"]
+    if mesh is None:
+        return buf
+    tp = shd.tp_axis_for(buf.shape[1])
+    gax = shd.batch_axes(mesh, buf.shape[0])
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, P(gax, tp, None, None)))
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d, de, e = cfg.d_model, m.d_expert, m.padded
+    ks = jax.random.split(key, 6)
+    s = 0.02
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), F32) * s,
+        "wg": jax.random.normal(ks[1], (e, d, de), dtype) * s,
+        "wu": jax.random.normal(ks[2], (e, d, de), dtype) * s,
+        "wd": jax.random.normal(ks[3], (e, de, d), dtype) * (s / np.sqrt(2)),
+    }
+    if m.shared_d_ff:
+        p["shared"] = L.mlp_init(ks[4], d, m.shared_d_ff, "swiglu", dtype)
+        p["shared_gate"] = jax.random.normal(ks[5], (d,), F32) * s
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Token-choice top-k with PER-SEQUENCE capacity groups (GShard-style).
+
+    Grouping by batch row keeps the position-in-expert cumsum and the
+    dispatch scatter local to each data shard — the only cross-chip
+    traffic is the (G-over-data, E-over-model) buffer resharding, i.e.
+    the canonical MoE all-to-all.  ``cfg.moe_dispatch_shard=False`` falls
+    back to a single global group (the §Perf H4 baseline: the global
+    cumsum then drags ~B×S×E traffic across the mesh every layer).
+
+    Returns (out, aux) with aux = {"load_balance_loss": scalar}.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.padded, m.top_k
+    if cfg.moe_dispatch_shard:
+        g, sg = b, s                       # one capacity group per sequence
+    else:
+        g, sg = 1, b * s                   # single global group (baseline)
+    cap = int(np.ceil(m.capacity_factor * k * sg / e))
+    cap = max(4, -(-cap // 4) * 4)
+
+    xg = x.reshape(g, sg, d)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"],
+                        preferred_element_type=F32)
+    if e != m.num_experts:  # mask padded experts out of routing
+        pad_mask = jnp.arange(e) >= m.num_experts
+        logits = jnp.where(pad_mask[None, None, :], L.NEG_INF, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                     # (g, sg, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # position-in-expert by token priority within the group
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.int8)            # (g, sg, k, e)
+    cnt = jnp.sum(sel, axis=2).astype(jnp.int32)             # (g, sg, e)
+    cum = jnp.cumsum(cnt, axis=1) - cnt                      # exclusive
+    pos = jnp.take_along_axis(cum, topi, axis=2)             # (g, sg, k)
+    keep = pos < cap
+
+    # dispatch INDICES (no token duplication): slot -> source position
+    flat = jnp.where(keep, topi * cap + pos, e * cap)        # (g, sg, k)
+    src = jnp.broadcast_to(jnp.arange(sg)[None, :, None],
+                           (g, sg, k)).reshape(g, sg * k)
+    idxbuf = jnp.full((g, e * cap + 1), sg, jnp.int32)       # sg = pad row
+    rows = jnp.arange(g)[:, None]
+    idxbuf = idxbuf.at[rows, flat.reshape(g, sg * k)].set(src)
+    idxbuf = idxbuf[:, :-1]                                  # (g, e*cap)
+
+    xpad = jnp.concatenate(
+        [xg, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(xpad, idxbuf[..., None], axis=1)
+    buf = buf.reshape(g, e, cap, d)
+    # the (group-over-data, expert-over-model) reshard = MoE all-to-all
+    buf = constrain_experts(buf)
+
+    # expert FFN (gated), batched over experts; weights broadcast over g
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"],
+                               preferred_element_type=F32))
+    h = h.astype(x.dtype) * jnp.einsum("gecd,edf->gecf", buf, p["wu"],
+                                       preferred_element_type=F32
+                                       ).astype(x.dtype)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wd"],
+                         preferred_element_type=F32).astype(x.dtype)
+    out_buf = constrain_experts(out_buf)
+
+    out_buf = jnp.concatenate(
+        [out_buf.reshape(g, e * cap, d), jnp.zeros((g, 1, d), x.dtype)],
+        axis=1)
+    gathered = jnp.take_along_axis(
+        out_buf, flat.reshape(g, sg * k)[..., None], axis=1)
+    w = (topv * keep).astype(x.dtype).reshape(g, sg * k)
+    yt = jnp.sum((gathered * w[..., None]).reshape(g, sg, k, d), axis=2)
+
+    if "shared" in p:
+        gate = jax.nn.sigmoid(
+            jnp.einsum("gsd,d->gs", xg, p["shared_gate"],
+                       preferred_element_type=F32))
+        yt = yt + L.mlp_apply(p["shared"], xg, "swiglu") * \
+            gate[..., None].astype(x.dtype)
+
+    # GShard load-balance aux loss: E * sum_e f_e * P_e
+    f = jnp.mean(cnt.astype(F32), axis=(0, 1))     # fraction routed
+    pbar = jnp.mean(probs, axis=(0, 1))
+    lb = m.num_experts * jnp.sum(f * pbar)
+    return yt.reshape(b, s, d), {"load_balance_loss": lb}

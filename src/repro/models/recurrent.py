@@ -1,0 +1,278 @@
+"""Recurrent families: the RG-LRU block (RecurrentGemma/Griffin) and the
+RWKV-v6 "Finch" time/channel mix with data-dependent decay.
+
+Both are linear recurrences, i.e. 1-D stencils: training uses a parallel
+form (associative scan for RG-LRU, chunked scan for RWKV) and decoding is
+an O(1) state update — which is why these archs run the ``long_500k``
+shape that full attention skips.
+
+Simplifications vs the released checkpoints (noted per DESIGN.md):
+  * RG-LRU input/recurrence gates are per-channel (diagonal) rather than
+    block-diagonal linear — same data-dependent gating structure.
+  * RWKV6 group-norm over heads is RMS-per-head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+_LRU_C = 8.0
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin)
+# ===========================================================================
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, w, cw = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    s = 0.02
+    # Lambda init so that a ∈ (0.9, 0.999) at sigma(r)=0.5 (Griffin app. A)
+    lam = jax.random.uniform(ks[0], (w,), F32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(lam) / (_LRU_C * 0.5)))
+    return {
+        "wx": jax.random.normal(ks[1], (d, w), dtype) * s,     # x branch
+        "wg": jax.random.normal(ks[2], (d, w), dtype) * s,     # gelu gate
+        "wo": jax.random.normal(ks[3], (w, d), dtype) * (s / np.sqrt(2)),
+        "conv": jax.random.normal(ks[4], (cw, w), dtype) * s,
+        "a_param": a_param,                                    # Λ
+        "wa": jax.random.normal(ks[5], (w,), F32) * s,         # recurrence gate
+        "ba": jnp.zeros((w,), F32),
+        "wi": jax.random.normal(ks[6], (w,), F32) * s,         # input gate
+        "bi": jnp.zeros((w,), F32),
+    }
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w, cw = cfg.lru_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, w), F32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}
+
+
+def _lru_coeffs(p, u):
+    """Data-dependent decay a_t and scaled input b_t from branch input u."""
+    u32 = u.astype(F32)
+    r = jax.nn.sigmoid(u32 * p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(u32 * p["wi"] + p["bi"])
+    log_a = -_LRU_C * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u32)
+    return a, b
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                state: dict | None = None, update_state: bool = False):
+    """x: (B, S, d). Train/prefill when state is None or S>1 (associative
+    scan over time); decode when S==1 with a carried state."""
+    b, s, d = x.shape
+    cw = cfg.conv_width
+    u = L.dot(x, p["wx"], "bsd,dw->bsw")
+    gate = jax.nn.gelu(L.dot(x, p["wg"], "bsd,dw->bsw").astype(F32),
+                       approximate=True)
+
+    # causal depthwise conv, width cw
+    if state is None:
+        upad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        upad = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    conv = sum(upad[:, i:i + s, :] * p["conv"][i][None, None, :]
+               for i in range(cw))
+
+    a, bt = _lru_coeffs(p, conv)
+    if s == 1 and state is not None:
+        h = a[:, 0] * state["h"] + bt[:, 0]
+        hseq = h[:, None, :]
+    else:
+        h0 = state["h"][:, None, :] if state is not None else None
+
+        def compose(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        if h0 is not None:  # fold initial state into the first element
+            bt = bt.at[:, 0, :].add(a[:, 0, :] * state["h"])
+        _, hseq = jax.lax.associative_scan(compose, (a, bt), axis=1)
+        h = hseq[:, -1, :]
+
+    y = (hseq * gate).astype(x.dtype)
+    out = L.dot(y, p["wo"], "bsw,wd->bsd")
+    new_state = None
+    if update_state:
+        tail = upad[:, -(cw - 1):, :] if cw > 1 else \
+            jnp.zeros((b, 0, u.shape[-1]), u.dtype)
+        new_state = {"h": h, "conv": tail}
+    return out, new_state
+
+
+# ===========================================================================
+# RWKV-v6 (Finch)
+# ===========================================================================
+
+def rwkv_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    ks = jax.random.split(key, 12)
+    s = 0.02
+    lora = 64
+    return {
+        # time mix
+        "mu": jax.random.uniform(ks[0], (5, d), F32),  # shift mix r,k,v,w,g
+        "wr": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[5], (d, d), dtype) * (s / np.sqrt(2)),
+        "w0": jnp.full((d,), -5.0, F32),               # base decay
+        "wa": jax.random.normal(ks[6], (d, lora), F32) * s,   # decay LoRA
+        "wb": jax.random.normal(ks[7], (lora, d), F32) * s,
+        "u": jax.random.normal(ks[8], (nh, hd), F32) * s,     # bonus
+        # channel mix
+        "cmu": jax.random.uniform(ks[9], (2, d), F32),
+        "ck": jax.random.normal(ks[10], (d, ff), dtype) * s,
+        "cv": jax.random.normal(ks[11], (ff, d), dtype) * (s / np.sqrt(2)),
+        "cr": jax.random.normal(ks[0], (d, d), dtype) * s,
+    }
+
+
+def make_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return {"tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype),
+            "S": jnp.zeros((batch, nh, hd, hd), F32)}
+
+
+def _token_shift(x, prev):
+    """x_{t-1} along the sequence; ``prev`` is the carry for decode."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if prev is not None:
+        shifted = shifted.at[:, 0, :].set(prev)
+    return shifted
+
+
+def _wkv_chunk_size(s: int) -> int:
+    # chunk large enough that the chunk COUNT stays <= 64: keeps the
+    # (C,C) intra-chunk matmuls MXU-sized at 4k and the scan short at 32k+
+    target = max(64, s // 64)
+    for c in (target, 64, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def _wkv_chunked(r, k, v, w, u, S0):
+    """Chunked (matmul-form) WKV recurrence — the MXU-native formulation.
+
+    Within a chunk of C tokens the recurrence
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t (S_{t-1} + u k_t v_t^T)
+    unrolls to one (C,dk)x(dk,dv) inter-chunk matmul + one causal (C,C)
+    intra-chunk attention matmul, using cumulative log-decays relative to
+    the chunk start.  Chunks are processed by a scan carrying S — the 1-D
+    stencil-streaming structure of the paper's cyclic buffer (DESIGN.md T2)
+    applied to the time dimension.
+
+    r,k,v,w: (B, S, H, D) f32 (w = per-channel decay in (0,1)); u: (H, D).
+    Returns (S_final, y) with y (B, S, H, D).
+    """
+    b, s, h, d = r.shape
+    c = _wkv_chunk_size(s)
+    n = s // c
+    rc, kc, vc, wc = (t.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+                      for t in (r, k, v, w))          # (n, b, h, c, d)
+    logw = jnp.log(jnp.maximum(wc, 1e-38))            # (n, b, h, c, d)
+    # L_i = sum_{j<=i} log w_j within the chunk (inclusive cumulative decay)
+    L = jnp.cumsum(logw, axis=3)
+
+    causal = jnp.tril(jnp.ones((c, c), bool), k=-1)   # strictly lower
+
+    def chunk_step(S, inp):
+        rj, kj, vj, Lj, lwj = inp                     # (b, h, c, d) each
+        a_in = jnp.exp(Lj - lwj)    # decay from chunk start to t-1 (excl. t)
+        r_t = rj * a_in             # \tilde r
+        k_t = kj * jnp.exp(-Lj)     # \tilde k
+        # inter-chunk: r_t S (state from previous chunks)
+        inter = jnp.einsum("bhcd,bhdv->bhcv", r_t, S)
+        # intra-chunk: causal scores + bonus diagonal
+        scores = jnp.einsum("bhid,bhjd->bhij", r_t, k_t)
+        scores = jnp.where(causal[None, None], scores, 0.0)
+        diag = jnp.einsum("bhcd,hd,bhcd->bhc", rj, u, kj)
+        intra = jnp.einsum("bhij,bhjv->bhiv", scores, vj) + \
+            diag[..., None] * vj
+        # state to the next chunk: S_C = diag(A_C) S + sum_j (A_C/A_j) k_j v_j^T
+        decay_all = jnp.exp(Lj[:, :, -1, :])          # (b, h, d)
+        k_hat = kj * jnp.exp(Lj[:, :, -1:, :] - Lj)   # (b, h, c, d)
+        S_new = S * decay_all[..., :, None] + \
+            jnp.einsum("bhcd,bhcv->bhdv", k_hat, vj)
+        return S_new, inter + intra
+
+    from repro.models.scan_ctl import maybe_scan
+    S, yc = maybe_scan(chunk_step, S0, (rc, kc, vc, L, logw))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return S, y
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  state: dict | None = None):
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    prev = state["tm_x"] if state is not None else None
+    xs = _token_shift(x, prev)
+
+    def mix(i):
+        m = p["mu"][i].astype(x.dtype)
+        return x * m + xs * (1 - m)
+
+    r = L.dot(mix(0), p["wr"], "bsd,de->bse").reshape(b, s, nh, hd)
+    k = L.dot(mix(1), p["wk"], "bsd,de->bse").reshape(b, s, nh, hd)
+    v = L.dot(mix(2), p["wv"], "bsd,de->bse").reshape(b, s, nh, hd)
+    g = L.dot(mix(4), p["wg"], "bsd,de->bse")
+    # data-dependent decay (Finch): w_t = exp(-exp(w0 + tanh(x A) B))
+    dd = jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(3).astype(F32), p["wa"]))
+    dd = jnp.einsum("bsl,ld->bsd", dd, p["wb"]) + p["w0"]
+    w = jnp.exp(-jnp.exp(dd)).reshape(b, s, nh, hd)     # ∈ (0,1)
+
+    r32, k32, v32 = (t.astype(F32) for t in (r, k, v))
+    u = p["u"]
+    S0 = state["S"] if state is not None else jnp.zeros((b, nh, hd, hd), F32)
+
+    if s == 1:  # decode: single recurrence step
+        rt, kt, vt, wt = (t[:, 0] for t in (r32, k32, v32, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S0 + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S0 + kv
+        y = out[:, None].reshape(b, 1, nh, hd)
+    else:
+        S, y = _wkv_chunked(r32, k32, v32, w, u, S0)
+
+    # per-head RMS norm, then gate and output proj
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y.reshape(b, s, d) * jax.nn.silu(g.astype(F32))).astype(x.dtype)
+    out = L.dot(y, p["wo"], "bsd,de->bse")
+    new_state = {"tm_x": x[:, -1, :], "S": S}
+    return out, new_state
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, *, state: dict | None = None):
+    prev = state["cm_x"] if state is not None else None
+    xs = _token_shift(x, prev)
+    mk = p["cmu"][0].astype(x.dtype)
+    mr = p["cmu"][1].astype(x.dtype)
+    xk = x * mk + xs * (1 - mk)
+    xr = x * mr + xs * (1 - mr)
+    h = jax.nn.relu(L.dot(xk, p["ck"], "bsd,df->bsf"))
+    h = h * h
+    r = jax.nn.sigmoid(L.dot(xr, p["cr"], "bsd,de->bse").astype(F32))
+    out = (r.astype(x.dtype) * L.dot(h, p["cv"], "bsf,fd->bsd"))
+    return out, {"cm_x": x[:, -1, :]}

@@ -1,0 +1,55 @@
+"""Scan control: a context that turns ``lax.scan`` into a Python loop.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so FLOP/byte numbers for scanned layer stacks (and chunked
+attention/recurrence scans) understate the true cost.  The dry-run's cost
+pass lowers reduced-depth configs inside ``unrolled_scans()`` — every
+scan in the model becomes straight-line HLO with exact counts — and
+extrapolates linearly to full depth (EXPERIMENTS.md §Conventions).
+Production lowering keeps real scans (compact HLO, fast compiles).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_STATE = {"unroll": False}
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    prev = _STATE["unroll"]
+    _STATE["unroll"] = True
+    try:
+        yield
+    finally:
+        _STATE["unroll"] = prev
+
+
+def scans_unrolled() -> bool:
+    return _STATE["unroll"]
+
+
+def maybe_scan(f, init, xs, length: int | None = None):
+    """lax.scan, or an unrolled Python loop inside ``unrolled_scans()``."""
+    if not _STATE["unroll"]:
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        get = lambda i: None
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0] if leaves else length
+        get = lambda i: jax.tree.map(lambda a: a[i], xs)
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, get(i))
+        ys.append(y)
+    if not ys:
+        return carry, None
+    if jax.tree.structure(ys[0]).num_leaves == 0:  # e.g. all-None ys
+        return carry, ys[0]
+    return carry, jax.tree.map(lambda *a: jax.numpy.stack(a), *ys)

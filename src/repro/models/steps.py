@@ -1,0 +1,216 @@
+"""Train / prefill / decode step factories + sharding-spec builders.
+
+These are the functions the launcher jits and the dry-run lowers for every
+(arch × shape × mesh) cell.  Precision follows the paper's two-type
+discipline: f32 master weights, bf16 compute copies (grads therefore
+all-reduce in bf16 — the gradient-compression knob), f32 loss/optimizer
+math, m/v moment dtype per-config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.parallel import sharding as shd
+
+F32 = jnp.float32
+
+
+def model_module(cfg: ModelConfig):
+    return ED if cfg.is_encdec else TF
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Token cross-entropy, f32, mean over all positions."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, compute_dtype) -> tuple:
+    tokens = batch["tokens"]
+    if cfg.is_encdec:
+        logits, aux = ED.forward(cfg, params, tokens,
+                                 frames=batch["frames"],
+                                 compute_dtype=compute_dtype)
+    else:
+        logits, aux = TF.forward(cfg, params, tokens,
+                                 prefix_embeds=batch.get("prefix_embeds"),
+                                 compute_dtype=compute_dtype)
+        if cfg.num_prefix_embeds:   # loss only over the text region
+            logits = logits[:, cfg.num_prefix_embeds:]
+    loss = _xent(logits[:, :-1], tokens[:, 1:])
+    loss = loss + 0.01 * aux["load_balance_loss"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def cast_compute(params, compute_dtype):
+    """bf16 compute copy of the MATMUL weights (the leaves the sharding
+    rules recognize); norm scales / gates / decay params stay f32."""
+    from jax.sharding import PartitionSpec as P
+
+    def cast(path, p):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", "?")))
+                      for k in path)
+        is_weight = shd.spec_for(names, p.ndim) != P()
+        if is_weight and p.dtype == F32:
+            return p.astype(compute_dtype)
+        return p
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    mesh: Mesh | None = None,
+                    compute_dtype=jnp.bfloat16,
+                    lr_schedule=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    schedule = lr_schedule or (lambda s: 1.0)
+
+    def train_step(state, batch):
+        with shd.set_mesh(mesh, seq_shard=cfg.seq_shard):
+            params = state["params"]
+
+            def lf(cparams):
+                return loss_fn(cfg, cparams, batch, compute_dtype)
+
+            cparams = cast_compute(params, compute_dtype)
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(cparams)
+            # grads carry compute_dtype -> collectives run compressed; the
+            # master update below accumulates in f32 (reliable update, T1)
+            new_params, new_opt, gnorm = adamw_update(
+                params, grads, state["opt"], opt_cfg,
+                lr_scale=schedule(state["opt"]["step"]))
+            metrics = {"loss": loss, "grad_norm": gnorm,
+                       "load_balance_loss": aux["load_balance_loss"],
+                       "step": new_opt["step"]}
+            return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, opt_cfg: AdamWConfig,
+                     param_dtype=F32) -> dict:
+    params = model_module(cfg).init_params(cfg, key, param_dtype)
+    opt_cfg = AdamWConfig(**{**opt_cfg.__dict__,
+                             "moment_dtype": cfg.opt_state_dtype})
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int,
+                      mesh: Mesh | None = None,
+                      compute_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        with shd.set_mesh(mesh, seq_shard=cfg.seq_shard):
+            if cfg.is_encdec:
+                return ED.prefill(cfg, params, batch["tokens"],
+                                  frames=batch["frames"],
+                                  cache_len=cache_len,
+                                  compute_dtype=compute_dtype)
+            return TF.prefill(cfg, params, batch["tokens"],
+                              cache_len=cache_len,
+                              prefix_embeds=batch.get("prefix_embeds"),
+                              compute_dtype=compute_dtype)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, mesh: Mesh | None = None,
+                     compute_dtype=jnp.bfloat16):
+    def decode_step(params, caches, tokens, pos):
+        with shd.set_mesh(mesh, seq_shard=cfg.seq_shard):
+            logits, caches = model_module(cfg).decode_step(
+                cfg, params, tokens, pos, caches,
+                compute_dtype=compute_dtype)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok[:, None], logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs (PartitionSpec trees for jit in_shardings/out_shardings)
+# ---------------------------------------------------------------------------
+
+def state_specs(cfg: ModelConfig, state_shape) -> Any:
+    """Specs for {"params", "opt"} trees (opt m/v mirror the params)."""
+    def spec(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", "?")))
+                      for k in path)
+        if names and names[-1] == "step":
+            return P()
+        return shd.spec_for(names, len(leaf.shape))
+    return jax.tree_util.tree_map_with_path(spec, state_shape)
+
+
+def dp_axes_for(mesh: Mesh, batch: int):
+    """(pod, data) when the batch divides them, else the largest prefix."""
+    dp = shd.batch_axes(mesh)
+    if dp is None:
+        return None
+    total = 1
+    for ax in dp:
+        total *= mesh.shape[ax]
+    if batch % total == 0:
+        return dp
+    # try data alone (e.g. multi-pod with batch < pods*data)
+    if batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh) -> Any:
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        dp = dp_axes_for(mesh, leaf.shape[0])
+        return P(dp, *([None] * (nd - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, caches_shape, mesh: Mesh) -> Any:
+    """KV caches: batch over (pod,data); heads over model when divisible."""
+    tp_size = mesh.shape[shd.TP]
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", "?")))
+                 for k in path]
+        name = names[-1] if names else "?"
+        nd = len(leaf.shape)
+        if nd < 2:
+            return P(*([None] * nd))
+        dp = dp_axes_for(mesh, leaf.shape[1])  # (L, B, ...) layout
+        if name in ("k", "v") and nd == 5:     # (L, B, S, Hkv, hd)
+            heads, seq = leaf.shape[3], leaf.shape[2]
+            if heads % tp_size == 0:
+                return P(None, dp, None, shd.TP, None)
+            if cfg.kv_seq_shard and seq % tp_size == 0:
+                return P(None, dp, shd.TP, None, None)  # sequence-sharded
+            return P(None, dp, None, None, None)
+        if name == "S" and nd == 5:            # (L, B, nh, dk, dv)
+            heads = leaf.shape[2]
+            tp = shd.TP if heads % tp_size == 0 else None
+            return P(None, dp, tp, None, None)
+        if name == "pos":
+            return P(*([None] * nd))
+        return P(None, dp, *([None] * (nd - 2)))  # tm_x/cm_x/h/conv
+    return jax.tree_util.tree_map_with_path(spec, caches_shape)

@@ -1,0 +1,245 @@
+"""Unified decoder-only model covering the dense / moe / hybrid / ssm / vlm
+families.  Encoder-decoder (audio) lives in :mod:`repro.models.encdec`.
+
+Depth is organized into **segments**: maximal runs of a repeating block
+pattern, each executed as one ``lax.scan`` over stacked parameters — the
+HLO (and compile time, which matters at 512 fake devices on one CPU) is
+O(#distinct patterns), not O(depth).  E.g. recurrentgemma-9b (38 layers,
+pattern rec,rec,attn) becomes scan((rec,rec,attn) ×12) + scan((rec,) ×2).
+
+API (pure functions, params are pytrees of arrays):
+  init_params(cfg, key)                         -> params
+  forward(cfg, params, tokens, ...)             -> (logits, aux)
+  prefill(cfg, params, tokens, ...)             -> (logits, caches)
+  decode_step(cfg, params, tokens, pos, caches) -> (logits, caches)
+  init_caches(cfg, batch, length, dtype)        -> caches
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain_batch
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Depth plan
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(block-pattern, scan-length)] covering cfg.num_layers layers."""
+    kinds = cfg._layer_kinds()
+    pat = {"dense": ("attn",), "moe": ("moe",), "ssm": ("rwkv",),
+           "vlm": ("attn",), "audio": ("attn",),
+           "hybrid": cfg.block_pattern}[cfg.family]
+    plen = len(pat)
+    full, tail = divmod(len(kinds), plen)
+    plan = []
+    if full:
+        plan.append((tuple(pat), full))
+    if tail:
+        plan.append((tuple(pat[:tail]), 1))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,), F32),
+                         "ln2": jnp.zeros((d,), F32)}
+    if kind == "attn":
+        p["attn"] = B.attn_init(ks[0], cfg, dtype)
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp, dtype)
+    elif kind == "moe":
+        p["attn"] = B.attn_init(ks[0], cfg, dtype)
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = R.rglru_init(ks[0], cfg, dtype)
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp, dtype)
+    elif kind == "rwkv":
+        p["tm"] = R.rwkv_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, length: int,
+                 dtype) -> dict:
+    if kind in ("attn", "moe"):
+        ring = cfg.family == "hybrid" and cfg.window > 0
+        return B.make_kv_cache(cfg, batch, length, dtype, ring=ring)
+    if kind == "rec":
+        return R.make_rglru_state(cfg, batch, dtype)
+    if kind == "rwkv":
+        return R.make_rwkv_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _block_apply(bp: dict, h: jax.Array, cfg: ModelConfig, kind: str, *,
+                 pos0, cache, update_cache: bool):
+    aux = jnp.zeros((), F32)
+    new_cache = None
+    if kind in ("attn", "moe"):
+        a, nc = B.attn_apply(bp["attn"], L.rms_norm(h, bp["ln1"]), cfg,
+                             pos0=pos0, window=cfg.window, cache=cache,
+                             update_cache=update_cache)
+        h = h + a
+        if kind == "attn":
+            m = L.mlp_apply(bp["mlp"], L.rms_norm(h, bp["ln2"]), cfg.mlp)
+        else:
+            m, ad = M.moe_apply(bp["moe"], L.rms_norm(h, bp["ln2"]), cfg)
+            aux = ad["load_balance_loss"]
+        h = h + m
+        new_cache = nc
+    elif kind == "rec":
+        a, ns = R.rglru_apply(bp["rec"], L.rms_norm(h, bp["ln1"]), cfg,
+                              state=cache, update_state=update_cache)
+        h = h + a
+        h = h + L.mlp_apply(bp["mlp"], L.rms_norm(h, bp["ln2"]), cfg.mlp)
+        new_cache = ns
+    elif kind == "rwkv":
+        a, ts = R.rwkv_time_mix(bp["tm"], L.rms_norm(h, bp["ln1"]), cfg,
+                                state=cache)
+        h = h + a
+        c, cs = R.rwkv_channel_mix(bp["tm"], L.rms_norm(h, bp["ln2"]),
+                                   state=cache)
+        h = h + c
+        if update_cache:
+            new_cache = {**ts, **cs}
+    h = constrain_batch(h)
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    ke, kf, *seg_keys = jax.random.split(key, 2 + len(stack_plan(cfg)))
+    params: dict[str, Any] = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype,
+                              cfg.tie_embeddings,
+                              padded_vocab=cfg.padded_vocab),
+        "final_norm": jnp.zeros((cfg.d_model,), F32),
+        "segments": [],
+    }
+    for (pat, count), sk in zip(stack_plan(cfg), seg_keys):
+        pks = jax.random.split(sk, count)
+
+        def one(k, pat=pat):
+            bks = jax.random.split(k, len(pat))
+            return {f"b{j}": _block_init(bk, cfg, kind, dtype)
+                    for j, (kind, bk) in enumerate(zip(pat, bks))}
+
+        params["segments"].append(jax.vmap(one)(pks))
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, length: int,
+                dtype=jnp.float32) -> list:
+    caches = []
+    for pat, count in stack_plan(cfg):
+        seg = {}
+        for j, kind in enumerate(pat):
+            c = _block_cache(cfg, kind, batch, length, dtype)
+            seg[f"b{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), c)
+        caches.append(seg)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+# ---------------------------------------------------------------------------
+
+def _run_segments(cfg: ModelConfig, params, h, *, pos0, caches,
+                  update_cache: bool):
+    new_caches = []
+    aux_total = jnp.zeros((), F32)
+    for si, (pat, count) in enumerate(stack_plan(cfg)):
+        seg_p = params["segments"][si]
+        seg_c = caches[si] if caches is not None else None
+
+        def body(carry, xs, pat=pat):
+            h, aux = carry
+            bp_all, bc_all = xs
+            ncs = {}
+            for j, kind in enumerate(pat):
+                bc = bc_all[f"b{j}"] if bc_all is not None else None
+                h, nc, a = _block_apply(bp_all[f"b{j}"], h, cfg, kind,
+                                        pos0=pos0, cache=bc,
+                                        update_cache=update_cache)
+                ncs[f"b{j}"] = nc
+                aux = aux + a
+            return (h, aux), (ncs if update_cache else None)
+
+        if cfg.remat and caches is None:  # remat only on the training path
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        from repro.models.scan_ctl import maybe_scan
+        (h, aux_total), seg_nc = maybe_scan(
+            body, (h, aux_total), (seg_p, seg_c))
+        new_caches.append(seg_nc)
+    return h, (new_caches if update_cache else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, prefix_embeds, dtype):
+    h = L.embed_lookup(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(dtype), h], axis=1)
+    return h
+
+
+def forward(cfg: ModelConfig, params, tokens, *, prefix_embeds=None,
+            compute_dtype=jnp.float32):
+    """Training/eval forward: full-sequence logits (f32) + aux losses."""
+    h = _embed_inputs(cfg, params, tokens, prefix_embeds, compute_dtype)
+    h, _, aux = _run_segments(cfg, params, h, pos0=0, caches=None,
+                              update_cache=False)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = L.logits_out(params["embed"], h, cfg.vocab_size)
+    return logits, {"load_balance_loss": aux}
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, cache_len: int,
+            prefix_embeds=None, compute_dtype=jnp.float32):
+    """Run the prompt, returning last-position logits + caches of
+    ``cache_len`` slots (prompt K/V written at positions 0..S-1)."""
+    b, s = tokens.shape
+    caches = init_caches(cfg, b, cache_len, compute_dtype)
+    h = _embed_inputs(cfg, params, tokens, prefix_embeds, compute_dtype)
+    h, caches, _ = _run_segments(cfg, params, h, pos0=0, caches=caches,
+                                 update_cache=True)
+    h = L.rms_norm(h[:, -1:], params["final_norm"])
+    logits = L.logits_out(params["embed"], h, cfg.vocab_size)
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, caches, *,
+                compute_dtype=jnp.float32):
+    """One decode step: tokens (B,1) at absolute position ``pos``."""
+    h = L.embed_lookup(params["embed"], tokens, compute_dtype)
+    h, caches, _ = _run_segments(cfg, params, h, pos0=pos, caches=caches,
+                                 update_cache=True)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = L.logits_out(params["embed"], h, cfg.vocab_size)
+    return logits, caches

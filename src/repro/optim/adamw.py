@@ -1,0 +1,78 @@
+"""Mixed-precision AdamW, built from scratch.
+
+The paper's two-precision discipline (T1) carried into training:
+  * master weights in f32 (the "high" type),
+  * compute/gradient dtype bf16 (the "low" type),
+  * m/v moments in a configurable dtype — f32 by default, bf16 for the
+    340B-class configs where moment storage dominates HBM (the moment
+    update still runs in f32 registers; only storage is narrowed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # "bfloat16" to halve optimizer HBM
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn2 = sum(jnp.sum(g.astype(F32) ** 2) for g in leaves)
+    gnorm = jnp.sqrt(gn2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig,
+                 lr_scale=1.0):
+    """One AdamW step. params: f32 master tree; grads: any dtype tree."""
+    step = opt_state["step"] + 1
+    t = step.astype(F32)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g32 = g.astype(F32)
+        m32 = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(F32)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        return (p32 - lr * upd).astype(p.dtype), m32.astype(m.dtype), \
+            v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, gnorm

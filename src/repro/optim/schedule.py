@@ -1,0 +1,14 @@
+"""Learning-rate schedules (scale factors multiplying AdamWConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  min_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(warmup, 1)
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (activation_spec, batch_axes, constrain,
+                                     param_specs, set_mesh, spec_for)

@@ -1,0 +1,166 @@
+"""Sharding rules: map parameter/activation names onto the production mesh.
+
+Strategy (DESIGN.md §5): Megatron tensor parallelism over ``model``,
+FSDP-style parameter+optimizer sharding over ``data``, batch data
+parallelism over (``pod``, ``data``).  Rules are name-based so every
+family's parameter tree gets consistent specs without per-arch tables.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"    # tensor-parallel axis
+FSDP = "data"   # fully-sharded-parameter axis (also the batch axis)
+
+# spec for the TRAILING dims of each named leaf; leading (stacking) dims
+# are padded with None.  3D entries are MoE expert tensors.
+_NAME_RULES: dict[str, tuple] = {
+    # attention / generic projections
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP), "wo": (TP, FSDP),
+    # MLPs
+    "wu": (FSDP, TP), "wg": (FSDP, TP), "wd": (TP, FSDP),
+    # embeddings (vocab over TP for parallel logits, d over FSDP)
+    "tok": (TP, FSDP), "out": (TP, FSDP),
+    # MoE router + experts (experts over TP = expert parallelism)
+    "router": (None, TP),
+    "moe/wg": (TP, FSDP, None), "moe/wu": (TP, FSDP, None),
+    "moe/wd": (TP, None, FSDP),
+    # rwkv
+    "wr": (FSDP, TP), "ck": (FSDP, TP), "cv": (TP, FSDP), "cr": (FSDP, TP),
+    # rg-lru
+    "wx": (FSDP, TP), "conv": (None, TP),
+}
+
+_CTX = {"mesh": None, "seq_shard": False}
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Mesh | None, *, seq_shard: bool = False):
+    """Activate a mesh for ``constrain`` calls (no-op when None).
+
+    ``seq_shard=True`` additionally shards the sequence axis of residual
+    activations over ``model`` (Megatron sequence-parallel analogue): the
+    per-layer saved carries and norm intermediates shrink by the TP degree,
+    at the cost of per-layer all-gather/reduce-scatter pairs.
+    """
+    prev = (_CTX["mesh"], _CTX["seq_shard"])
+    _CTX["mesh"] = mesh
+    _CTX["seq_shard"] = seq_shard
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["seq_shard"] = prev
+
+
+def batch_axes(mesh: Mesh | None = None, batch: int | None = None):
+    """Data-parallel axes; drops axes the batch size cannot divide."""
+    mesh = mesh or _CTX["mesh"]
+    if mesh is None:
+        return None
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if batch is None:
+        return axes
+    total = 1
+    for ax in axes:
+        total *= mesh.shape[ax]
+    if batch % total == 0:
+        return axes
+    if batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint iff a mesh is active (smoke tests skip)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Constrain (B, S, ...) activations: batch over (pod, data), and — in
+    sequence-parallel mode — S over ``model`` when divisible."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    rest = [None] * (x.ndim - 1)
+    if (_CTX["seq_shard"] and x.ndim >= 3 and TP in mesh.axis_names
+            and x.shape[1] % mesh.shape[TP] == 0 and x.shape[1] > 1):
+        rest[0] = TP
+    spec = P(batch_axes(mesh, x.shape[0]), *rest)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tp_axis_for(dim_size: int) -> str | None:
+    """``model`` when the dimension divides the TP axis, else replicated."""
+    mesh = _CTX["mesh"]
+    if mesh is None or TP not in mesh.axis_names:
+        return None
+    return TP if dim_size % mesh.shape[TP] == 0 else None
+
+
+def tp_size() -> int:
+    """Size of the TP axis in the active mesh (0 when off-mesh)."""
+    mesh = _CTX["mesh"]
+    if mesh is None or TP not in mesh.axis_names:
+        return 0
+    return int(mesh.shape[TP])
+
+
+def constrain_heads(x: jax.Array, head_axis: int) -> jax.Array:
+    """Shard (batch, ..., heads, ...) activations: batch over (pod,data),
+    the head axis over ``model`` when divisible.  No-op off-mesh."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    tp = tp_axis_for(x.shape[head_axis])
+    spec = [None] * x.ndim
+    spec[0] = batch_axes(mesh, x.shape[0])
+    spec[head_axis] = tp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def activation_spec(mesh: Mesh, extra: tuple = (None, None)) -> P:
+    """(B, S, d)-style activations: batch over (pod, data)."""
+    return P(batch_axes(mesh), *extra)
+
+
+def spec_for(path: tuple[str, ...], ndim: int) -> P:
+    """PartitionSpec for a parameter leaf from its tree path."""
+    name = path[-1]
+    in_moe = any("moe" in p for p in path[:-1]) and "shared" not in path
+    key = f"moe/{name}" if in_moe and f"moe/{name}" in _NAME_RULES else name
+    base = _NAME_RULES.get(key)
+    if base is None or ndim < len(base):
+        return P()  # replicated (norm scales, gates, small vectors)
+    pad = (None,) * (ndim - len(base))
+    return P(*pad, *base)
+
+
+def _leaf_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        names = tuple(
+            getattr(k, "key", getattr(k, "idx", getattr(k, "name", "?")))
+            for k in path)
+        yield tuple(str(n) for n in names), leaf
+
+
+def param_specs(params) -> "pytree of P":
+    """Tree of PartitionSpecs matching a parameter tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = tuple(str(getattr(k, "key", getattr(k, "idx",
+                                                    getattr(k, "name", "?"))))
+                      for k in path)
+        specs.append(spec_for(names, leaf.ndim if hasattr(leaf, "ndim")
+                              else len(leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, specs)

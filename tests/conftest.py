@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: never set xla_force_host_platform_device_count
+here — smoke tests and benches must see 1 device (the dry-run sets its own
+flag as the first line of repro.launch.dryrun)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

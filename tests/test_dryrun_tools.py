@@ -1,0 +1,50 @@
+"""Unit tests for the dry-run analysis tooling (no 512-device env needed:
+these test the pure parsing/extrapolation helpers)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import _extrapolate, collective_bytes
+
+
+def test_collective_parser_result_types():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[16,32]<=[512], to_apply=%add
+  %ag = bf16[16,4096]{1,0} all-gather(%y), replica_groups=[32,16]<=[512], dimensions={0}
+  %rs = f32[256]{0} reduce-scatter(%z), replica_groups=[1,16]<=[16], to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = bf16[64]{0} all-to-all(%v), replica_groups=[2,8]<=[16]
+  %notacoll = f32[999]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == {"count": 1, "bytes": 4096}
+    # all-gather operand = result / group_size(16)
+    assert out["all-gather"] == {"count": 1, "bytes": 16 * 4096 * 2 // 16}
+    # reduce-scatter operand = result * group_size(16)
+    assert out["reduce-scatter"] == {"count": 1, "bytes": 256 * 4 * 16}
+    assert out["collective-permute"] == {"count": 1, "bytes": 256}
+    assert out["all-to-all"] == {"count": 1, "bytes": 128}
+    assert out["total_count"] == 5
+
+
+def test_collective_parser_ignores_operand_references():
+    hlo = "%t = f32[4]{0} add(%all-gather.3, %all-reduce.1)\n"
+    out = collective_bytes(hlo)
+    assert out["total_count"] == 0
+
+
+def test_extrapolation_linear():
+    m1 = {"flops": 100.0, "bytes": 10.0, "coll_bytes": 4.0, "coll_count": 2}
+    m2 = {"flops": 150.0, "bytes": 14.0, "coll_bytes": 6.0, "coll_count": 3}
+    ext = _extrapolate(m1, m2, 1, 2, 10)
+    assert ext["flops"] == pytest.approx(100 + 9 * 50)
+    assert ext["bytes"] == pytest.approx(10 + 9 * 4)
+    assert ext["coll_bytes"] == pytest.approx(4 + 9 * 2)
+    assert ext["flops_per_layer"] == pytest.approx(50)
+
+
+def test_roofline_terms_formula():
+    from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    assert PEAK_FLOPS_BF16 == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9

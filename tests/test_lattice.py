@@ -1,0 +1,72 @@
+"""Lattice geometry, SU(3) fields, packing bijections."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LatticeShape, field_dot, field_norm2, pack_gauge,
+                        pack_spinor, random_gauge, random_spinor, unit_gauge,
+                        unpack_gauge, unpack_spinor)
+
+LAT = LatticeShape(4, 4, 4, 8)
+
+
+def test_su3_unitarity_and_det(rng):
+    u = random_gauge(rng, LAT)
+    uu = jnp.einsum("dtzyxab,dtzyxcb->dtzyxac", u, jnp.conj(u))
+    eye = jnp.eye(3, dtype=u.dtype)
+    assert jnp.max(jnp.abs(uu - eye)) < 5e-6
+    det = jnp.linalg.det(u)
+    assert jnp.max(jnp.abs(det - 1.0)) < 5e-6
+
+
+def test_unit_gauge_is_identity():
+    u = unit_gauge(LAT)
+    assert u.shape == (4, 4, 4, 4, 8, 3, 3)
+    assert jnp.allclose(u[0, 0, 0, 0, 0], jnp.eye(3, dtype=u.dtype))
+
+
+def test_pack_unpack_spinor_roundtrip(rng):
+    psi = random_spinor(rng, LAT)
+    assert jnp.allclose(unpack_spinor(pack_spinor(psi)), psi, atol=1e-6)
+
+
+def test_pack_unpack_gauge_roundtrip(rng):
+    u = random_gauge(rng, LAT)
+    assert jnp.allclose(unpack_gauge(pack_gauge(u)), u, atol=1e-6)
+
+
+def test_packed_layout_axes(rng):
+    psi = random_spinor(rng, LAT)
+    p = pack_spinor(psi)
+    assert p.shape == (4, 4, 4, 24, 8)  # (T, Z, Y, S, X) — X innermost
+    # component (spin=1, color=2, im) of site (t,z,y,x)
+    s_idx = (1 * 3 + 2) * 2 + 1
+    assert np.isclose(float(p[2, 1, 3, s_idx, 5]),
+                      float(jnp.imag(psi[2, 1, 3, 5, 1, 2])), atol=1e-6)
+
+
+def test_dot_matches_norm(rng):
+    psi = random_spinor(rng, LAT)
+    assert np.isclose(float(jnp.real(field_dot(psi, psi))),
+                      float(field_norm2(psi)), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(-3, 3), st.floats(-3, 3))
+def test_field_dot_sesquilinear(seed, a_re, a_im):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    lat = LatticeShape(2, 2, 2, 4)
+    x = random_spinor(k1, lat)
+    y = random_spinor(k2, lat)
+    alpha = jnp.complex64(a_re + 1j * a_im)
+    lhs = field_dot(x, alpha * y)
+    rhs = alpha * field_dot(x, y)
+    assert np.isclose(complex(lhs), complex(rhs), rtol=2e-4, atol=1e-3)
+    # conjugate symmetry
+    assert np.isclose(complex(field_dot(x, y)),
+                      np.conj(complex(field_dot(y, x))), rtol=2e-4,
+                      atol=1e-3)

@@ -1,0 +1,123 @@
+"""Krylov solvers: convergence, equivalences, the mixed-precision variant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LatticeShape, bicgstab, cg, cg_trace, cgnr, dslash,
+                        dslash_dagger, mpcg, normal_op, pack_gauge,
+                        pack_spinor, pipecg, random_gauge, random_spinor)
+from repro.core.wilson import (dslash_dagger_packed, dslash_packed,
+                               normal_op_packed)
+
+LAT = LatticeShape(4, 4, 4, 8)
+MASS = 0.4
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, LAT)
+    b = random_spinor(kb, LAT)
+    return u, b
+
+
+def _rel_res(u, x, b):
+    r = dslash(u, x, MASS) - b
+    return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
+
+
+def test_cgnr_solves_wilson(problem):
+    u, b = problem
+    x, st_ = cgnr(lambda v: dslash(u, v, MASS),
+                  lambda v: dslash_dagger(u, v, MASS), b,
+                  tol=1e-6, maxiter=500)
+    assert bool(st_.converged)
+    assert _rel_res(u, x, b) < 1e-5
+
+
+def test_pipecg_matches_cg(problem):
+    u, b = problem
+    op = lambda v: normal_op(u, v, MASS)
+    rhs = dslash_dagger(u, b, MASS)
+    x1, s1 = cg(op, rhs, tol=1e-6, maxiter=500)
+    x2, s2 = pipecg(op, rhs, tol=1e-6, maxiter=500)
+    assert bool(s2.converged)
+    # same solution; iteration counts within a few of each other
+    assert jnp.max(jnp.abs(x1 - x2)) < 1e-3
+    assert abs(int(s1.iterations) - int(s2.iterations)) <= 10
+
+
+def test_bicgstab_direct_solve(problem):
+    u, b = problem
+    x, st_ = bicgstab(lambda v: dslash(u, v, MASS), b, tol=1e-6, maxiter=500)
+    assert bool(st_.converged)
+    assert _rel_res(u, x, b) < 1e-5
+
+
+def test_mpcg_bf16_reaches_f32_tolerance(problem):
+    """The paper's two-precision CG: bulk iterations in bf16, reliable
+    updates in f32, converges to the f32 tolerance (Ref. [10] claim)."""
+    u, b = problem
+    up, bp = pack_gauge(u), pack_spinor(b)
+    up_lo = up.astype(jnp.bfloat16)
+    op_hi = lambda v: normal_op_packed(up, v, MASS)
+    op_lo = lambda v: normal_op_packed(up_lo, v, MASS)
+    rhs = dslash_dagger_packed(up, bp, MASS)
+    x, st_ = mpcg(op_lo, op_hi, rhs, tol=1e-6, inner_tol=5e-2,
+                  inner_maxiter=100, max_outer=40)
+    assert bool(st_.converged)
+    r = dslash_packed(up, x, MASS) - bp
+    rel = float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(bp.ravel()))
+    assert rel < 1e-5
+    # most work happened in the low-precision inner solver
+    assert int(st_.iterations) >= 3 * int(st_.outer_iterations)
+
+
+def test_mpcg_iteration_overhead_is_modest(problem):
+    """Mixed precision should not blow up total iteration count vs f32."""
+    u, b = problem
+    up, bp = pack_gauge(u), pack_spinor(b)
+    rhs = dslash_dagger_packed(up, bp, MASS)
+    op_hi = lambda v: normal_op_packed(up, v, MASS)
+    _, s_f32 = cg(op_hi, rhs, tol=1e-6, maxiter=500)
+    up_lo = up.astype(jnp.bfloat16)
+    op_lo = lambda v: normal_op_packed(up_lo, v, MASS)
+    _, s_mp = mpcg(op_lo, op_hi, rhs, tol=1e-6, inner_tol=5e-2,
+                   inner_maxiter=100, max_outer=40)
+    assert int(s_mp.iterations) <= 3 * int(s_f32.iterations)
+
+
+def test_cg_trace_monotone_tail(problem):
+    u, b = problem
+    op = lambda v: normal_op(u, v, MASS)
+    rhs = dslash_dagger(u, b, MASS)
+    _, hist = cg_trace(op, rhs, iters=30)
+    assert float(hist[-1]) < float(hist[0]) * 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cg_property_random_spd(seed):
+    """CG solves random SPD systems A = B B^T + I to tolerance."""
+    key = jax.random.PRNGKey(seed)
+    n = 24
+    bmat = jax.random.normal(key, (n, n), dtype=jnp.float32) / np.sqrt(n)
+    amat = bmat @ bmat.T + jnp.eye(n)
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+    x, st_ = cg(lambda v: amat @ v, rhs, tol=1e-6, maxiter=200)
+    assert bool(st_.converged)
+    assert float(jnp.linalg.norm(amat @ x - rhs)) < 1e-4 * max(
+        1.0, float(jnp.linalg.norm(rhs)))
+
+
+def test_solver_respects_maxiter(problem):
+    u, b = problem
+    op = lambda v: normal_op(u, v, MASS)
+    rhs = dslash_dagger(u, b, MASS)
+    _, st_ = cg(op, rhs, tol=1e-30, maxiter=5)
+    assert int(st_.iterations) == 5
+    assert not bool(st_.converged)

@@ -1,0 +1,57 @@
+"""Dry-run spec builders (no allocation) + scan-control equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.models.config import SHAPES
+from repro.models.scan_ctl import maybe_scan, scans_unrolled, unrolled_scans
+
+
+def test_maybe_scan_equivalence():
+    xs = jnp.arange(12.0).reshape(6, 2)
+
+    def f(c, x):
+        return c + jnp.sum(x), c
+    c1, y1 = jax.lax.scan(f, jnp.float32(0), xs)
+    with unrolled_scans():
+        assert scans_unrolled()
+        c2, y2 = maybe_scan(f, jnp.float32(0), xs)
+    assert not scans_unrolled()
+    assert float(c1) == float(c2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_unrolled_forward_matches_scanned(rng):
+    cfg = configs.get_smoke("recurrentgemma-9b")  # exercises segments+tail
+    params = T.init_params(cfg, rng)
+    toks = jax.random.randint(rng, (2, 24), 0, cfg.vocab_size)
+    a, _ = T.forward(cfg, params, toks)
+    with unrolled_scans():
+        b, _ = T.forward(cfg, params, toks)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+
+
+def test_skip_reason_long_context():
+    from repro.launch.specs import skip_reason
+    assert skip_reason("glm4-9b", "long_500k") is not None
+    assert skip_reason("rwkv6-1.6b", "long_500k") is None
+    assert skip_reason("recurrentgemma-9b", "long_500k") is None
+    assert skip_reason("glm4-9b", "train_4k") is None
+
+
+def test_vocab_padding_only_where_needed():
+    assert configs.get("seamless-m4t-large-v2").padded_vocab == 256256
+    assert configs.get("glm4-9b").padded_vocab == 151552  # already aligned
+
+
+def test_cell_enumeration_counts():
+    """40 assigned cells; long_500k runs only for sub-quadratic archs."""
+    from repro.launch.specs import skip_reason
+    cells = [(a, s) for a in configs.all_arch_names() for s in SHAPES]
+    assert len(cells) == 40
+    skipped = [c for c in cells if skip_reason(*c)]
+    assert len(skipped) == 8  # 8 full-attention archs × long_500k

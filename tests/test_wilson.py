@@ -1,0 +1,109 @@
+"""Dirac-Wilson operator: gamma algebra, Hermiticity structure, layouts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LatticeShape, dslash, dslash_dagger, field_dot,
+                        pack_gauge, pack_spinor, random_gauge, random_spinor,
+                        unit_gauge, unpack_spinor)
+from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, GAMMAS, GAMMA5,
+                               dslash_packed, dslash_dagger_packed,
+                               hop_term_packed, normal_op, normal_op_packed)
+
+LAT = LatticeShape(4, 4, 4, 8)
+MASS = 0.3
+
+
+def test_gamma_algebra():
+    for mu in range(4):
+        assert np.allclose(GAMMAS[mu] @ GAMMAS[mu], np.eye(4), atol=1e-7)
+        assert np.allclose(GAMMAS[mu].conj().T, GAMMAS[mu], atol=1e-7)
+        for nu in range(mu + 1, 4):
+            anti = GAMMAS[mu] @ GAMMAS[nu] + GAMMAS[nu] @ GAMMAS[mu]
+            assert np.allclose(anti, 0, atol=1e-7)
+    g5 = GAMMAS[0] @ GAMMAS[3] @ GAMMAS[2] @ GAMMAS[1]
+    # gamma5 is diagonal ±1 in this basis (overall sign conventional)
+    assert np.allclose(np.abs(np.diag(g5)), np.ones(4), atol=1e-7)
+    assert np.allclose(GAMMA5 @ GAMMA5, np.eye(4), atol=1e-7)
+
+
+def test_free_field_constant_mode(rng):
+    """With unit links, a constant spinor is an eigenvector: D psi = m psi."""
+    u = unit_gauge(LAT)
+    psi = jnp.ones(LAT.dims + (4, 3), dtype=jnp.complex64)
+    out = dslash(u, psi, MASS)
+    assert jnp.max(jnp.abs(out - MASS * psi)) < 1e-5
+
+
+def test_dslash_linearity(rng):
+    k1, k2, ku = jax.random.split(rng, 3)
+    u = random_gauge(ku, LAT)
+    a, b = random_spinor(k1, LAT), random_spinor(k2, LAT)
+    lhs = dslash(u, 2.0 * a + 1j * b, MASS)
+    rhs = 2.0 * dslash(u, a, MASS) + 1j * dslash(u, b, MASS)
+    assert jnp.max(jnp.abs(lhs - rhs)) < 1e-4
+
+
+def test_gamma5_hermiticity(rng):
+    """<phi, D psi> == <D^dag phi, psi> with D^dag = g5 D g5."""
+    k1, k2, ku = jax.random.split(rng, 3)
+    u = random_gauge(ku, LAT)
+    phi, psi = random_spinor(k1, LAT), random_spinor(k2, LAT)
+    lhs = complex(field_dot(phi, dslash(u, psi, MASS)))
+    rhs = complex(field_dot(dslash_dagger(u, phi, MASS), psi))
+    assert np.isclose(lhs, rhs, rtol=1e-4)
+
+
+def test_normal_op_hpd(rng):
+    k1, ku = jax.random.split(rng)
+    u = random_gauge(ku, LAT)
+    psi = random_spinor(k1, LAT)
+    quad = complex(field_dot(psi, normal_op(u, psi, MASS)))
+    assert abs(quad.imag) < 1e-3 * abs(quad.real)
+    assert quad.real > 0
+
+
+def test_packed_matches_natural(rng):
+    k1, ku = jax.random.split(rng)
+    u = random_gauge(ku, LAT)
+    psi = random_spinor(k1, LAT)
+    ref = dslash(u, psi, MASS)
+    out = unpack_spinor(dslash_packed(pack_gauge(u), pack_spinor(psi), MASS))
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+def test_packed_dagger_and_normal(rng):
+    k1, ku = jax.random.split(rng)
+    u = random_gauge(ku, LAT)
+    psi = random_spinor(k1, LAT)
+    up, pp = pack_gauge(u), pack_spinor(psi)
+    ref = dslash_dagger(u, psi, MASS)
+    out = unpack_spinor(dslash_dagger_packed(up, pp, MASS))
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+    refn = normal_op(u, psi, MASS)
+    outn = unpack_spinor(normal_op_packed(up, pp, MASS))
+    assert jnp.max(jnp.abs(outn - refn)) < 2e-4
+
+
+def test_hop_term_consistency(rng):
+    """Sum of mass term + 8 aligned hop terms == dslash_packed."""
+    k1, ku = jax.random.split(rng)
+    u = random_gauge(ku, LAT)
+    psi = random_spinor(k1, LAT)
+    up, pp = pack_gauge(u), pack_spinor(psi)
+    acc = (MASS + 4.0) * pp
+    ax = {0: 0, 1: 1, 2: 2, 3: 4}
+    for mu in range(4):
+        fwd = jnp.roll(pp, -1, axis=ax[mu])
+        acc = acc + hop_term_packed(up[mu], fwd, mu, forward=True)
+        bwd = jnp.roll(pp, 1, axis=ax[mu])
+        ub = jnp.roll(up[mu], 1, axis=ax[mu] if mu < 3 else 4)
+        acc = acc + hop_term_packed(ub, bwd, mu, forward=False)
+    ref = dslash_packed(up, pp, MASS)
+    assert jnp.max(jnp.abs(acc - ref)) < 1e-5
+
+
+def test_flops_constant():
+    assert DSLASH_FLOPS_PER_SITE == 1320  # the standard Wilson count
