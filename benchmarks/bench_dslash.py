@@ -13,7 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import LatticeShape, dslash_flops, pack_gauge, pack_spinor
+from repro.core import LatticeShape, dslash_flops
 from repro.core.wilson import dslash_packed
 from repro.data import lattice_problem
 

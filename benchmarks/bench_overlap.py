@@ -25,20 +25,20 @@ from repro.core import LatticeShape, pack_gauge, pack_spinor
 from repro.core import distributed as dist
 from repro.data import lattice_problem
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 lat = LatticeShape(8, 8, 8, 8)
 up, pp = lattice_problem(lat, mass=0.1)
 upd, ppd = dist.shard_lattice_fields(mesh, up, pp)
 psi_spec, gauge_spec, sharded = dist.lattice_specs(mesh)
 
-halo = jax.jit(jax.shard_map(lambda u, p: dist.dslash_halo(u, p, 0.1, sharded),
-                             mesh=mesh, in_specs=(gauge_spec, psi_spec),
-                             out_specs=psi_spec))
+halo = jax.jit(shard_map(lambda u, p: dist.dslash_halo(u, p, 0.1, sharded),
+                         mesh=mesh, in_specs=(gauge_spec, psi_spec),
+                         out_specs=psi_spec))
 from repro.core.wilson import dslash_packed
-bulk = jax.jit(jax.shard_map(lambda u, p: dslash_packed(u, p, 0.1),
-                             mesh=mesh, in_specs=(gauge_spec, psi_spec),
-                             out_specs=psi_spec))
+bulk = jax.jit(shard_map(lambda u, p: dslash_packed(u, p, 0.1),
+                         mesh=mesh, in_specs=(gauge_spec, psi_spec),
+                         out_specs=psi_spec))
 
 def timeit(f):
     f(upd, ppd).block_until_ready()
@@ -65,7 +65,7 @@ def run() -> list[tuple[str, float, str]]:
                        capture_output=True, text=True, timeout=560)
     if r.returncode != 0:
         return [("overlap_halo_vs_bulk", -1.0, "FAILED:" + r.stderr[-200:])]
-    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][-1]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")][-1]
     d = json.loads(line[len("RESULT"):])
     return [("dslash_halo_8dev", d["t_halo_us"],
              f"overhead_vs_bulk={d['halo_overhead']:.2f}x;"

@@ -10,11 +10,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
-from benchmarks import (bench_dslash, bench_mixed_precision, bench_overlap,
-                        bench_solvers, roofline)
+# Make `python benchmarks/run.py` work from anywhere: the interpreter puts
+# benchmarks/ (not the repo root) on sys.path for direct script runs.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (bench_dslash, bench_mixed_precision,  # noqa: E402
+                        bench_overlap, bench_solvers, roofline)  # noqa: E402
 
 MODULES = [("dslash", bench_dslash),
            ("mixed_precision", bench_mixed_precision),

@@ -1,0 +1,50 @@
+"""Compatibility shims over the moving parts of the jax API.
+
+The package targets current jax but must also run (and pass tier-1 CI) on
+older releases such as 0.4.x, where:
+
+* ``jax.shard_map`` is still ``jax.experimental.shard_map.shard_map`` and
+  the replication-check kwarg is ``check_rep`` rather than ``check_vma``;
+* ``jax.make_mesh`` has no ``axis_types`` parameter (and
+  ``jax.sharding.AxisType`` does not exist).  ``AxisType.Auto`` is the
+  default on versions that have it, so omitting the argument is
+  behaviour-preserving everywhere.
+
+Only shims for APIs this package actually uses belong here.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with all axes in Auto sharding mode.
+
+    Auto is the default ``axis_types`` on jax versions that support the
+    parameter, so this simply omits it for portability.  Releases older
+    than ``jax.make_mesh`` itself (< 0.4.35) fall back to building the
+    Mesh from ``mesh_utils.create_device_mesh``.
+    """
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shapes, names)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shapes), names)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` across jax versions.
+
+    Maps ``check_vma`` onto the old ``check_rep`` name when running on a
+    jax that predates the rename/promotion out of ``jax.experimental``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -4,19 +4,26 @@ the Dirac-Wilson operator, adapted from FPGA dataflow to TPU (see DESIGN.md).
 Public surface:
   lattice   — geometry, SU(3) fields, layout packing
   wilson    — the Dirac-Wilson operator (natural + packed layouts)
-  solvers   — cg / cgnr / mpcg / pipecg / bicgstab
+  solvers   — cg / cgnr / cgnr_eo / mpcg / mpcg_eo / pipecg / bicgstab
+  eo        — even-odd (Schur) preconditioned solves, end to end
   precision — (low, high) precision-pair policies
   distributed — shard_map domain decomposition + halo-overlap dslash
 """
 
-from repro.core.lattice import (LatticeShape, field_dot, field_norm2,
-                                pack_gauge, pack_spinor, random_gauge,
-                                random_spinor, unit_gauge, unpack_gauge,
-                                unpack_spinor)
+from repro.core.lattice import (LatticeShape, complex_to_real_pair,
+                                eo_row_offset, field_dot, field_norm2,
+                                merge_eo, merge_eo_gauge, pack_gauge,
+                                pack_spinor, parity_masks, random_gauge,
+                                random_spinor, real_pair_to_complex,
+                                split_eo, split_eo_gauge, unit_gauge,
+                                unpack_gauge, unpack_spinor)
 from repro.core.precision import PrecisionPolicy
 from repro.core.solvers import (SolveStats, bicgstab, cg, cg_trace, cgnr,
-                                mpcg, pipecg)
+                                cgnr_eo, mpcg, mpcg_eo, pipecg)
 from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, apply_gamma5, dslash,
                                dslash_dagger, dslash_dagger_packed,
-                               dslash_flops, dslash_packed, normal_op,
-                               normal_op_packed)
+                               dslash_eo, dslash_flops, dslash_oe,
+                               dslash_packed, normal_op, normal_op_packed,
+                               schur_dagger, schur_normal_op, schur_op)
+from repro.core.eo import (EOOperators, eo_operators, solve_wilson_eo,
+                           solve_wilson_eo_mp)

@@ -30,10 +30,10 @@ from typing import Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import solvers
 from repro.core.wilson import (apply_gamma5_packed, dslash_packed,
                                hop_term_packed)
@@ -190,7 +190,7 @@ def solve_wilson(mesh: Mesh, up: jax.Array, b: jax.Array, mass, *,
             return x.astype(b_l.dtype), st
         raise ValueError(f"unknown solver {solver!r}")
 
-    shmapped = jax.shard_map(
+    shmapped = compat.shard_map(
         local_solve, mesh=mesh,
         in_specs=(gauge_spec, psi_spec),
         out_specs=(psi_spec, solvers.SolveStats(P(), P(), P(), P())),

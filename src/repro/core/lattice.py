@@ -20,7 +20,6 @@ The packing functions below are exact bijections; tests round-trip them.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -133,6 +132,116 @@ def unpack_gauge(p: jax.Array, dtype=jnp.complex64) -> jax.Array:
     assert g == GAUGE_G
     q = jnp.moveaxis(p, 5, 4).reshape(d, t, z, y, x, NCOL, NCOL, 2)
     return (q[..., 0] + 1j * q[..., 1]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Even-odd (red-black) parity geometry
+# ---------------------------------------------------------------------------
+#
+# A site (t, z, y, x) has parity (t + z + y + x) mod 2; the Wilson hopping
+# term only connects sites of OPPOSITE parity, which is what makes the
+# Schur reduction in :mod:`repro.core.wilson` possible.  Half-lattice
+# fields compress the X axis by 2: within the row (t, z, y) the sites of a
+# given parity sit at x = 2*j + s where the row offset s depends only on
+# (t + z + y) mod 2.  Compressed fields keep the natural trailing axes, so
+# an even-parity spinor is (T, Z, Y, X//2, 4, 3) and ``pack_spinor`` /
+# ``unpack_spinor`` apply to half fields unchanged.
+#
+# The split/merge bijections only require an even X extent (asserted) —
+# the compression never crosses rows.  The even-odd OPERATORS in
+# repro.core.wilson additionally need even T/Z/Y extents: with periodic
+# boundaries an odd extent creates an odd cycle, the lattice graph stops
+# being bipartite, and the hopping term no longer changes parity across
+# the wrap.
+
+
+def eo_row_offset(t: int, z: int, y: int) -> np.ndarray:
+    """x-offset of EVEN-parity sites in each (t, z, y) row, shape (T,Z,Y).
+
+    Even sites of row (t, z, y) are x = 2*j + s with s = (t+z+y) mod 2;
+    odd sites are x = 2*j + (1 - s).  Returned as a NumPy int array so it
+    folds to a constant under ``jit``.
+    """
+    tt, zz, yy = np.meshgrid(np.arange(t), np.arange(z), np.arange(y),
+                             indexing="ij")
+    return ((tt + zz + yy) % 2).astype(np.int32)
+
+
+def parity_masks(lat: LatticeShape) -> tuple[np.ndarray, np.ndarray]:
+    """(even_mask, odd_mask) boolean site masks of shape (T, Z, Y, X)."""
+    tt, zz, yy, xx = np.meshgrid(np.arange(lat.t), np.arange(lat.z),
+                                 np.arange(lat.y), np.arange(lat.x),
+                                 indexing="ij")
+    even = (tt + zz + yy + xx) % 2 == 0
+    return even, ~even
+
+
+def _eo_row_sel(t: int, z: int, y: int, n_rest: int) -> jax.Array:
+    """Broadcastable bool: True where the even-site row offset is 0."""
+    s = eo_row_offset(t, z, y)
+    return jnp.asarray(s == 0).reshape((t, z, y, 1) + (1,) * n_rest)
+
+
+def split_eo(field: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split a natural-layout site field into (even, odd) half fields.
+
+    Args:
+      field: (T, Z, Y, X, *rest) with even X — e.g. a spinor (T,Z,Y,X,4,3).
+    Returns:
+      (even, odd), each (T, Z, Y, X//2, *rest).  Compressed index j of the
+      even field addresses site x = 2*j + (t+z+y)%2, the odd field the
+      complementary offset.  Exact bijection with :func:`merge_eo`.
+    """
+    t, z, y, x = field.shape[:4]
+    assert x % 2 == 0, f"even-odd split needs even X extent, got {x}"
+    rest = field.shape[4:]
+    pair = field.reshape((t, z, y, x // 2, 2) + rest)
+    lo, hi = pair[:, :, :, :, 0], pair[:, :, :, :, 1]  # x = 2j and 2j+1
+    sel = _eo_row_sel(t, z, y, len(rest))
+    even = jnp.where(sel, lo, hi)
+    odd = jnp.where(sel, hi, lo)
+    return even, odd
+
+
+def merge_eo(even: jax.Array, odd: jax.Array) -> jax.Array:
+    """Inverse of :func:`split_eo`: (T,Z,Y,X//2,*rest) pair -> (T,Z,Y,X,*rest)."""
+    t, z, y, xh = even.shape[:4]
+    rest = even.shape[4:]
+    sel = _eo_row_sel(t, z, y, len(rest))
+    lo = jnp.where(sel, even, odd)
+    hi = jnp.where(sel, odd, even)
+    pair = jnp.stack([lo, hi], axis=4)
+    return pair.reshape((t, z, y, 2 * xh) + rest)
+
+
+def split_eo_gauge(u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split a (4, T, Z, Y, X, 3, 3) gauge field into per-parity link fields.
+
+    Returns (u_e, u_o), each (4, T, Z, Y, X//2, 3, 3): ``u_e[mu]`` holds the
+    links U_mu(x) attached to EVEN sites x (compressed as in
+    :func:`split_eo`), ``u_o[mu]`` those attached to odd sites.
+    """
+    return jax.vmap(split_eo)(u)
+
+
+def merge_eo_gauge(u_e: jax.Array, u_o: jax.Array) -> jax.Array:
+    """Inverse of :func:`split_eo_gauge`."""
+    return jax.vmap(merge_eo)(u_e, u_o)
+
+
+# ---------------------------------------------------------------------------
+# Complex <-> real-pair views (for low-precision storage of complex fields)
+# ---------------------------------------------------------------------------
+
+def complex_to_real_pair(v: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(..., ) complex -> (..., 2) real, castable to bf16 for narrow storage."""
+    return jnp.stack([jnp.real(v), jnp.imag(v)], axis=-1).astype(dtype)
+
+
+def real_pair_to_complex(w: jax.Array, dtype=jnp.complex64) -> jax.Array:
+    """Inverse of :func:`complex_to_real_pair` (widens before recombining)."""
+    wf = w.astype(jnp.float32 if dtype == jnp.complex64 else jnp.float64)
+    return (wf[..., 0] + 1j * wf[..., 1]).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -25,8 +25,6 @@ Design notes
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -129,13 +127,86 @@ def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
 
 
 # ---------------------------------------------------------------------------
+# Even-odd (Schur) preconditioned CGNR
+# ---------------------------------------------------------------------------
+#
+# For a parity-blocked operator  D = [[M_ee, D_eo], [D_oe, M_oo]]  (the
+# Wilson hopping term only couples opposite parities), eliminating the odd
+# block of ``D x = b`` leaves the half-size Schur system
+#
+#     D_hat x_e = b_hat,    D_hat = M_ee - D_eo M_oo^{-1} D_oe
+#                           b_hat = b_e  - D_eo M_oo^{-1} b_o
+#
+# and the odd solution follows by back-substitution
+#
+#     x_o = M_oo^{-1} (b_o - D_oe x_e).
+#
+# ``D_hat`` inherits gamma5-hermiticity from D (see repro.core.wilson), so
+# CGNR applies unchanged: CG on ``D_hat^dag D_hat x_e = D_hat^dag b_hat``.
+# All vectors are half the full-lattice size and the reduced spectrum is
+# better conditioned — empirically ~2x fewer iterations at equal tolerance.
+# The solvers below stay operator-agnostic: they take the blocks as
+# callables, so the same code runs single-device or inside ``shard_map``
+# with psum-ing ``dot``/``norm2`` injected, exactly like ``cg``.
+
+
+def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
+            b_e: Array, b_o: Array, *, tol: float = 1e-8,
+            maxiter: int = 1000, dot=field_dot,
+            norm2=field_norm2) -> tuple[tuple[Array, Array], SolveStats]:
+    """Even-odd Schur-preconditioned CGNR.
+
+    Args:
+      dhat, dhat_dag: the Schur operator D_hat and its adjoint on
+        even-parity half fields.
+      d_eo, d_oe:     the parity-changing hopping blocks.
+      m_inv:          applies M_oo^{-1} (for Wilson: scale by 1/(m+4r)).
+      b_e, b_o:       the RHS split by parity.
+    Returns:
+      ((x_e, x_o), SolveStats) — merge with ``lattice.merge_eo`` for the
+      full-lattice solution.  ``iterations`` counts the half-size CG steps.
+    """
+    b_hat = b_e - d_eo(m_inv(b_o))
+    x_e, stats = cg(lambda v: dhat_dag(dhat(v)), dhat_dag(b_hat),
+                    tol=tol, maxiter=maxiter, dot=dot, norm2=norm2)
+    x_o = m_inv(b_o - d_oe(x_e))
+    return (x_e, x_o), stats
+
+
+def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
+            m_inv: Op, b_e: Array, b_o: Array, *,
+            tol: float = 1e-6, inner_tol: float = 5e-2,
+            inner_maxiter: int = 200, max_outer: int = 50,
+            low_dtype=jnp.bfloat16, to_low=None, to_high=None,
+            dot=field_dot, norm2=field_norm2,
+            ) -> tuple[tuple[Array, Array], SolveStats]:
+    """Even-odd reduction composed with mixed-precision reliable-update CG.
+
+    The paper's two central optimizations finally compose: the half-size
+    Schur normal system is solved by ``mpcg`` (bulk iterations through
+    ``a_low``, the low-precision D_hat^dag D_hat; true residuals through
+    ``a_high``), then the odd sites are back-substituted in high precision.
+    ``to_low``/``to_high`` convert iterates between representations (see
+    ``mpcg``); complex half fields use the real-pair view helpers in
+    :mod:`repro.core.lattice` since complex bf16 does not exist.
+    """
+    b_hat = b_e - d_eo(m_inv(b_o))
+    x_e, stats = mpcg(a_low, a_high, dhat_dag(b_hat), tol=tol,
+                      inner_tol=inner_tol, inner_maxiter=inner_maxiter,
+                      max_outer=max_outer, low_dtype=low_dtype,
+                      to_low=to_low, to_high=to_high, dot=dot, norm2=norm2)
+    x_o = m_inv(b_o - d_oe(x_e))
+    return (x_e, x_o), stats
+
+
+# ---------------------------------------------------------------------------
 # Mixed-precision reliable-update CG  (the paper's Ref. [10] variant)
 # ---------------------------------------------------------------------------
 
 def mpcg(op_low: Op, op_high: Op, b: Array, *,
          tol: float = 1e-6, inner_tol: float = 5e-2,
          inner_maxiter: int = 200, max_outer: int = 50,
-         low_dtype=jnp.bfloat16,
+         low_dtype=jnp.bfloat16, to_low=None, to_high=None,
          dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
     """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
     high-precision true-residual "reliable updates".
@@ -146,8 +217,18 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     Equivalent to defect correction / iterative refinement with a CG
     inner solver; converges to the high-precision tolerance while doing
     most arithmetic in the cheap type.
+
+    ``to_low``/``to_high`` convert a vector between the high- and
+    low-precision REPRESENTATIONS and default to plain dtype casts.
+    Inject them when the representations differ structurally — e.g.
+    complex64 fields stored as bf16 real pairs (complex bf16 does not
+    exist); ``op_low`` then operates on the low representation.
     """
     high = b.dtype
+    if to_low is None:
+        to_low = lambda v: v.astype(low_dtype)
+    if to_high is None:
+        to_high = lambda v: v.astype(high)
     bs = _real(norm2(b))
     limit = (tol ** 2) * bs
 
@@ -157,10 +238,10 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
 
     def body(carry):
         outer, inner_total, x, r, rs = carry
-        r_low = r.astype(low_dtype)
+        r_low = to_low(r)
         d, st = cg(op_low, r_low, tol=inner_tol, maxiter=inner_maxiter,
                    dot=dot, norm2=norm2)
-        x = x + d.astype(high)
+        x = x + to_high(d)
         r = b - op_high(x)                     # reliable update (true residual)
         rs = _real(norm2(r))
         return (outer + 1, inner_total + st.iterations, x, r, rs)

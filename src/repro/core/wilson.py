@@ -22,6 +22,37 @@ Directions are ordered (t, z, y, x) matching the array axes.  Gamma
 matrices are in the DeGrand-Rossi basis; ``gamma5 D gamma5 = D^dag`` holds
 and is tested, giving the daggered operator and the HPD normal operator
 ``D^dag D`` used by CGNR.
+
+Even-odd (Schur) decomposition
+------------------------------
+
+The hopping term only connects sites of opposite parity, so in the
+even/odd site ordering of :mod:`repro.core.lattice` the operator is
+2x2 block-structured::
+
+    D = [ M_ee   D_eo ]        M_ee = M_oo = (m + 4r) * 1
+        [ D_oe   M_oo ]        D_eo : odd -> even hops, D_oe : even -> odd
+
+Block-eliminating the odd sites from ``D x = b`` gives the Schur
+complement system on the EVEN sublattice only::
+
+    D_hat x_e = b_hat,   D_hat = M_ee - D_eo M_oo^{-1} D_oe
+                         b_hat = b_e  - D_eo M_oo^{-1} b_o
+
+followed by back-substitution ``x_o = M_oo^{-1} (b_o - D_oe x_e)``.
+Because ``gamma5 D_eo gamma5 = D_oe^dag`` (each hop inherits the
+gamma5-hermiticity of the full operator) and ``M`` is a real scalar,
+``gamma5 D_hat gamma5 = D_hat^dag`` holds on the half lattice too — so
+CGNR applies to ``D_hat`` unchanged, on vectors HALF the size and with a
+better-conditioned spectrum (empirically ~2x fewer iterations; see
+``benchmarks/bench_solvers.py``).  Implemented by ``dslash_eo`` /
+``dslash_oe`` / ``schur_op`` below; solver orchestration lives in
+:mod:`repro.core.eo`.
+
+Half-lattice fields compress X by 2 (see ``split_eo``): within a row
+(t, z, y) the neighbour of compressed index j in the x direction is
+j + s (forward) or j - (1 - s) (backward) where s is the output row's
+parity offset; t/z/y hops keep j and roll the row axes.
 """
 
 from __future__ import annotations
@@ -32,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lattice import NCOL, NDIRS, NSPIN
+from repro.core.lattice import NCOL, NDIRS, NSPIN, eo_row_offset
 
 # ---------------------------------------------------------------------------
 # Gamma matrices, DeGrand-Rossi basis, order (t, z, y, x) = axes (0,1,2,3)
@@ -121,6 +152,108 @@ def dslash_dagger(u: jax.Array, psi: jax.Array, mass, r: float = 1.0):
 def normal_op(u: jax.Array, psi: jax.Array, mass, r: float = 1.0):
     """A = D^dag D — Hermitian positive definite; the CGNR operator."""
     return dslash_dagger(u, dslash(u, psi, mass, r=r), mass, r=r)
+
+
+# ---------------------------------------------------------------------------
+# Even-odd hopping operators and the Schur complement (natural layout)
+# ---------------------------------------------------------------------------
+
+def _hop_half(u_out: jax.Array, u_nbr: jax.Array, psi: jax.Array,
+              s_out: np.ndarray, r: float) -> jax.Array:
+    """Hopping term of D restricted to one parity's output sites.
+
+    Args:
+      u_out: (4, T, Z, Y, Xh, 3, 3) links attached to the OUTPUT-parity
+             sites (forward hops use U_mu(x) at the output site x).
+      u_nbr: links attached to the opposite-parity (neighbour) sites
+             (backward hops use U_mu(x - mu)^dag at the neighbour site).
+      psi:   (T, Z, Y, Xh, 4, 3) opposite-parity spinor half field.
+      s_out: (T, Z, Y) int row offsets of the output parity (see
+             ``eo_row_offset``): output sites sit at x = 2*j + s_out.
+    Returns:
+      (T, Z, Y, Xh, 4, 3) = -1/2 sum_mu [ (r - g_mu) U psi(x+mu)
+                                        + (r + g_mu) U^dag psi(x-mu) ].
+
+    For mu in {t, z, y} the neighbour keeps its compressed x index j and
+    the row axis rolls.  For mu = x the neighbour index is j + s_out
+    (forward) / j - (1 - s_out) (backward) — a row-parity-dependent shift
+    implemented as a ``where`` between the field and its rolled copy.
+    Periodic wrap in x is exact because the X extent is even.
+    """
+    t, z, y = psi.shape[:3]
+    assert t % 2 == z % 2 == y % 2 == 0, (
+        "even-odd operators need even T/Z/Y extents: an odd periodic "
+        f"extent breaks bipartiteness, got {(t, z, y)}")
+    pm, pp = _projectors(r)
+    pm = jnp.asarray(pm, dtype=psi.dtype)
+    pp = jnp.asarray(pp, dtype=psi.dtype)
+    sel_s = jnp.asarray(s_out == 1).reshape(s_out.shape + (1, 1, 1))
+    sel_g = sel_s  # same (T,Z,Y,1,1,1) broadcast works for (T,Z,Y,Xh,3,3)
+
+    out = jnp.zeros_like(psi)
+    for mu in range(NDIRS):
+        if mu < 3:  # t, z, y: plain rolls on the uncompressed row axes
+            fwd = jnp.roll(psi, -1, axis=mu)
+            u_fwd = u_out[mu]
+            bwd = jnp.roll(psi, 1, axis=mu)
+            u_bwd = jnp.roll(u_nbr[mu], 1, axis=mu)
+        else:  # x: compressed axis 3, neighbour index depends on s_out
+            fwd = jnp.where(sel_s, jnp.roll(psi, -1, axis=3), psi)
+            u_fwd = u_out[3]
+            bwd = jnp.where(sel_s, psi, jnp.roll(psi, 1, axis=3))
+            u_bwd = jnp.where(sel_g, u_nbr[3], jnp.roll(u_nbr[3], 1, axis=3))
+        hf = jnp.einsum("tzyjab,tzyjsb->tzyjsa", u_fwd, fwd)
+        hf = jnp.einsum("sp,tzyjpa->tzyjsa", pm[mu], hf)
+        hb = jnp.einsum("tzyjba,tzyjsb->tzyjsa", jnp.conj(u_bwd), bwd)
+        hb = jnp.einsum("sp,tzyjpa->tzyjsa", pp[mu], hb)
+        out = out - 0.5 * (hf + hb)
+    return out
+
+
+@partial(jax.jit, static_argnames=("r",))
+def dslash_eo(u_e: jax.Array, u_o: jax.Array, psi_o: jax.Array,
+              r: float = 1.0) -> jax.Array:
+    """D_eo: hopping term from an ODD half field onto EVEN output sites.
+
+    ``u_e``/``u_o`` are the per-parity link fields from ``split_eo_gauge``;
+    ``psi_o`` is (T, Z, Y, Xh, 4, 3) odd-parity.  Mass term excluded.
+    """
+    t, z, y = psi_o.shape[:3]
+    return _hop_half(u_e, u_o, psi_o, eo_row_offset(t, z, y), r)
+
+
+@partial(jax.jit, static_argnames=("r",))
+def dslash_oe(u_e: jax.Array, u_o: jax.Array, psi_e: jax.Array,
+              r: float = 1.0) -> jax.Array:
+    """D_oe: hopping term from an EVEN half field onto ODD output sites."""
+    t, z, y = psi_e.shape[:3]
+    return _hop_half(u_o, u_e, psi_e, 1 - eo_row_offset(t, z, y), r)
+
+
+@partial(jax.jit, static_argnames=("r",))
+def schur_op(u_e: jax.Array, u_o: jax.Array, psi_e: jax.Array,
+             mass, r: float = 1.0) -> jax.Array:
+    """Schur complement D_hat psi_e = (m+4r) psi_e - D_eo D_oe psi_e / (m+4r).
+
+    Acts on even-parity half fields only; gamma5-hermitian (tested), so
+    CGNR on ``D_hat^dag D_hat`` converges exactly as for the full D.
+    """
+    m = mass + 4.0 * r
+    return m * psi_e - dslash_eo(u_e, u_o, dslash_oe(u_e, u_o, psi_e, r=r),
+                                 r=r) / m
+
+
+@partial(jax.jit, static_argnames=("r",))
+def schur_dagger(u_e, u_o, psi_e, mass, r: float = 1.0):
+    """D_hat^dag = gamma5 D_hat gamma5 (gamma5 acts on spin axis -2)."""
+    return apply_gamma5(schur_op(u_e, u_o, apply_gamma5(psi_e), mass, r=r))
+
+
+@partial(jax.jit, static_argnames=("r",))
+def schur_normal_op(u_e, u_o, psi_e, mass, r: float = 1.0):
+    """A_hat = D_hat^dag D_hat — HPD on the even sublattice."""
+    return schur_dagger(u_e, u_o, schur_op(u_e, u_o, psi_e, mass, r=r),
+                        mass, r=r)
 
 
 # ---------------------------------------------------------------------------

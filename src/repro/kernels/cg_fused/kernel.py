@@ -20,8 +20,6 @@ matches the packed-field flattening, lane axis innermost.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

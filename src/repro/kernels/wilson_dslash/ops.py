@@ -14,7 +14,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.wilson import apply_gamma5_packed, dslash_packed
 from repro.kernels.wilson_dslash.kernel import dslash_pallas

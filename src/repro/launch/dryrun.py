@@ -190,7 +190,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str):
     # 2) cost pass: XLA counts while bodies once, so lower reduced-depth
     #    configs with every scan unrolled and extrapolate linearly in depth
     #    (EXPERIMENTS.md §Conventions)
-    from repro.models.transformer import stack_plan
     p = len(cfg.block_pattern) if cfg.family == "hybrid" else 1
     k1, k2 = p, 2 * p
     _, comp1, *_ = _lower_compile(jax, mesh, arch, shape_name,

@@ -21,7 +21,6 @@ same schema as the LM cells.
 """
 
 import argparse
-import functools
 import json
 import subprocess
 import sys

@@ -18,7 +18,6 @@ import dataclasses
 import json
 import subprocess
 import sys
-import time
 
 # (tag, arch, shape, overrides)
 H1 = [  # glm4-9b train_4k: activation-memory ladder

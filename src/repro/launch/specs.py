@@ -11,7 +11,6 @@ allocation (weak-type-correct ShapeDtypeStructs all the way down).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -21,7 +21,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -29,7 +28,6 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import steps as S
-from repro.models.config import SHAPES
 from repro.optim import AdamWConfig, warmup_cosine
 
 

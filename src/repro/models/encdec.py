@@ -9,8 +9,6 @@ self-attention KV cache plus a prefill-computed cross-attention cache.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

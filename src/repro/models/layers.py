@@ -13,7 +13,6 @@ Conventions:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +85,7 @@ def _flash_fwd_inner(qg, k, v, q_pos, kv_pos, causal, window, chunk):
     pc = kv_pos.reshape(-1, chunk)
 
     def step(carry, blk):
-        m, l, acc = carry
+        m, denom, acc = carry
         kj, vj, pj = blk
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
                        preferred_element_type=F32) * scale
@@ -96,18 +95,18 @@ def _flash_fwd_inner(qg, k, v, q_pos, kv_pos, causal, window, chunk):
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
         p = jnp.where(valid[None, None, None], p, 0.0)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        denom_new = denom * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(k.dtype), vj,
                         preferred_element_type=F32)
         acc_new = acc * corr[..., None] + pv
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((b, hkv, g, sq), NEG_INF, F32)
     l0 = jnp.zeros((b, hkv, g, sq), F32)
     a0 = jnp.zeros((b, hkv, g, sq, hd), F32)
-    (m, l, acc), _ = maybe_scan(step, (m0, l0, a0), (kc, vc, pc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,hkv,g,sq,hd) f32
-    lse = m + jnp.log(jnp.maximum(l, 1e-30))           # logsumexp
+    (m, denom, acc), _ = maybe_scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]   # (b,hkv,g,sq,hd) f32
+    lse = m + jnp.log(jnp.maximum(denom, 1e-30))       # logsumexp
     return out, lse
 
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as L
-from repro.models.config import ModelConfig, MoEConfig
+from repro.models.config import ModelConfig
 from repro.parallel import sharding as shd
 from jax.sharding import NamedSharding, PartitionSpec as P
 

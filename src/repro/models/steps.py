@@ -9,17 +9,16 @@ math, m/v moment dtype per-config.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import encdec as ED
 from repro.models import transformer as TF
-from repro.models.config import ModelConfig, ShapeConfig
-from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.parallel import sharding as shd
 
 F32 = jnp.float32

@@ -17,7 +17,6 @@ API (pure functions, params are pytrees of arrays):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

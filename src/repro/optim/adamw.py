@@ -11,7 +11,6 @@ The paper's two-precision discipline (T1) carried into training:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ family's parameter tree gets consistent specs without per-arch tables.
 from __future__ import annotations
 
 import contextlib
-from typing import Iterable
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

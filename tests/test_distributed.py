@@ -19,9 +19,10 @@ from repro.core import *
 from repro.core import distributed as dist
 from repro.core.wilson import dslash_packed
 
+from repro.compat import make_mesh, shard_map
+
 out = {}
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 lat = LatticeShape(4, 4, 4, 8)
 ku, kp = jax.random.split(jax.random.PRNGKey(3))
 U = random_gauge(ku, lat); psi = random_spinor(kp, lat); m = 0.3
@@ -29,14 +30,14 @@ up, pp = pack_gauge(U), pack_spinor(psi)
 upd, ppd = dist.shard_lattice_fields(mesh, up, pp)
 
 psi_spec, gauge_spec, sharded = dist.lattice_specs(mesh)
-f = jax.jit(jax.shard_map(lambda u, p: dist.dslash_halo(u, p, m, sharded),
-                          mesh=mesh, in_specs=(gauge_spec, psi_spec),
-                          out_specs=psi_spec))
+f = jax.jit(shard_map(lambda u, p: dist.dslash_halo(u, p, m, sharded),
+                      mesh=mesh, in_specs=(gauge_spec, psi_spec),
+                      out_specs=psi_spec))
 err = float(jnp.max(jnp.abs(f(upd, ppd) - dslash_packed(up, pp, m))))
 out["halo_dslash_err"] = err
 
 # the TPU path: Pallas plane-streaming kernel as the bulk stencil
-fk = jax.jit(jax.shard_map(
+fk = jax.jit(shard_map(
     lambda u, p: dist.dslash_halo(u, p, m, sharded, use_pallas=True),
     mesh=mesh, in_specs=(gauge_spec, psi_spec), out_specs=psi_spec,
     check_vma=False))
@@ -57,8 +58,7 @@ from repro.models import steps as S
 from repro.optim import AdamWConfig
 from repro.data import SyntheticLM
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 2), ("data", "model"))
 cfg = configs.get_smoke("glm4-9b")
 opt = AdamWConfig(lr=1e-3)
 state = S.init_train_state(cfg, jax.random.PRNGKey(0), opt)
@@ -88,7 +88,7 @@ def results():
     r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                        capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, r.stderr[-3000:]
-    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][-1]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 

@@ -1,7 +1,6 @@
 """Unit tests for the dry-run analysis tooling (no 512-device env needed:
 these test the pure parsing/extrapolation helpers)."""
 
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import _extrapolate, collective_bytes

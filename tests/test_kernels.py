@@ -4,16 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (LatticeShape, pack_gauge, pack_spinor, random_gauge,
                         random_spinor)
 from repro.kernels.cg_fused import (cg_pallas, cg_update, cg_update_ref,
-                                    cg_xpay, cg_xpay_ref)
+                                    cg_xpay)
 from repro.kernels.wilson_dslash import dslash as dslash_k
 from repro.kernels.wilson_dslash import dslash_ref
 from repro.kernels.wilson_dslash.ops import normal_op as normal_k
 from repro.core.wilson import dslash_dagger_packed
+from repro.testing import maybe_hypothesis
+
+given, settings, st = maybe_hypothesis()
 
 SHAPES = [LatticeShape(2, 2, 4, 8), LatticeShape(4, 4, 4, 8),
           LatticeShape(3, 6, 8, 16), LatticeShape(2, 8, 8, 8)]

@@ -4,11 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (LatticeShape, field_dot, field_norm2, pack_gauge,
-                        pack_spinor, random_gauge, random_spinor, unit_gauge,
-                        unpack_gauge, unpack_spinor)
+from repro.core import (LatticeShape, field_dot, field_norm2, merge_eo,
+                        merge_eo_gauge, pack_gauge, pack_spinor, parity_masks,
+                        random_gauge, random_spinor, split_eo, split_eo_gauge,
+                        unit_gauge, unpack_gauge, unpack_spinor)
+from repro.testing import maybe_hypothesis
+
+given, settings, st = maybe_hypothesis()
 
 LAT = LatticeShape(4, 4, 4, 8)
 
@@ -46,6 +49,49 @@ def test_packed_layout_axes(rng):
     s_idx = (1 * 3 + 2) * 2 + 1
     assert np.isclose(float(p[2, 1, 3, s_idx, 5]),
                       float(jnp.imag(psi[2, 1, 3, 5, 1, 2])), atol=1e-6)
+
+
+def test_split_merge_eo_roundtrip(rng):
+    psi = random_spinor(rng, LAT)
+    e, o = split_eo(psi)
+    assert e.shape == (4, 4, 4, 4, 4, 3) and o.shape == e.shape
+    assert jnp.array_equal(merge_eo(e, o), psi)  # exact bijection
+
+
+def test_split_eo_gauge_roundtrip(rng):
+    u = random_gauge(rng, LAT)
+    ue, uo = split_eo_gauge(u)
+    assert ue.shape == (4, 4, 4, 4, 4, 3, 3)
+    assert jnp.array_equal(merge_eo_gauge(ue, uo), u)
+
+
+def test_split_eo_site_addressing(rng):
+    """Even field index (t,z,y,j) addresses site x = 2j + (t+z+y)%2."""
+    psi = random_spinor(rng, LAT)
+    e, o = split_eo(psi)
+    full = np.asarray(psi)
+    for (t, z, y, j) in [(0, 0, 0, 1), (1, 0, 0, 2), (2, 3, 1, 0),
+                         (3, 3, 3, 3)]:
+        s = (t + z + y) % 2
+        assert np.array_equal(np.asarray(e)[t, z, y, j], full[t, z, y, 2 * j + s])
+        assert np.array_equal(np.asarray(o)[t, z, y, j],
+                              full[t, z, y, 2 * j + 1 - s])
+
+
+def test_parity_masks_partition():
+    even, odd = parity_masks(LAT)
+    assert even.shape == LAT.dims
+    assert int(even.sum()) == LAT.volume // 2
+    assert not np.any(even & odd) and np.all(even | odd)
+    # parity really is (t+z+y+x) % 2
+    assert bool(even[0, 0, 0, 0]) and not bool(even[0, 0, 0, 1])
+    assert not bool(even[1, 0, 0, 0]) and bool(even[1, 1, 0, 0])
+
+
+def test_split_eo_requires_even_x(rng):
+    psi = random_spinor(rng, LatticeShape(2, 2, 2, 3))
+    with pytest.raises(AssertionError):
+        split_eo(psi)
 
 
 def test_dot_matches_norm(rng):

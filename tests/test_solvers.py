@@ -4,13 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (LatticeShape, bicgstab, cg, cg_trace, cgnr, dslash,
                         dslash_dagger, mpcg, normal_op, pack_gauge,
                         pack_spinor, pipecg, random_gauge, random_spinor)
 from repro.core.wilson import (dslash_dagger_packed, dslash_packed,
                                normal_op_packed)
+from repro.testing import maybe_hypothesis
+
+given, settings, st = maybe_hypothesis()
 
 LAT = LatticeShape(4, 4, 4, 8)
 MASS = 0.4
