@@ -10,6 +10,12 @@ It also compares plain CGNR against the even-odd (Schur) preconditioned
 ``cgnr_eo`` on the same lattice — iterations and wall-clock µs — and the
 ``mpcg``-composed even-odd variant (bf16 inner solve, f32 reliable
 updates): the paper's two central optimizations running together.
+
+Beyond the CSV rows, ``run()`` writes **BENCH_solvers.json** — the
+machine-readable perf trajectory (iterations, wall-clock, sites/s, and the
+fused CG engine's per-iteration kernel/traffic shape).  CI uploads it and
+``check_solver_regression.py`` guards the 4⁴ smoke-lattice iteration count
+against ``benchmarks/BENCH_solvers_baseline.json``.
 """
 
 from __future__ import annotations
@@ -19,6 +25,13 @@ import os
 import subprocess
 import sys
 import time
+
+# Kept in sync with tests/test_eo.py's module fixture so the committed
+# baseline guards the same solve the tier-1 suite runs.
+SMOKE_DIMS = (4, 4, 4, 4)
+SMOKE_SEED = 7
+SMOKE_MASS = 0.1
+SMOKE_TOL = 1e-6
 
 _SCRIPT = r"""
 import os
@@ -102,6 +115,101 @@ def _run_eo_comparison() -> list[tuple[str, float, str]]:
     ]
 
 
+def _run_eo_smoke() -> dict:
+    """Reference vs Pallas-fast-path Schur solve on the 4⁴ smoke lattice.
+
+    This is the guarded trajectory entry: cgnr_eo iteration counts here
+    feed ``BENCH_solvers.json`` and must not regress versus the committed
+    baseline (see check_solver_regression.py).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LatticeShape, random_gauge, random_spinor,
+                            solve_wilson_eo)
+    from repro.core.wilson import dslash
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+
+    def rel(x):
+        r = dslash(u, x, SMOKE_MASS) - b
+        return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
+
+    def timed(fn):
+        jax.block_until_ready(fn()[0])  # warm-up/compile, fully drained
+        t0 = time.time()
+        out = fn()
+        jax.block_until_ready(out[0])
+        return out, (time.time() - t0) * 1e6
+
+    (x_ref, st_ref), us_ref = timed(lambda: solve_wilson_eo(
+        u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
+    (x_pal, st_pal), us_pal = timed(lambda: solve_wilson_eo(
+        u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
+        use_pallas=True, interpret=True))
+
+    def sites_per_s(st, us):
+        return lat.volume * int(st.iterations) / max(us / 1e6, 1e-12)
+
+    return {
+        "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
+        "seed": SMOKE_SEED,
+        "cgnr_eo_iters": int(st_ref.iterations),
+        "cgnr_eo_pallas_iters": int(st_pal.iterations),
+        "cgnr_eo_us": us_ref, "cgnr_eo_pallas_us": us_pal,
+        "rel_res_ref": rel(x_ref), "rel_res_pallas": rel(x_pal),
+        "sites_per_s_ref": sites_per_s(st_ref, us_ref),
+        "sites_per_s_pallas": sites_per_s(st_pal, us_pal),
+        "pallas_interpret_mode": True,
+    }
+
+
+def _fused_engine_shape() -> dict:
+    """Per-iteration kernel count and HBM traffic shape of the fused CG.
+
+    Inspects the jaxpr of ONE fused iteration body: the vector algebra
+    must be exactly two pallas_call launches — the x/r/||r||² triad
+    (4 vector reads, 2 vector writes + negligible partials) and the
+    direction xpay (2 reads, 1 write) — versus 7 reads + 3 writes for the
+    naive jnp expression chain.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.cg_fused import fused_engine
+    from repro.testing import pallas_call_eqns
+
+    n = (256, 128)
+    update, xpay = fused_engine(interpret=True)
+
+    def body(x, r, p, ap, rs):
+        alpha = rs / jnp.sum(p * ap)
+        x, r, rs_new = update(alpha, x, r, p, ap)
+        p = xpay(rs_new / rs, r, p)
+        return x, r, p, rs_new
+
+    args = [jnp.zeros(n, jnp.float32)] * 4 + [jnp.float32(1.0)]
+    calls = pallas_call_eqns(jax.make_jaxpr(body)(*args))
+    size = n[0] * n[1]
+
+    def shape_of(eqn):
+        reads = sum(1 for v in eqn.invars
+                    if getattr(v.aval, "size", 0) == size)
+        writes = sum(1 for v in eqn.outvars
+                     if getattr(v.aval, "size", 0) == size)
+        return reads, writes
+
+    shapes = sorted((shape_of(e) for e in calls), reverse=True)
+    out = {"pallas_calls_per_iteration": len(calls),
+           "naive_traffic": "7R+3W",
+           "kernel_traffic": "+".join(f"{r}R{w}W" for r, w in shapes)}
+    if len(shapes) == 2:
+        (out["update_reads"], out["update_writes"]) = shapes[0]
+        (out["xpay_reads"], out["xpay_writes"]) = shapes[1]
+    return out
+
+
 def run() -> list[tuple[str, float, str]]:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -122,4 +230,34 @@ def run() -> list[tuple[str, float, str]]:
         rows.extend(_run_eo_comparison())
     except Exception as e:  # keep the subprocess rows; degrade like above
         rows.append(("eo_comparison", -1.0, f"FAILED:{e!r:.200}"))
+
+    report = {"schema": 1, "bench": "solvers",
+              "generated_by": "benchmarks/bench_solvers.py"}
+    try:
+        smoke = _run_eo_smoke()
+        report["eo_smoke"] = smoke
+        rows.append(("cgnr_eo_pallas_4x4x4x4", smoke["cgnr_eo_pallas_us"],
+                     f"iters={smoke['cgnr_eo_pallas_iters']};"
+                     f"rel_res={smoke['rel_res_pallas']:.2e};"
+                     f"sites_per_s={smoke['sites_per_s_pallas']:.0f}"))
+    except Exception as e:
+        rows.append(("eo_smoke", -1.0, f"FAILED:{e!r:.200}"))
+    try:
+        shape = _fused_engine_shape()
+        report["fused_engine"] = shape
+        rows.append(("cg_fused_engine", float(
+            shape["pallas_calls_per_iteration"]),
+            f"traffic={shape['kernel_traffic']};"
+            f"naive={shape['naive_traffic']}"))
+    except Exception as e:
+        rows.append(("fused_engine_shape", -1.0, f"FAILED:{e!r:.200}"))
+    report["rows"] = [list(row) for row in rows]
+
+    path = os.environ.get("BENCH_SOLVERS_JSON", "BENCH_solvers.json")
+    try:
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    except OSError as e:
+        rows.append(("bench_solvers_json", -1.0, f"FAILED:{e!r:.120}"))
     return rows

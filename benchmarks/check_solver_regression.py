@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""CI guard: the even-odd Schur CGNR must not regress on the smoke lattice.
+
+Compares the ``eo_smoke`` entry of a freshly generated ``BENCH_solvers.json``
+against the committed ``benchmarks/BENCH_solvers_baseline.json``.  Iteration
+count is an ALGORITHMIC property (deterministic seed, fixed tolerance), so
+it is the cheap, noise-free regression signal — wall-clock on shared CI
+runners is not.  A small slack absorbs cross-platform float reduction
+differences.
+
+Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
+        check_solver_regression.py --generate [baseline.json]
+
+``--generate`` runs the smoke solves itself (no full benchmark harness
+needed) and guards the result — the standalone/dev mode.  CI uses the
+artifact-comparing mode in the smoke-bench job; the BLOCKING guard is
+tests/test_eo.py::test_eo_iteration_count_vs_committed_baseline, which
+checks the same baseline inside the tier-1 suite.
+Exit 0 on pass, 1 on regression or missing/invalid inputs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+SLACK_ITERS = 2  # float-reduction jitter across platforms, not a budget
+
+GUARDED_KEYS = ("cgnr_eo_iters", "cgnr_eo_pallas_iters")
+
+# the guarded solve is only comparable if its parameters match the baseline
+PROBLEM_KEYS = ("lattice", "mass", "tol", "seed")
+
+
+def main(argv: list[str]) -> int:
+    base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_solvers_baseline.json")
+    if len(argv) > 1 and argv[1] == "--generate":
+        if len(argv) > 2:
+            base_path = argv[2]
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks import bench_solvers
+        cur = {"eo_smoke": bench_solvers._run_eo_smoke()}
+    else:
+        cur_path = argv[1] if len(argv) > 1 else "BENCH_solvers.json"
+        if len(argv) > 2:
+            base_path = argv[2]
+        try:
+            with open(cur_path) as f:
+                cur = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"solver-regression guard: cannot load {cur_path}: {e}")
+            return 1
+
+    try:
+        with open(base_path) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"solver-regression guard: cannot load {base_path}: {e}")
+        return 1
+
+    cur_eo = cur.get("eo_smoke")
+    base_eo = base.get("eo_smoke")
+    if not cur_eo or not base_eo:
+        print("solver-regression guard: missing 'eo_smoke' section "
+              f"(current: {bool(cur_eo)}, baseline: {bool(base_eo)})")
+        return 1
+    for key in PROBLEM_KEYS:
+        if cur_eo.get(key) != base_eo.get(key):
+            print(f"solver-regression guard: '{key}' mismatch "
+                  f"({cur_eo.get(key)} vs baseline {base_eo.get(key)}) — "
+                  "regenerate benchmarks/BENCH_solvers_baseline.json")
+            return 1
+
+    failed = False
+    for key in GUARDED_KEYS:
+        got, ref = cur_eo.get(key), base_eo.get(key)
+        if got is None or ref is None:
+            print(f"solver-regression guard: '{key}' missing "
+                  f"(current: {got}, baseline: {ref})")
+            failed = True
+            continue
+        limit = int(ref) + SLACK_ITERS
+        verdict = "OK" if int(got) <= limit else "REGRESSION"
+        print(f"  {key}: {got} (baseline {ref}, limit {limit}) {verdict}")
+        failed = failed or int(got) > limit
+    if failed:
+        print("solver-regression guard: FAILED — cgnr_eo iteration count "
+              f"regressed on the {base_eo['lattice']} smoke lattice")
+        return 1
+    print("solver-regression guard: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

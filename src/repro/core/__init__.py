@@ -25,5 +25,5 @@ from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, apply_gamma5, dslash,
                                dslash_eo, dslash_flops, dslash_oe,
                                dslash_packed, normal_op, normal_op_packed,
                                schur_dagger, schur_normal_op, schur_op)
-from repro.core.eo import (EOOperators, eo_operators, solve_wilson_eo,
-                           solve_wilson_eo_mp)
+from repro.core.eo import (EOOperators, eo_operators, eo_operators_packed,
+                           solve_wilson_eo, solve_wilson_eo_mp)

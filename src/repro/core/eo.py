@@ -16,6 +16,15 @@ solve iterates on bf16 real-pair half fields (narrow storage) while the
 operator accumulates and the reliable updates run in f32/complex64
 (wide arithmetic) — the two central optimizations of the source paper
 working together.
+
+With ``use_pallas=True`` the whole Schur solve runs on the Pallas fast
+path: the CG iterates on PACKED real half fields (T, Z, Y, 24, Xh), the
+matvec is four parity-hop kernel launches (γ5 and the Schur axpy folded
+into kernel prologues/epilogues — see :mod:`repro.kernels.wilson_dslash`),
+and the per-iteration vector algebra streams through the two fused
+``cg_fused`` kernels injected into the solver's ``update``/``xpay`` hooks.
+Packing is an isometry (Re⟨a,b⟩ equals the packed real dot product), so
+the real-arithmetic CG produces exactly the complex CGNR iterates.
 """
 
 from __future__ import annotations
@@ -27,8 +36,9 @@ import jax.numpy as jnp
 
 from repro.core import solvers
 from repro.core.lattice import (complex_to_real_pair, field_dot, field_norm2,
-                                merge_eo, real_pair_to_complex, split_eo,
-                                split_eo_gauge)
+                                merge_eo, pack_gauge, pack_spinor,
+                                real_pair_to_complex, split_eo,
+                                split_eo_gauge, unpack_spinor)
 from repro.core.wilson import (dslash_eo, dslash_oe, schur_dagger,
                                schur_normal_op, schur_op)
 
@@ -60,16 +70,70 @@ def eo_operators(u: Array, mass, r: float = 1.0) -> EOOperators:
         u_e=u_e, u_o=u_o)
 
 
+def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
+                        bz: int | None = None,
+                        interpret: bool | None = None,
+                        use_pallas: bool = True) -> EOOperators:
+    """The Schur-system blocks on PACKED half fields, Pallas fast path.
+
+    The returned callables act on packed (T, Z, Y, 24, Xh) real half
+    fields; ``u_e``/``u_o`` are the packed per-parity link fields.  The
+    Pallas parity kernels hard-code the Wilson parameter r = 1 (their
+    spin-projection tables need the rank-2 projectors).
+    """
+    if r != 1.0:  # ValueError, not assert: must survive `python -O`
+        raise ValueError(
+            "the Pallas parity kernels hard-code r=1 (their spin-projection "
+            f"tables need rank-2 projectors); got r={r}. Use the jnp "
+            "reference path (use_pallas=False) for r != 1.")
+    # local import: repro.core is imported by the kernels package, so a
+    # module-level import here would be circular.
+    from repro.kernels.wilson_dslash import ops as wops
+
+    u_e, u_o = split_eo_gauge(u)
+    upe, upo = pack_gauge(u_e), pack_gauge(u_o)
+    m = mass + 4.0 * r
+    kw = dict(bz=bz, interpret=interpret, use_pallas=use_pallas)
+    return EOOperators(
+        dhat=lambda v: wops.schur_op(upe, upo, v, mass, **kw),
+        dhat_dag=lambda v: wops.schur_op(upe, upo, v, mass, dagger=True,
+                                         **kw),
+        d_eo=lambda v: wops.dslash_eo(upe, upo, v, **kw),
+        d_oe=lambda v: wops.dslash_oe(upe, upo, v, **kw),
+        m_inv=lambda v: v / m,
+        u_e=upe, u_o=upo)
+
+
 def solve_wilson_eo(u: Array, b: Array, mass, *, r: float = 1.0,
                     tol: float = 1e-8, maxiter: int = 1000,
                     dot=field_dot, norm2=field_norm2,
+                    use_pallas: bool = False,
+                    interpret: bool | None = None, bz: int | None = None,
                     ) -> tuple[Array, solvers.SolveStats]:
     """Solve D x = b by CGNR on the even-sublattice Schur complement.
 
     Same contract as a plain ``cgnr`` solve: natural-layout inputs, the
     merged full-lattice solution out, but the CG runs on half-size
     vectors against the better-conditioned reduced operator.
+
+    ``use_pallas=True`` moves the whole solve onto the Pallas fast path:
+    packed real half fields, parity-hop stencil kernels for the matvec and
+    the fused streaming kernels for the per-iteration vector algebra.
+    ``interpret``/``bz`` tune the kernels (None = backend defaults).
     """
+    if use_pallas:
+        from repro.kernels.cg_fused import fused_engine  # see note above
+
+        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
+        b_e, b_o = split_eo(b)
+        update, xpay = fused_engine(interpret=interpret)
+        (x_e, x_o), stats = solvers.cgnr_eo(
+            ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
+            pack_spinor(b_e), pack_spinor(b_o),
+            tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
+            update=update, xpay=xpay)
+        return merge_eo(unpack_spinor(x_e, dtype=b.dtype),
+                        unpack_spinor(x_o, dtype=b.dtype)), stats
     ops = eo_operators(u, mass, r=r)
     b_e, b_o = split_eo(b)
     (x_e, x_o), stats = solvers.cgnr_eo(

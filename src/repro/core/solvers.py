@@ -11,6 +11,16 @@ Design notes
   ``psum`` — the paper's "global communications ... for total error
   estimates" become a single fused collective per iteration.
 
+* The per-iteration VECTOR algebra is injectable too: ``cg``/``cg_trace``
+  accept ``update(alpha, x, r, p, ap) -> (x', r', ||r'||²)`` and
+  ``xpay(beta, r, p) -> p'`` callables (see DESIGN.md, "fused-engine
+  contract").  The defaults are the plain jnp expressions; passing
+  :func:`repro.kernels.cg_fused.fused_engine`'s pair swaps in the Pallas
+  streaming kernels, and the iteration's vector traffic drops from seven
+  reads + three writes of HBM to one 4-read/2-write triad kernel plus one
+  2-read/1-write direction kernel — the TPU analogue of the FPGA paper
+  hiding all vector updates inside the streaming pipeline.
+
 * ``mpcg`` is the paper's central algorithmic feature (its Ref. [10],
   Strzodka–Göddeke): run bulk CG iterations in a *low*-precision type and
   periodically recompute the true residual / accumulate the solution in a
@@ -53,10 +63,21 @@ def _real(x):
 
 def cg(op: Op, b: Array, x0: Array | None = None, *,
        tol: float = 1e-8, maxiter: int = 1000,
-       dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+       dot=field_dot, norm2=field_norm2,
+       update=None, xpay=None) -> tuple[Array, SolveStats]:
     """Standard conjugate gradient for a Hermitian positive-definite ``op``.
 
     Stops when ``||r||^2 <= tol^2 * ||b||^2`` or at ``maxiter``.
+
+    ``update``/``xpay`` inject the iteration's vector algebra (the fused
+    vector engine; see the module docstring).  ``update`` must return the
+    residual norm it computed alongside the updated ``x``/``r`` so no
+    separate ``norm2`` pass over ``r`` is needed.  When a NON-default
+    ``norm2`` is also injected (e.g. a psum-ing distributed reduction),
+    the engine's locally-reduced norm cannot be trusted and ``norm2(r)``
+    is recomputed instead — a distributed fused engine should fold the
+    collective into ``update`` itself and leave ``norm2`` for the
+    initial residual only.
     """
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - op(x) if x0 is not None else b
@@ -72,12 +93,18 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     def body(carry):
         k, x, r, p, rs = carry
         ap = op(p)
-        alpha = (rs / _real(dot(p, ap))).astype(b.dtype)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rs_new = _real(norm2(r))
-        beta = (rs_new / rs).astype(b.dtype)
-        p = r + beta * p
+        alpha = rs / _real(dot(p, ap))
+        if update is None:
+            a = alpha.astype(b.dtype)
+            x = x + a * p
+            r = r - a * ap
+            rs_new = _real(norm2(r))
+        else:
+            x, r, rs_new = update(alpha, x, r, p, ap)
+            if norm2 is not field_norm2:  # don't bypass an injected reduction
+                rs_new = _real(norm2(r))
+        beta = rs_new / rs
+        p = (r + beta.astype(b.dtype) * p) if xpay is None else xpay(beta, r, p)
         return (k + 1, x, r, p, rs_new)
 
     k, x, r, p, rs = jax.lax.while_loop(
@@ -88,11 +115,14 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
 
 
 def cg_trace(op: Op, b: Array, *, iters: int,
-             dot=field_dot, norm2=field_norm2) -> tuple[Array, Array]:
+             dot=field_dot, norm2=field_norm2,
+             update=None, xpay=None) -> tuple[Array, Array]:
     """CG for a fixed number of iterations, recording ||r||^2 per iteration.
 
     Used by convergence benchmarks (paper §2/§3.2 mixed-precision study);
     ``lax.scan`` based so the whole history lowers to one XLA program.
+    ``update``/``xpay`` inject the fused vector engine exactly as in
+    :func:`cg`.
     """
     x = jnp.zeros_like(b)
     r = b
@@ -105,12 +135,17 @@ def cg_trace(op: Op, b: Array, *, iters: int,
         pap = _real(dot(p, ap))
         safe = pap != 0
         alpha = jnp.where(safe, rs / jnp.where(safe, pap, 1.0), 0.0)
-        alpha = alpha.astype(b.dtype)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rs_new = _real(norm2(r))
+        if update is None:
+            a = alpha.astype(b.dtype)
+            x = x + a * p
+            r = r - a * ap
+            rs_new = _real(norm2(r))
+        else:
+            x, r, rs_new = update(alpha, x, r, p, ap)
+            if norm2 is not field_norm2:  # don't bypass an injected reduction
+                rs_new = _real(norm2(r))
         beta = jnp.where(rs > 0, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
-        p = r + beta.astype(b.dtype) * p
+        p = (r + beta.astype(b.dtype) * p) if xpay is None else xpay(beta, r, p)
         return (x, r, p, rs_new), rs_new
 
     (x, r, p, rs), hist = jax.lax.scan(step, (x, r, p, rs), None, length=iters)
@@ -122,7 +157,10 @@ def cg_trace(op: Op, b: Array, *, iters: int,
 # ---------------------------------------------------------------------------
 
 def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
-    """Solve D x = b for non-Hermitian D via D^dag D x = D^dag b."""
+    """Solve D x = b for non-Hermitian D via D^dag D x = D^dag b.
+
+    Keyword arguments (including ``update``/``xpay``) forward to :func:`cg`.
+    """
     return cg(lambda v: d_dag_op(d_op(v)), d_dag_op(b), **kw)
 
 
@@ -152,8 +190,9 @@ def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
 
 def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
             b_e: Array, b_o: Array, *, tol: float = 1e-8,
-            maxiter: int = 1000, dot=field_dot,
-            norm2=field_norm2) -> tuple[tuple[Array, Array], SolveStats]:
+            maxiter: int = 1000, dot=field_dot, norm2=field_norm2,
+            update=None, xpay=None,
+            ) -> tuple[tuple[Array, Array], SolveStats]:
     """Even-odd Schur-preconditioned CGNR.
 
     Args:
@@ -162,13 +201,15 @@ def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
       d_eo, d_oe:     the parity-changing hopping blocks.
       m_inv:          applies M_oo^{-1} (for Wilson: scale by 1/(m+4r)).
       b_e, b_o:       the RHS split by parity.
+      update, xpay:   optional fused vector engine, forwarded to :func:`cg`.
     Returns:
       ((x_e, x_o), SolveStats) — merge with ``lattice.merge_eo`` for the
       full-lattice solution.  ``iterations`` counts the half-size CG steps.
     """
     b_hat = b_e - d_eo(m_inv(b_o))
     x_e, stats = cg(lambda v: dhat_dag(dhat(v)), dhat_dag(b_hat),
-                    tol=tol, maxiter=maxiter, dot=dot, norm2=norm2)
+                    tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
+                    update=update, xpay=xpay)
     x_o = m_inv(b_o - d_oe(x_e))
     return (x_e, x_o), stats
 
@@ -178,7 +219,7 @@ def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
             tol: float = 1e-6, inner_tol: float = 5e-2,
             inner_maxiter: int = 200, max_outer: int = 50,
             low_dtype=jnp.bfloat16, to_low=None, to_high=None,
-            dot=field_dot, norm2=field_norm2,
+            dot=field_dot, norm2=field_norm2, update=None, xpay=None,
             ) -> tuple[tuple[Array, Array], SolveStats]:
     """Even-odd reduction composed with mixed-precision reliable-update CG.
 
@@ -194,7 +235,8 @@ def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
     x_e, stats = mpcg(a_low, a_high, dhat_dag(b_hat), tol=tol,
                       inner_tol=inner_tol, inner_maxiter=inner_maxiter,
                       max_outer=max_outer, low_dtype=low_dtype,
-                      to_low=to_low, to_high=to_high, dot=dot, norm2=norm2)
+                      to_low=to_low, to_high=to_high, dot=dot, norm2=norm2,
+                      update=update, xpay=xpay)
     x_o = m_inv(b_o - d_oe(x_e))
     return (x_e, x_o), stats
 
@@ -207,7 +249,8 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
          tol: float = 1e-6, inner_tol: float = 5e-2,
          inner_maxiter: int = 200, max_outer: int = 50,
          low_dtype=jnp.bfloat16, to_low=None, to_high=None,
-         dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+         dot=field_dot, norm2=field_norm2,
+         update=None, xpay=None) -> tuple[Array, SolveStats]:
     """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
     high-precision true-residual "reliable updates".
 
@@ -240,7 +283,7 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
         outer, inner_total, x, r, rs = carry
         r_low = to_low(r)
         d, st = cg(op_low, r_low, tol=inner_tol, maxiter=inner_maxiter,
-                   dot=dot, norm2=norm2)
+                   dot=dot, norm2=norm2, update=update, xpay=xpay)
         x = x + to_high(d)
         r = b - op_high(x)                     # reliable update (true residual)
         rs = _real(norm2(r))

@@ -1,3 +1,4 @@
 from repro.kernels.cg_fused.kernel import cg_update_pallas, cg_xpay_pallas
-from repro.kernels.cg_fused.ops import cg_pallas, cg_update, cg_xpay
+from repro.kernels.cg_fused.ops import (cg_pallas, cg_update, cg_xpay,
+                                        fused_engine)
 from repro.kernels.cg_fused.ref import cg_update_ref, cg_xpay_ref

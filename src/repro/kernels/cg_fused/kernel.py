@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 LANE = 128
 
 
@@ -41,7 +43,7 @@ def _update_kernel(alpha_ref, x_ref, r_ref, p_ref, ap_ref,
 
 def cg_update_pallas(alpha: jax.Array, x: jax.Array, r: jax.Array,
                      p: jax.Array, ap: jax.Array, *,
-                     block_rows: int = 256, interpret: bool = True):
+                     block_rows: int = 256, interpret: bool | None = None):
     """(x + alpha p, r - alpha Ap, ||r_new||^2) in one fused pass.
 
     Inputs must be 2D (rows, 128); use ``ops.cg_update`` for arbitrary
@@ -60,7 +62,7 @@ def cg_update_pallas(alpha: jax.Array, x: jax.Array, r: jax.Array,
         out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
                    jax.ShapeDtypeStruct(r.shape, r.dtype),
                    jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(alpha, jnp.float32).reshape(1, 1), x, r, p, ap)
     return xo, ro, jnp.sum(rs)
 
@@ -72,7 +74,7 @@ def _xpay_kernel(beta_ref, r_ref, p_ref, po_ref):
 
 
 def cg_xpay_pallas(beta: jax.Array, r: jax.Array, p: jax.Array, *,
-                   block_rows: int = 256, interpret: bool = True):
+                   block_rows: int = 256, interpret: bool | None = None):
     """p <- r + beta p (the direction update), streaming layout as above."""
     rows, lane = r.shape
     assert lane == LANE and rows % block_rows == 0
@@ -85,5 +87,5 @@ def cg_xpay_pallas(beta: jax.Array, r: jax.Array, p: jax.Array, *,
         in_specs=[scal, vec, vec],
         out_specs=vec,
         out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(beta, jnp.float32).reshape(1, 1), r, p)

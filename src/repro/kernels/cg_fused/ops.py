@@ -16,6 +16,8 @@ from repro.kernels.cg_fused.kernel import (LANE, cg_update_pallas,
                                            cg_xpay_pallas)
 from repro.kernels.cg_fused.ref import cg_update_ref, cg_xpay_ref
 
+__all__ = ["cg_update", "cg_xpay", "cg_pallas", "fused_engine"]
+
 
 def _pick_block_rows(rows: int) -> int:
     for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
@@ -33,7 +35,7 @@ def _to_stream(v: jax.Array):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
-def cg_update(alpha, x, r, p, ap, *, interpret: bool = True,
+def cg_update(alpha, x, r, p, ap, *, interpret: bool | None = None,
               use_pallas: bool = True):
     """Fused (x + alpha p, r - alpha Ap, ||r_new||^2) for any field shape."""
     if not use_pallas:
@@ -52,7 +54,8 @@ def cg_update(alpha, x, r, p, ap, *, interpret: bool = True,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
-def cg_xpay(beta, r, p, *, interpret: bool = True, use_pallas: bool = True):
+def cg_xpay(beta, r, p, *, interpret: bool | None = None,
+            use_pallas: bool = True):
     """p <- r + beta p for any field shape."""
     if not use_pallas:
         return cg_xpay_ref(beta, r, p)
@@ -65,7 +68,23 @@ def cg_xpay(beta, r, p, *, interpret: bool = True, use_pallas: bool = True):
     return po.reshape(-1)[:p.size].reshape(shape)
 
 
-def cg_pallas(op, b, *, tol=1e-8, maxiter=1000, interpret=True):
+def fused_engine(*, interpret: bool | None = None, use_pallas: bool = True):
+    """(update, xpay) pair for the solvers' injectable vector engine.
+
+    Plug straight into :func:`repro.core.solvers.cg`'s ``update=``/``xpay=``
+    hooks: the per-iteration vector algebra then runs through the two fused
+    streaming kernels (4 reads + 2 writes for the x/r/||r||² triad, 2 reads
+    + 1 write for the direction update) instead of seven separate jnp
+    passes.
+    """
+    update = functools.partial(cg_update, interpret=interpret,
+                               use_pallas=use_pallas)
+    xpay = functools.partial(cg_xpay, interpret=interpret,
+                             use_pallas=use_pallas)
+    return update, xpay
+
+
+def cg_pallas(op, b, *, tol=1e-8, maxiter=1000, interpret: bool | None = None):
     """CG whose vector algebra runs through the fused Pallas kernels.
 
     The matvec ``op`` is arbitrary (e.g. the wilson_dslash normal op);

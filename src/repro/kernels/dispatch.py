@@ -1,0 +1,18 @@
+"""Backend-aware kernel dispatch knobs shared by all Pallas kernel packages.
+
+``interpret=None`` (the default everywhere) resolves to interpret mode only
+when JAX is running on CPU — the validation/debug platform — and to compiled
+Mosaic kernels on GPU/TPU.  Passing an explicit bool always wins, so tests
+can force interpret mode and device runs can force compilation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` flag against the active backend."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

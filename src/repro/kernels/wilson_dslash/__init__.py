@@ -1,3 +1,12 @@
-from repro.kernels.wilson_dslash.kernel import dslash_pallas
-from repro.kernels.wilson_dslash.ops import dslash, dslash_dagger, normal_op
-from repro.kernels.wilson_dslash.ref import dslash_ref
+from repro.kernels.wilson_dslash.kernel import (dslash_eo_pallas,
+                                                dslash_oe_pallas,
+                                                dslash_pallas)
+from repro.kernels.wilson_dslash.ops import (dslash, dslash_dagger,
+                                             dslash_eo, dslash_oe, normal_op,
+                                             schur_dagger, schur_normal_op,
+                                             schur_op)
+from repro.kernels.wilson_dslash.ref import (dslash_dagger_ref, dslash_eo_ref,
+                                             dslash_oe_ref, dslash_ref,
+                                             normal_op_ref,
+                                             schur_normal_op_ref,
+                                             schur_op_ref)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the Dirac-Wilson stencil (packed layout).
+"""Pallas TPU kernels for the Dirac-Wilson stencil (packed layout).
 
 This is the TPU re-think of the paper's FPGA compute kernel (Fig. 1) and
 cyclic-buffer transport (its Ref. [11]):
@@ -17,8 +17,26 @@ cyclic-buffer transport (its Ref. [11]):
   spinors before the SU(3) multiply (stage 2 of the paper's Fig. 1
   pipeline), halving the matvec work: 8 hops × 2 matvecs = the standard
   1320 flop/site dslash.
+* **γ5 folding** — ``gamma5_in``/``gamma5_out`` fold γ5 = diag(+,+,-,-)
+  into the trace-time projection/reconstruction tables (a sign flip on
+  constant coefficients), so D†ψ = γ5 D γ5 ψ and the CGNR normal operator
+  cost ZERO extra full-field HBM passes versus plain D.
 
-The kernel computes in f32 registers regardless of the (bf16/f32) storage
+Two kernel families share the machinery:
+
+* ``dslash_pallas``      — the full-lattice operator (mass term + 8 hops);
+* ``dslash_eo_pallas`` / ``dslash_oe_pallas`` — the even-odd parity hop
+  blocks D_eo / D_oe on half fields whose X axis is parity-compressed by 2
+  (see :mod:`repro.core.lattice`).  Within a row (t, z, y) the x-neighbour
+  of compressed index j is j + s (forward) / j - (1 - s) (backward) where
+  s is the output row's parity offset — realised as a per-row select
+  between the block and its lane-rolled copy.  The parity kernels also
+  take an optional accumulator operand (``psi_acc``/``acc_coeff``/
+  ``hop_coeff``) so the Schur complement m·ψ - D_eo D_oe ψ / m is TWO
+  kernel launches with the axpy folded into the second epilogue — no
+  separate full-field scale/add passes.
+
+The kernels compute in f32 registers regardless of the (bf16/f32) storage
 dtype — narrow storage, wide accumulate, like the FPGA DSP datapath.
 """
 
@@ -33,6 +51,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.lattice import GAUGE_G, NCOL, NDIRS, NSPIN, SPINOR_S
 from repro.core.wilson import _projectors
+from repro.kernels.dispatch import resolve_interpret
 
 # ---------------------------------------------------------------------------
 # Trace-time tables for the spin-projection trick.
@@ -90,14 +109,25 @@ def _cmul_phase(gr, gi, phase: complex):
     return outr, outi
 
 
-def _hop(out_r, out_i, psi_r, psi_i, u_r, u_i, mu: int, sign: str):
-    """Accumulate -1/2 * P (U psi) for one hop into out_{r,i}.
+def _hop(out_r, out_i, psi_r, psi_i, u_r, u_i, mu: int, sign: str,
+         g5in: bool = False, g5out: bool = False):
+    """Accumulate -1/2 * G5out P (U G5in psi) for one hop into out_{r,i}.
 
     psi_{r,i}: [spin][color] -> (..., X) arrays  (the neighbour spinor)
     u_{r,i}:   [row][col]    -> (..., X) arrays  (U or, for 'bwd', U^dag is
                realized by index transposition + conjugation here)
+
+    γ5 = diag(+,+,-,-) folds into the constant tables: ``g5in`` negates the
+    projection coefficients of source spins 2,3 (P -> P γ5), ``g5out``
+    negates the reconstruction phases of output spins 2,3 (P -> γ5 P) —
+    both are trace-time sign flips, zero runtime cost.
     """
     proj, recon = _TABLES[(mu, sign)]
+    if g5in:  # P γ5: columns 2,3 change sign
+        proj = [[(b, -coeff if b >= 2 else coeff) for (b, coeff) in terms]
+                for terms in proj]
+    if g5out:  # γ5 P: rows 2,3 change sign (rows 0,1 untouched)
+        recon = [(src, -phase) for (src, phase) in recon]
     dag = sign == "bwd"
     # stage 2a: project to half spinors  h[alpha][c]
     h_r = [[None] * NCOL for _ in range(2)]
@@ -157,8 +187,24 @@ def _split_gauge_block(blk):
     return re, im
 
 
+def _repack_spinor_block(out_r, out_i, dtype):
+    """[spin][color] re/im lists of (BZ, Y, X) -> (BZ, Y, 24, X)."""
+    flat = []
+    for s in range(NSPIN):
+        for c in range(NCOL):
+            flat.append(out_r[s][c])
+            flat.append(out_i[s][c])
+    return jnp.stack(flat, axis=2).astype(dtype)
+
+
 def _roll_sc(lists, shift, axis):
     return [[jnp.roll(e, shift, axis=axis) for e in row] for row in lists]
+
+
+def _where_sc(sel, a_lists, b_lists):
+    """Elementwise select between two [..][..] lists of (BZ, Y, X) blocks."""
+    return [[jnp.where(sel, a, b) for a, b in zip(ra, rb)]
+            for ra, rb in zip(a_lists, b_lists)]
 
 
 def _shift_z(lists, boundary, forward: bool):
@@ -177,8 +223,54 @@ def _shift_z(lists, boundary, forward: bool):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Shared plane-streaming BlockSpecs (full-lattice AND parity kernels)
+# ---------------------------------------------------------------------------
+
+
+def _pick_bz(z: int, bz: int | None) -> int:
+    if bz is None:  # largest divisor of Z not exceeding 4
+        bz = max(c for c in (1, 2, 3, 4) if z % c == 0)
+    assert z % bz == 0, f"Z={z} must be divisible by bz={bz}"
+    return bz
+
+
+def _spinor_specs(t: int, z: int, bz: int, y: int, x: int):
+    """center, t-1, t+1 blocks and the z-boundary planes of a spinor field."""
+    s = SPINOR_S
+    c = pl.BlockSpec((1, bz, y, s, x), lambda ti, zi: (ti, zi, 0, 0, 0))
+    tm = pl.BlockSpec((1, bz, y, s, x),
+                      lambda ti, zi: ((ti - 1 + t) % t, zi, 0, 0, 0))
+    tp = pl.BlockSpec((1, bz, y, s, x),
+                      lambda ti, zi: ((ti + 1) % t, zi, 0, 0, 0))
+    # single boundary z-planes (block size 1 on z -> block index = plane idx)
+    zm = pl.BlockSpec((1, 1, y, s, x),
+                      lambda ti, zi: (ti, (zi * bz - 1 + z) % z, 0, 0, 0))
+    zp = pl.BlockSpec((1, 1, y, s, x),
+                      lambda ti, zi: (ti, (zi * bz + bz) % z, 0, 0, 0))
+    return c, tm, tp, zm, zp
+
+
+def _gauge_specs(t: int, z: int, bz: int, y: int, x: int):
+    """center (all 4 dirs), U_t(t-1) and the U_z(z-1) boundary plane."""
+    g = GAUGE_G
+    c = pl.BlockSpec((NDIRS, 1, bz, y, g, x),
+                     lambda ti, zi: (0, ti, zi, 0, 0, 0))
+    tm = pl.BlockSpec((1, 1, bz, y, g, x),
+                      lambda ti, zi: (0, (ti - 1 + t) % t, zi, 0, 0, 0))
+    zm = pl.BlockSpec((1, 1, 1, y, g, x),
+                      lambda ti, zi: (1, ti, (zi * bz - 1 + z) % z, 0, 0, 0))
+    return c, tm, zm
+
+
+# ---------------------------------------------------------------------------
+# Full-lattice kernel
+# ---------------------------------------------------------------------------
+
+
 def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
-                   u_c, u_tm, u_zm, out_ref, *, mass: float, bz: int):
+                   u_c, u_tm, u_zm, out_ref, *, mass: float,
+                   g5in: bool, g5out: bool):
     f32 = jnp.float32
     # ---- stage 1: load & unpack (all data now in VMEM) ----
     pc_r, pc_i = _split_spinor_block(psi_c[0])
@@ -190,49 +282,51 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     utm_r, utm_i = _split_gauge_block(u_tm[0, 0])
     uzm_r, uzm_i = _split_gauge_block(u_zm[0, 0])
 
+    # mass term m4 * γ5out γ5in ψ: identity when the flags agree (γ5² = 1),
+    # γ5 itself (spins 2,3 negated) when exactly one flag is set.
     m4 = f32(mass + 4.0)
-    out_r = [[m4 * pc_r[s][c] for c in range(NCOL)] for s in range(NSPIN)]
-    out_i = [[m4 * pc_i[s][c] for c in range(NCOL)] for s in range(NSPIN)]
+    m4_lo = -m4 if (g5in != g5out) else m4
+    out_r = [[(m4 if s < 2 else m4_lo) * pc_r[s][c] for c in range(NCOL)]
+             for s in range(NSPIN)]
+    out_i = [[(m4 if s < 2 else m4_lo) * pc_i[s][c] for c in range(NCOL)]
+             for s in range(NSPIN)]
+
+    hop = functools.partial(_hop, g5in=g5in, g5out=g5out)
 
     # ---- T direction (mu=0): neighbour planes come from extra refs ----
-    _hop(out_r, out_i, ptp_r, ptp_i, u[0][0], u[0][1], 0, "fwd")
-    _hop(out_r, out_i, ptm_r, ptm_i, utm_r, utm_i, 0, "bwd")
+    hop(out_r, out_i, ptp_r, ptp_i, u[0][0], u[0][1], 0, "fwd")
+    hop(out_r, out_i, ptm_r, ptm_i, utm_r, utm_i, 0, "bwd")
 
     # ---- Z direction (mu=1): in-block shift + boundary planes ----
     fz_r = _shift_z(pc_r, pzp_r, forward=True)
     fz_i = _shift_z(pc_i, pzp_i, forward=True)
-    _hop(out_r, out_i, fz_r, fz_i, u[1][0], u[1][1], 1, "fwd")
+    hop(out_r, out_i, fz_r, fz_i, u[1][0], u[1][1], 1, "fwd")
     bz_r = _shift_z(pc_r, pzm_r, forward=False)
     bz_i = _shift_z(pc_i, pzm_i, forward=False)
     ubz_r = _shift_z(u[1][0], uzm_r, forward=False)
     ubz_i = _shift_z(u[1][1], uzm_i, forward=False)
-    _hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
+    hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
 
     # ---- Y direction (mu=2): rolls on axis 1 of (BZ, Y, X) ----
-    _hop(out_r, out_i, _roll_sc(pc_r, -1, 1), _roll_sc(pc_i, -1, 1),
-         u[2][0], u[2][1], 2, "fwd")
-    _hop(out_r, out_i, _roll_sc(pc_r, 1, 1), _roll_sc(pc_i, 1, 1),
-         _roll_sc(u[2][0], 1, 1), _roll_sc(u[2][1], 1, 1), 2, "bwd")
+    hop(out_r, out_i, _roll_sc(pc_r, -1, 1), _roll_sc(pc_i, -1, 1),
+        u[2][0], u[2][1], 2, "fwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, 1), _roll_sc(pc_i, 1, 1),
+        _roll_sc(u[2][0], 1, 1), _roll_sc(u[2][1], 1, 1), 2, "bwd")
 
     # ---- X direction (mu=3): lane rolls on axis 2 ----
-    _hop(out_r, out_i, _roll_sc(pc_r, -1, 2), _roll_sc(pc_i, -1, 2),
-         u[3][0], u[3][1], 3, "fwd")
-    _hop(out_r, out_i, _roll_sc(pc_r, 1, 2), _roll_sc(pc_i, 1, 2),
-         _roll_sc(u[3][0], 1, 2), _roll_sc(u[3][1], 1, 2), 3, "bwd")
+    hop(out_r, out_i, _roll_sc(pc_r, -1, 2), _roll_sc(pc_i, -1, 2),
+        u[3][0], u[3][1], 3, "fwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, 2), _roll_sc(pc_i, 1, 2),
+        _roll_sc(u[3][0], 1, 2), _roll_sc(u[3][1], 1, 2), 3, "bwd")
 
     # ---- stage 4: repack & store ----
-    y, x = out_r[0][0].shape[1], out_r[0][0].shape[2]
-    flat = []
-    for s in range(NSPIN):
-        for c in range(NCOL):
-            flat.append(out_r[s][c])
-            flat.append(out_i[s][c])
-    res = jnp.stack(flat, axis=2)  # (BZ, Y, 24, X)
-    out_ref[0] = res.astype(out_ref.dtype)
+    out_ref[0] = _repack_spinor_block(out_r, out_i, out_ref.dtype)
 
 
 def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
-                  bz: int | None = None, interpret: bool = True) -> jax.Array:
+                  bz: int | None = None, interpret: bool | None = None,
+                  gamma5_in: bool = False,
+                  gamma5_out: bool = False) -> jax.Array:
     """Dirac-Wilson dslash via the Pallas plane-streaming kernel.
 
     Args:
@@ -240,47 +334,201 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
       pp:   (T, Z, Y, 24, X) packed spinor field.
       mass: bare mass (trace-time constant, like the paper's #define).
       bz:   z-planes per block (VMEM working-set knob). Default: min(Z, 4).
-      interpret: run the kernel body in interpret mode (CPU validation).
+      interpret: None = interpret only on CPU; bool forces the mode.
+      gamma5_in/gamma5_out: compute γ5out D (γ5in ψ) with γ5 folded into the
+        constant hop tables — both True gives D† for free.
     Returns:
-      packed D psi with the dtype of ``pp``.
+      packed D psi (or its γ5-conjugations) with the dtype of ``pp``.
     """
     nd, t, z, y, g, x = up.shape
     assert nd == NDIRS and g == GAUGE_G
     tt, zz, yy, s, xx = pp.shape
     assert (tt, zz, yy, xx) == (t, z, y, x) and s == SPINOR_S
-    if bz is None:  # largest divisor of Z not exceeding 4
-        bz = max(c for c in (1, 2, 3, 4) if z % c == 0)
-    assert z % bz == 0, f"Z={z} must be divisible by bz={bz}"
-    nzb = z // bz
+    bz = _pick_bz(z, bz)
 
-    S, G, Y, X = SPINOR_S, GAUGE_G, y, x
-
-    psi_spec = pl.BlockSpec((1, bz, Y, S, X),
-                            lambda ti, zi: (ti, zi, 0, 0, 0))
-    psi_tm = pl.BlockSpec((1, bz, Y, S, X),
-                          lambda ti, zi: ((ti - 1 + t) % t, zi, 0, 0, 0))
-    psi_tp = pl.BlockSpec((1, bz, Y, S, X),
-                          lambda ti, zi: ((ti + 1) % t, zi, 0, 0, 0))
-    # single boundary z-planes (block size 1 on z -> block index = plane idx)
-    psi_zm = pl.BlockSpec((1, 1, Y, S, X),
-                          lambda ti, zi: (ti, (zi * bz - 1 + z) % z, 0, 0, 0))
-    psi_zp = pl.BlockSpec((1, 1, Y, S, X),
-                          lambda ti, zi: (ti, (zi * bz + bz) % z, 0, 0, 0))
-    u_c = pl.BlockSpec((NDIRS, 1, bz, Y, G, X),
-                       lambda ti, zi: (0, ti, zi, 0, 0, 0))
-    u_tm = pl.BlockSpec((1, 1, bz, Y, G, X),
-                        lambda ti, zi: (0, (ti - 1 + t) % t, zi, 0, 0, 0))
-    u_zm = pl.BlockSpec((1, 1, 1, Y, G, X),
-                        lambda ti, zi: (1, ti, (zi * bz - 1 + z) % z, 0, 0, 0))
-    out_spec = pl.BlockSpec((1, bz, Y, S, X),
+    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x)
+    u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
+    out_spec = pl.BlockSpec((1, bz, y, SPINOR_S, x),
                             lambda ti, zi: (ti, zi, 0, 0, 0))
 
-    kernel = functools.partial(_dslash_kernel, mass=float(mass), bz=bz)
+    kernel = functools.partial(_dslash_kernel, mass=float(mass),
+                               g5in=bool(gamma5_in), g5out=bool(gamma5_out))
     return pl.pallas_call(
         kernel,
-        grid=(t, nzb),
-        in_specs=[psi_spec, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_tm, u_zm],
+        grid=(t, z // bz),
+        in_specs=[psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_tm, u_zm],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(pp.shape, pp.dtype),
-        interpret=interpret,
-    )(pp, pp, pp, pp, pp, up, up, up)
+        interpret=resolve_interpret(interpret),
+    )(*([pp] * 5), *([up] * 3))
+
+
+# ---------------------------------------------------------------------------
+# Parity (even-odd) hop kernels on half fields
+# ---------------------------------------------------------------------------
+
+
+def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
+                          u_oc, u_nc, u_ntm, u_nzm, *rest, parity: int,
+                          hop_coeff: float, acc_coeff: float, has_acc: bool,
+                          g5in: bool, g5out: bool):
+    """Half-lattice hopping block: hop_coeff · γ5out Hop(γ5in ψ) [+ acc].
+
+    ``u_oc`` holds the links attached to the OUTPUT-parity sites (forward
+    hops use U_mu(x) at the output site x), ``u_nc``/``u_ntm``/``u_nzm``
+    the links attached to the neighbour parity (backward hops use
+    U_mu(x-mu)† at the neighbour site).  ``parity`` selects which parity
+    the output sites are: output rows sit at x = 2j + s_out with
+    s_out = (t + z + y + parity) mod 2.
+    """
+    out_ref = rest[-1]
+    acc_ref = rest[0] if has_acc else None
+
+    pc_r, pc_i = _split_spinor_block(psi_c[0])
+    ptm_r, ptm_i = _split_spinor_block(psi_tm[0])
+    ptp_r, ptp_i = _split_spinor_block(psi_tp[0])
+    pzm_r, pzm_i = _split_spinor_block(psi_zm[0])
+    pzp_r, pzp_i = _split_spinor_block(psi_zp[0])
+    uo = [_split_gauge_block(u_oc[mu, 0]) for mu in range(NDIRS)]
+    un = [_split_gauge_block(u_nc[mu, 0]) for mu in range(NDIRS)]
+    untm_r, untm_i = _split_gauge_block(u_ntm[0, 0])
+    unzm_r, unzm_i = _split_gauge_block(u_nzm[0, 0])
+
+    nbz, ny, nx = pc_r[0][0].shape
+    # Row parity selector: True where the output site offset s_out == 1, i.e.
+    # output sites sit at x = 2j + 1 within the row (see lattice.eo_row_offset).
+    zy = (jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 0)
+          + jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 1))
+    row = pl.program_id(0) + pl.program_id(1) * nbz + zy + parity
+    sel = row % 2 == 1
+
+    zero = jnp.zeros((nbz, ny, nx), jnp.float32)
+    out_r = [[zero for _ in range(NCOL)] for _ in range(NSPIN)]
+    out_i = [[zero for _ in range(NCOL)] for _ in range(NSPIN)]
+
+    hop = functools.partial(_hop, g5in=g5in, g5out=g5out)
+
+    # ---- T direction (mu=0): neighbour planes come from extra refs ----
+    hop(out_r, out_i, ptp_r, ptp_i, uo[0][0], uo[0][1], 0, "fwd")
+    hop(out_r, out_i, ptm_r, ptm_i, untm_r, untm_i, 0, "bwd")
+
+    # ---- Z direction (mu=1): in-block shift + boundary planes ----
+    fz_r = _shift_z(pc_r, pzp_r, forward=True)
+    fz_i = _shift_z(pc_i, pzp_i, forward=True)
+    hop(out_r, out_i, fz_r, fz_i, uo[1][0], uo[1][1], 1, "fwd")
+    bz_r = _shift_z(pc_r, pzm_r, forward=False)
+    bz_i = _shift_z(pc_i, pzm_i, forward=False)
+    ubz_r = _shift_z(un[1][0], unzm_r, forward=False)
+    ubz_i = _shift_z(un[1][1], unzm_i, forward=False)
+    hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
+
+    # ---- Y direction (mu=2): rolls on axis 1 of (BZ, Y, X) ----
+    hop(out_r, out_i, _roll_sc(pc_r, -1, 1), _roll_sc(pc_i, -1, 1),
+        uo[2][0], uo[2][1], 2, "fwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, 1), _roll_sc(pc_i, 1, 1),
+        _roll_sc(un[2][0], 1, 1), _roll_sc(un[2][1], 1, 1), 2, "bwd")
+
+    # ---- X direction (mu=3): parity-compressed lane axis.  The neighbour
+    # of compressed index j is j + s_out (forward) / j - (1 - s_out)
+    # (backward): a per-row select between the block and its rolled copy.
+    hop(out_r, out_i,
+        _where_sc(sel, _roll_sc(pc_r, -1, 2), pc_r),
+        _where_sc(sel, _roll_sc(pc_i, -1, 2), pc_i),
+        uo[3][0], uo[3][1], 3, "fwd")
+    hop(out_r, out_i,
+        _where_sc(sel, pc_r, _roll_sc(pc_r, 1, 2)),
+        _where_sc(sel, pc_i, _roll_sc(pc_i, 1, 2)),
+        _where_sc(sel, un[3][0], _roll_sc(un[3][0], 1, 2)),
+        _where_sc(sel, un[3][1], _roll_sc(un[3][1], 1, 2)), 3, "bwd")
+
+    # ---- epilogue: scale the hop, fold in the accumulator term ----
+    h = jnp.float32(hop_coeff)
+    if has_acc:
+        a = jnp.float32(acc_coeff)
+        ac_r, ac_i = _split_spinor_block(acc_ref[0])
+        out_r = [[h * out_r[s][c] + a * ac_r[s][c] for c in range(NCOL)]
+                 for s in range(NSPIN)]
+        out_i = [[h * out_i[s][c] + a * ac_i[s][c] for c in range(NCOL)]
+                 for s in range(NSPIN)]
+    elif hop_coeff != 1.0:
+        out_r = [[h * e for e in row] for row in out_r]
+        out_i = [[h * e for e in row] for row in out_i]
+    out_ref[0] = _repack_spinor_block(out_r, out_i, out_ref.dtype)
+
+
+def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
+                          *, parity: int, bz: int | None,
+                          interpret: bool | None, gamma5_in: bool,
+                          gamma5_out: bool, psi_acc: jax.Array | None,
+                          acc_coeff: float, hop_coeff: float) -> jax.Array:
+    nd, t, z, y, g, x = u_out.shape
+    assert nd == NDIRS and g == GAUGE_G
+    assert u_nbr.shape == u_out.shape
+    tt, zz, yy, s, xx = pp.shape
+    assert (tt, zz, yy, xx) == (t, z, y, x) and s == SPINOR_S
+    assert t % 2 == z % 2 == y % 2 == 0, (
+        "even-odd kernels need even T/Z/Y extents: an odd periodic extent "
+        f"breaks bipartiteness, got {(t, z, y)}")
+    bz = _pick_bz(z, bz)
+
+    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x)
+    u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
+    in_specs = [psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_c, u_tm, u_zm]
+    operands = [*([pp] * 5), u_out, *([u_nbr] * 3)]
+    if psi_acc is not None:
+        assert psi_acc.shape == pp.shape
+        in_specs.append(psi_c)
+        operands.append(psi_acc)
+
+    kernel = functools.partial(
+        _dslash_parity_kernel, parity=int(parity) % 2,
+        hop_coeff=float(hop_coeff), acc_coeff=float(acc_coeff),
+        has_acc=psi_acc is not None, g5in=bool(gamma5_in),
+        g5out=bool(gamma5_out))
+    return pl.pallas_call(
+        kernel,
+        grid=(t, z // bz),
+        in_specs=in_specs,
+        out_specs=psi_c,
+        out_shape=jax.ShapeDtypeStruct(pp.shape, pp.dtype),
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+
+
+def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
+                     bz: int | None = None, interpret: bool | None = None,
+                     gamma5_in: bool = False, gamma5_out: bool = False,
+                     psi_acc: jax.Array | None = None,
+                     acc_coeff: float = 0.0,
+                     hop_coeff: float = 1.0) -> jax.Array:
+    """D_eo: odd -> even hopping block on packed half fields.
+
+    Args:
+      u_e, u_o: (4, T, Z, Y, 18, Xh) packed per-parity link fields
+                (``pack_gauge`` of ``split_eo_gauge``'s halves).
+      pp_o:     (T, Z, Y, 24, Xh) packed ODD-parity spinor half field.
+      psi_acc/acc_coeff/hop_coeff: optional fused epilogue
+        ``out = acc_coeff * psi_acc + hop_coeff * hop`` (psi_acc is an
+        EVEN-parity half field) — lets the Schur complement avoid separate
+        scale/add HBM passes.
+      gamma5_in/gamma5_out: fold γ5 around the hop (tables only, free).
+    Returns:
+      packed even-parity half field, dtype of ``pp_o``.
+    """
+    return _dslash_parity_pallas(
+        u_e, u_o, pp_o, parity=0, bz=bz, interpret=interpret,
+        gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
+        acc_coeff=acc_coeff, hop_coeff=hop_coeff)
+
+
+def dslash_oe_pallas(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
+                     bz: int | None = None, interpret: bool | None = None,
+                     gamma5_in: bool = False, gamma5_out: bool = False,
+                     psi_acc: jax.Array | None = None,
+                     acc_coeff: float = 0.0,
+                     hop_coeff: float = 1.0) -> jax.Array:
+    """D_oe: even -> odd hopping block on packed half fields (see above)."""
+    return _dslash_parity_pallas(
+        u_o, u_e, pp_e, parity=1, bz=bz, interpret=interpret,
+        gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
+        acc_coeff=acc_coeff, hop_coeff=hop_coeff)

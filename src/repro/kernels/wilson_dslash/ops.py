@@ -1,12 +1,23 @@
-"""Jitted public entry points for the wilson_dslash Pallas kernel.
+"""Jitted public entry points for the wilson_dslash Pallas kernels.
 
+Full lattice:
 ``dslash(up, pp, mass)`` — D psi
-``dslash_dagger(...)``   — D^dag psi  (gamma5 D gamma5, reusing the kernel)
-``normal_op(...)``       — D^dag D psi (the CGNR operator)
+``dslash_dagger(...)``   — D^dag psi  (gamma5 D gamma5, γ5 FOLDED into the
+                           kernel tables — zero extra full-field passes)
+``normal_op(...)``       — D^dag D psi (the CGNR operator; two kernel
+                           launches, no standalone gamma5 application)
+
+Even-odd half lattice (parity-compressed X axis, see repro.core.lattice):
+``dslash_eo``/``dslash_oe`` — the parity-changing hopping blocks
+``schur_op``                — D_hat = m psi - D_eo D_oe psi / m, with the
+                              axpy folded into the second kernel's epilogue
+``schur_dagger``            — D_hat^dag via the folded γ5 flags
+``schur_normal_op``         — D_hat^dag D_hat (four kernel launches total)
 
 ``use_pallas=False`` falls back to the pure-jnp reference — the same
 escape hatch the paper's package offers ("compiled and executed exclusively
-on CPU for debugging and reference benchmarking").
+on CPU for debugging and reference benchmarking").  ``interpret=None``
+(default) interprets the kernels only on CPU; GPU/TPU runs compile.
 """
 
 from __future__ import annotations
@@ -16,35 +27,137 @@ import functools
 import jax
 
 from repro.core.wilson import apply_gamma5_packed, dslash_packed
-from repro.kernels.wilson_dslash.kernel import dslash_pallas
+from repro.kernels.wilson_dslash.kernel import (dslash_eo_pallas,
+                                                dslash_oe_pallas,
+                                                dslash_pallas)
+from repro.kernels.wilson_dslash.ref import (dslash_eo_ref, dslash_oe_ref,
+                                             schur_normal_op_ref,
+                                             schur_op_ref)
+
+_STATIC = ("mass", "bz", "interpret", "use_pallas")
+_STATIC_G5 = _STATIC + ("gamma5_in", "gamma5_out")
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=_STATIC_G5)
 def dslash(up: jax.Array, pp: jax.Array, mass: float, *,
-           bz: int | None = None, interpret: bool = True,
-           use_pallas: bool = True) -> jax.Array:
+           bz: int | None = None, interpret: bool | None = None,
+           use_pallas: bool = True, gamma5_in: bool = False,
+           gamma5_out: bool = False) -> jax.Array:
     if not use_pallas:
-        return dslash_packed(up, pp, mass)
-    return dslash_pallas(up, pp, mass, bz=bz, interpret=interpret)
+        out = apply_gamma5_packed(pp) if gamma5_in else pp
+        out = dslash_packed(up, out, mass)
+        return apply_gamma5_packed(out) if gamma5_out else out
+    return dslash_pallas(up, pp, mass, bz=bz, interpret=interpret,
+                         gamma5_in=gamma5_in, gamma5_out=gamma5_out)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def dslash_dagger(up: jax.Array, pp: jax.Array, mass: float, *,
-                  bz: int | None = None, interpret: bool = True,
+                  bz: int | None = None, interpret: bool | None = None,
                   use_pallas: bool = True) -> jax.Array:
-    out = dslash(up, apply_gamma5_packed(pp), mass, bz=bz,
-                 interpret=interpret, use_pallas=use_pallas)
-    return apply_gamma5_packed(out)
+    """D^dag = gamma5 D gamma5, with gamma5 folded into the kernel tables."""
+    return dslash(up, pp, mass, bz=bz, interpret=interpret,
+                  use_pallas=use_pallas, gamma5_in=True, gamma5_out=True)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mass", "bz", "interpret", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def normal_op(up: jax.Array, pp: jax.Array, mass: float, *,
-              bz: int | None = None, interpret: bool = True,
+              bz: int | None = None, interpret: bool | None = None,
               use_pallas: bool = True) -> jax.Array:
-    return dslash_dagger(up, dslash(up, pp, mass, bz=bz, interpret=interpret,
-                                    use_pallas=use_pallas),
-                         mass, bz=bz, interpret=interpret,
-                         use_pallas=use_pallas)
+    """A = D^dag D in exactly two kernel launches: D, then γ5 D γ5 with both
+    γ5 factors folded — no standalone ``apply_gamma5_packed`` pass."""
+    dv = dslash(up, pp, mass, bz=bz, interpret=interpret,
+                use_pallas=use_pallas)
+    return dslash(up, dv, mass, bz=bz, interpret=interpret,
+                  use_pallas=use_pallas, gamma5_in=True, gamma5_out=True)
+
+
+# ---------------------------------------------------------------------------
+# Parity (even-odd) blocks and the Schur complement
+# ---------------------------------------------------------------------------
+
+_STATIC_EO = ("bz", "interpret", "use_pallas", "gamma5_in", "gamma5_out")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_EO)
+def dslash_eo(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
+              bz: int | None = None, interpret: bool | None = None,
+              use_pallas: bool = True, gamma5_in: bool = False,
+              gamma5_out: bool = False) -> jax.Array:
+    """D_eo: ODD half field in, EVEN half field out (hopping term only).
+
+    ``u_e``/``u_o`` are packed per-parity link fields (4, T, Z, Y, 18, Xh);
+    ``pp_o`` is a packed (T, Z, Y, 24, Xh) odd-parity spinor half field.
+    """
+    if not use_pallas:
+        return dslash_eo_ref(u_e, u_o, pp_o, gamma5_in=gamma5_in,
+                             gamma5_out=gamma5_out)
+    return dslash_eo_pallas(u_e, u_o, pp_o, bz=bz, interpret=interpret,
+                            gamma5_in=gamma5_in, gamma5_out=gamma5_out)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_EO)
+def dslash_oe(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
+              bz: int | None = None, interpret: bool | None = None,
+              use_pallas: bool = True, gamma5_in: bool = False,
+              gamma5_out: bool = False) -> jax.Array:
+    """D_oe: EVEN half field in, ODD half field out (hopping term only)."""
+    if not use_pallas:
+        return dslash_oe_ref(u_e, u_o, pp_e, gamma5_in=gamma5_in,
+                             gamma5_out=gamma5_out)
+    return dslash_oe_pallas(u_e, u_o, pp_e, bz=bz, interpret=interpret,
+                            gamma5_in=gamma5_in, gamma5_out=gamma5_out)
+
+
+_STATIC_SCHUR = ("mass", "bz", "interpret", "use_pallas", "dagger")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_SCHUR)
+def schur_op(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, mass: float, *,
+             bz: int | None = None, interpret: bool | None = None,
+             use_pallas: bool = True, dagger: bool = False) -> jax.Array:
+    """Schur complement D_hat psi = m psi - D_eo D_oe psi / m  (m = mass+4).
+
+    Two kernel launches: D_oe streams the even field to a temporary odd
+    field, then D_eo's fused epilogue computes ``m psi - hop / m`` in one
+    pass (``psi_acc``/``acc_coeff``/``hop_coeff``) — no separate scale/add
+    HBM traffic.  ``dagger=True`` gives D_hat^dag = gamma5 D_hat gamma5 by
+    folding γ5 into the first kernel's prologue and the second kernel's hop
+    epilogue (the mass term commutes with γ5).
+    """
+    if not use_pallas:
+        return schur_op_ref(u_e, u_o, pp_e, mass, dagger=dagger)
+    m = float(mass) + 4.0
+    tmp_o = dslash_oe_pallas(u_e, u_o, pp_e, bz=bz, interpret=interpret,
+                             gamma5_in=dagger)
+    return dslash_eo_pallas(u_e, u_o, tmp_o, bz=bz, interpret=interpret,
+                            gamma5_out=dagger, psi_acc=pp_e, acc_coeff=m,
+                            hop_coeff=-1.0 / m)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def schur_dagger(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array,
+                 mass: float, *, bz: int | None = None,
+                 interpret: bool | None = None,
+                 use_pallas: bool = True) -> jax.Array:
+    """D_hat^dag = gamma5 D_hat gamma5, γ5 folded into the kernels."""
+    return schur_op(u_e, u_o, pp_e, mass, bz=bz, interpret=interpret,
+                    use_pallas=use_pallas, dagger=True)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def schur_normal_op(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array,
+                    mass: float, *, bz: int | None = None,
+                    interpret: bool | None = None,
+                    use_pallas: bool = True) -> jax.Array:
+    """A_hat = D_hat^dag D_hat — the even-sublattice CGNR operator.
+
+    Four parity-kernel launches total; every γ5 and every mass-term axpy is
+    folded into a kernel prologue/epilogue, so the whole HPD matvec touches
+    HBM exactly as often as its four hopping stencils demand.
+    """
+    if not use_pallas:
+        return schur_normal_op_ref(u_e, u_o, pp_e, mass)
+    w = schur_op(u_e, u_o, pp_e, mass, bz=bz, interpret=interpret)
+    return schur_op(u_e, u_o, w, mass, bz=bz, interpret=interpret,
+                    dagger=True)

@@ -1,10 +1,69 @@
-"""Pure-jnp oracle for the wilson_dslash Pallas kernel.
+"""Pure-jnp oracles for the wilson_dslash Pallas kernels.
 
-The reference is the packed-layout operator from the core library, which is
-itself validated against the natural-layout complex operator (and the
-latter against gamma-matrix algebra identities) in tests/test_wilson.py.
+The full-lattice reference is the packed-layout operator from the core
+library, which is itself validated against the natural-layout complex
+operator (and the latter against gamma-matrix algebra identities) in
+tests/test_wilson.py.
+
+The parity (even-odd) references round-trip through the natural-layout
+complex half-field operators in :mod:`repro.core.wilson` — slow but
+maximally independent of the kernel code they validate, "compiled and
+executed exclusively on CPU for debugging and reference benchmarking"
+in the paper's words.
 """
 
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import pack_spinor, unpack_gauge, unpack_spinor
+from repro.core.wilson import apply_gamma5
+from repro.core.wilson import dslash_eo as _core_dslash_eo
+from repro.core.wilson import dslash_oe as _core_dslash_oe
 from repro.core.wilson import dslash_packed as dslash_ref  # noqa: F401
 from repro.core.wilson import (dslash_dagger_packed as dslash_dagger_ref,  # noqa: F401
                                normal_op_packed as normal_op_ref)  # noqa: F401
+from repro.core.wilson import schur_dagger as _core_schur_dagger
+from repro.core.wilson import schur_normal_op as _core_schur_normal_op
+from repro.core.wilson import schur_op as _core_schur_op
+
+
+def _via_natural(fn, u_e_p: jax.Array, u_o_p: jax.Array, pp: jax.Array,
+                 gamma5_in: bool, gamma5_out: bool) -> jax.Array:
+    """Unpack packed half fields, apply a natural-layout op, repack."""
+    u_e = unpack_gauge(u_e_p.astype(jnp.float32))
+    u_o = unpack_gauge(u_o_p.astype(jnp.float32))
+    v = unpack_spinor(pp.astype(jnp.float32))
+    if gamma5_in:
+        v = apply_gamma5(v)
+    out = fn(u_e, u_o, v)
+    if gamma5_out:
+        out = apply_gamma5(out)
+    return pack_spinor(out, dtype=pp.dtype)
+
+
+def dslash_eo_ref(u_e_p, u_o_p, pp_o, *, gamma5_in=False, gamma5_out=False):
+    """D_eo on packed half fields (odd in, even out), via the core oracle."""
+    return _via_natural(_core_dslash_eo, u_e_p, u_o_p, pp_o,
+                        gamma5_in, gamma5_out)
+
+
+def dslash_oe_ref(u_e_p, u_o_p, pp_e, *, gamma5_in=False, gamma5_out=False):
+    """D_oe on packed half fields (even in, odd out), via the core oracle."""
+    return _via_natural(_core_dslash_oe, u_e_p, u_o_p, pp_e,
+                        gamma5_in, gamma5_out)
+
+
+def schur_op_ref(u_e_p, u_o_p, pp_e, mass, *, dagger=False):
+    """Schur complement D_hat (or D_hat^dag) on packed even half fields."""
+    fn = _core_schur_dagger if dagger else _core_schur_op
+    return _via_natural(lambda ue, uo, v: fn(ue, uo, v, mass),
+                        u_e_p, u_o_p, pp_e, False, False)
+
+
+def schur_normal_op_ref(u_e_p, u_o_p, pp_e, mass):
+    """A_hat = D_hat^dag D_hat on packed even half fields."""
+    return _via_natural(lambda ue, uo, v: _core_schur_normal_op(ue, uo, v,
+                                                                mass),
+                        u_e_p, u_o_p, pp_e, False, False)

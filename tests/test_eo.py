@@ -1,5 +1,9 @@
 """Even-odd (Schur) preconditioned solves: equivalence with plain CGNR,
-iteration savings, and the mixed-precision composition."""
+iteration savings, the mixed-precision composition, and the Pallas fast
+path (parity kernels + fused CG engine)."""
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +16,9 @@ from repro.core import (LatticeShape, cgnr, dslash, dslash_dagger,
 LAT = LatticeShape(4, 4, 4, 4)  # the 4^4 acceptance lattice
 MASS = 0.1
 TOL = 1e-6
+
+_BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                         "BENCH_solvers_baseline.json")
 
 
 @pytest.fixture(scope="module")
@@ -64,6 +71,52 @@ def test_eo_solve_non_cubic_lattice():
     x, st = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000)
     assert bool(st.converged)
     assert _rel_res(u, x, b) < 1e-5
+
+
+def test_eo_pallas_fast_path_matches_reference():
+    """The Pallas fast path (parity stencil kernels + fused CG triads)
+    reproduces the reference Schur solve: same iterates, same solution.
+
+    Small lattice: the interpret-mode kernels trace one program per grid
+    point, so compile time scales with T * Z/BZ."""
+    lat = LatticeShape(2, 4, 4, 4)
+    key = jax.random.PRNGKey(5)
+    ku, kb = jax.random.split(key)
+    u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+    x_ref, st_ref = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000)
+    x_pal, st_pal = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000,
+                                    use_pallas=True)
+    assert bool(st_ref.converged) and bool(st_pal.converged)
+
+    def rel(x):
+        r = dslash(u, x, MASS) - b
+        return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
+
+    assert rel(x_pal) < 1e-5
+    # CG in the packed real representation is the SAME Krylov iteration
+    assert abs(int(st_pal.iterations) - int(st_ref.iterations)) <= 1
+    assert float(jnp.max(jnp.abs(x_pal - x_ref))) < 1e-4
+
+
+def test_eo_iteration_count_vs_committed_baseline(problem):
+    """Blocking CI guard: the 4^4 smoke solve — reference AND Pallas fast
+    path — must not take more iterations than the committed
+    BENCH_solvers_baseline.json (same seed/mass/tol as
+    benchmarks/bench_solvers.py's eo_smoke entry)."""
+    with open(_BASELINE) as f:
+        base = json.load(f)["eo_smoke"]
+    # the baseline only guards THIS problem; a drifted baseline is an error
+    assert base["lattice"] == str(LAT)
+    assert (base["mass"], base["tol"], base["seed"]) == (MASS, TOL, 7)
+    u, b = problem
+    _, st = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000)
+    assert bool(st.converged)
+    assert int(st.iterations) <= int(base["cgnr_eo_iters"]) + 2
+    _, st_pal = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000,
+                                use_pallas=True)
+    assert bool(st_pal.converged)
+    assert (int(st_pal.iterations)
+            <= int(base["cgnr_eo_pallas_iters"]) + 2)
 
 
 def test_eo_operators_reject_odd_extent():

@@ -5,20 +5,31 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (LatticeShape, pack_gauge, pack_spinor, random_gauge,
-                        random_spinor)
+from repro.core import (LatticeShape, complex_to_real_pair, pack_gauge,
+                        pack_spinor, random_gauge, random_spinor,
+                        real_pair_to_complex, split_eo, split_eo_gauge)
 from repro.kernels.cg_fused import (cg_pallas, cg_update, cg_update_ref,
-                                    cg_xpay)
+                                    cg_xpay, cg_xpay_ref)
 from repro.kernels.wilson_dslash import dslash as dslash_k
-from repro.kernels.wilson_dslash import dslash_ref
+from repro.kernels.wilson_dslash import (dslash_eo_ref, dslash_oe_ref,
+                                         dslash_ref, schur_normal_op_ref,
+                                         schur_op_ref)
+from repro.kernels.wilson_dslash.ops import dslash_eo as eo_k
+from repro.kernels.wilson_dslash.ops import dslash_oe as oe_k
 from repro.kernels.wilson_dslash.ops import normal_op as normal_k
+from repro.kernels.wilson_dslash.ops import schur_normal_op as schur_nk
+from repro.kernels.wilson_dslash.ops import schur_op as schur_k
 from repro.core.wilson import dslash_dagger_packed
-from repro.testing import maybe_hypothesis
+from repro.testing import full_field_passes, maybe_hypothesis, pallas_call_eqns
 
 given, settings, st = maybe_hypothesis()
 
 SHAPES = [LatticeShape(2, 2, 4, 8), LatticeShape(4, 4, 4, 8),
           LatticeShape(3, 6, 8, 16), LatticeShape(2, 8, 8, 8)]
+
+# the acceptance lattices for the parity kernels: 4^4 and 8*4^3
+EO_SHAPES = [LatticeShape(4, 4, 4, 4), LatticeShape(8, 4, 4, 4)]
+EO_MASS = 0.1
 
 
 @pytest.fixture(scope="module")
@@ -75,6 +86,86 @@ def test_dslash_kernel_dagger_hermiticity(fields):
     assert np.isclose(lhs, rhs, rtol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Parity (even-odd) kernels vs the core/wilson.py references
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def eo_fields():
+    """Packed per-parity fields + packed halves of a random spinor."""
+    key = jax.random.PRNGKey(23)
+    out = {}
+    for lat in EO_SHAPES:
+        ku, kp = jax.random.split(jax.random.fold_in(key, lat.volume))
+        u = random_gauge(ku, lat)
+        psi = random_spinor(kp, lat)
+        u_e, u_o = split_eo_gauge(u)
+        p_e, p_o = split_eo(psi)
+        out[lat.dims] = (pack_gauge(u_e), pack_gauge(u_o),
+                         pack_spinor(p_e), pack_spinor(p_o))
+    return out
+
+
+@pytest.mark.parametrize("lat", EO_SHAPES, ids=str)
+def test_parity_kernels_match_core(eo_fields, lat):
+    """D_eo / D_oe Pallas kernels match the core oracles to <= 1e-5."""
+    upe, upo, ppe, ppo = eo_fields[lat.dims]
+    np.testing.assert_allclose(np.asarray(eo_k(upe, upo, ppo)),
+                               np.asarray(dslash_eo_ref(upe, upo, ppo)),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(oe_k(upe, upo, ppe)),
+                               np.asarray(dslash_oe_ref(upe, upo, ppe)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("lat", EO_SHAPES, ids=str)
+@pytest.mark.parametrize("dagger", [False, True], ids=["plain", "dagger"])
+def test_schur_kernel_matches_core(eo_fields, lat, dagger):
+    """The 2-launch Schur kernel (γ5 + axpy folded) matches the oracle,
+    including the γ5-folded dagger path."""
+    upe, upo, ppe, _ = eo_fields[lat.dims]
+    out = schur_k(upe, upo, ppe, EO_MASS, dagger=dagger)
+    ref = schur_op_ref(upe, upo, ppe, EO_MASS, dagger=dagger)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_schur_normal_op_matches_core(eo_fields):
+    lat = EO_SHAPES[0]
+    upe, upo, ppe, _ = eo_fields[lat.dims]
+    out = schur_nk(upe, upo, ppe, EO_MASS)
+    ref = schur_normal_op_ref(upe, upo, ppe, EO_MASS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_parity_gamma5_flags_match_ref(eo_fields):
+    """The folded gamma5_in/gamma5_out flags equal explicit γ5 wrapping."""
+    lat = EO_SHAPES[0]
+    upe, upo, ppe, _ = eo_fields[lat.dims]
+    out = oe_k(upe, upo, ppe, gamma5_in=True, gamma5_out=True)
+    ref = dslash_oe_ref(upe, upo, ppe, gamma5_in=True, gamma5_out=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_gamma5_folding_zero_extra_passes(fields, eo_fields):
+    """γ5 folding means the normal operators are PURE kernel launches: no
+    non-pallas equation in the jaxpr materializes a full field — i.e. zero
+    standalone apply_gamma5_packed (or axpy) HBM passes."""
+    lat = SHAPES[0]
+    up, pp = fields[lat.dims]
+    jx = jax.make_jaxpr(
+        lambda u, p: normal_k(u, p, 0.1, interpret=True))(up, pp)
+    assert len(pallas_call_eqns(jx)) == 2
+    assert full_field_passes(jx, pp.size) == []
+
+    upe, upo, ppe, _ = eo_fields[EO_SHAPES[0].dims]
+    jx = jax.make_jaxpr(
+        lambda a, b, v: schur_nk(a, b, v, EO_MASS, interpret=True))(
+            upe, upo, ppe)
+    assert len(pallas_call_eqns(jx)) == 4
+    assert full_field_passes(jx, ppe.size) == []
+
+
 @pytest.mark.parametrize("shape", [(128, 128), (3, 5, 7, 24, 8), (1000,),
                                    (256, 24, 8)])
 def test_cg_update_shapes(shape):
@@ -102,6 +193,76 @@ def test_cg_fused_property(seed, alpha, beta):
     assert np.isclose(float(rs), float(jnp.sum(ro * ro)), rtol=1e-4)
     po = cg_xpay(jnp.float32(beta), r, p)
     assert np.allclose(np.asarray(po), np.asarray(r + beta * p), atol=1e-5)
+
+
+def test_cg_update_complex_via_real_pair_view():
+    """complex64 CG state runs through the fused kernels as f32 real pairs;
+    the result equals the complex arithmetic and the reduction is the
+    complex ||r||^2."""
+    key = jax.random.PRNGKey(17)
+    shape = (5, 7, 3)
+    ks = jax.random.split(key, 8)
+    mk = lambda kr, ki: (jax.random.normal(kr, shape)
+                         + 1j * jax.random.normal(ki, shape)
+                         ).astype(jnp.complex64)
+    x, r, p, ap = (mk(ks[2 * i], ks[2 * i + 1]) for i in range(4))
+    alpha = jnp.float32(0.61)
+    pairs = [complex_to_real_pair(v) for v in (x, r, p, ap)]
+    xo, ro, rs = cg_update(alpha, *pairs)
+    np.testing.assert_allclose(np.asarray(real_pair_to_complex(xo)),
+                               np.asarray(x + alpha * p), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(real_pair_to_complex(ro)),
+                               np.asarray(r - alpha * ap), atol=1e-6)
+    r_new = r - alpha * ap
+    assert np.isclose(float(rs),
+                      float(jnp.sum(jnp.abs(r_new) ** 2)), rtol=1e-5)
+    po = cg_xpay(jnp.float32(0.3), pairs[1], pairs[2])
+    np.testing.assert_allclose(np.asarray(real_pair_to_complex(po)),
+                               np.asarray(r + 0.3 * p), atol=1e-6)
+
+
+def test_cg_update_bf16_storage():
+    """bf16 storage dtype round-trips (narrow storage, f32 accumulate)."""
+    key = jax.random.PRNGKey(29)
+    ks = jax.random.split(key, 4)
+    shape = (64, 24, 8)
+    x, r, p, ap = (jax.random.normal(k, shape, jnp.float32).astype(
+        jnp.bfloat16) for k in ks)
+    alpha = jnp.float32(0.37)
+    xo, ro, rs = cg_update(alpha, x, r, p, ap)
+    assert xo.dtype == ro.dtype == jnp.bfloat16
+    assert rs.dtype == jnp.float32
+    xr, rr, rsr = cg_update_ref(alpha, x, r, p, ap)
+    np.testing.assert_allclose(np.asarray(xo, np.float32),
+                               np.asarray(xr, np.float32), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ro, np.float32),
+                               np.asarray(rr, np.float32), atol=1e-6)
+    assert np.isclose(float(rs), float(rsr), rtol=1e-5)
+    po = cg_xpay(jnp.float32(0.25), r, p)
+    assert po.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(po, np.float32),
+        np.asarray(cg_xpay_ref(jnp.float32(0.25), r, p), np.float32),
+        atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [130, 407, 1000])
+def test_cg_update_pad_region_contributes_exactly_zero(n):
+    """Sizes that are not multiples of 128*block_rows: the streaming pad
+    must contribute EXACTLY 0 to the ||r||^2 partial sums."""
+    x = jnp.zeros((n,), jnp.float32)
+    r = jnp.ones((n,), jnp.float32)
+    p = jnp.full((n,), 2.0, jnp.float32)
+    ap = jnp.full((n,), 3.0, jnp.float32)
+    # alpha = 0: r is untouched, so any nonzero pad contribution is visible
+    xo, ro, rs = cg_update(jnp.float32(0.0), x, r, p, ap)
+    assert float(rs) == float(n)
+    assert xo.shape == ro.shape == (n,)
+    # alpha != 0: pad lanes are 0 - alpha*0 = 0 and must stay invisible
+    _, ro2, rs2 = cg_update(jnp.float32(0.5), x, r, p, ap)
+    assert float(rs2) == float(jnp.sum(ro2 * ro2))
+    np.testing.assert_allclose(np.asarray(ro2), np.full((n,), -0.5),
+                               atol=1e-7)
 
 
 def test_cg_pallas_end_to_end(fields):
