@@ -16,6 +16,12 @@ machine-readable perf trajectory (iterations, wall-clock, sites/s, and the
 fused CG engine's per-iteration kernel/traffic shape).  CI uploads it and
 ``check_solver_regression.py`` guards the 4⁴ smoke-lattice iteration count
 against ``benchmarks/BENCH_solvers_baseline.json``.
+
+The ``batch_sweep`` section records the multi-RHS batched Schur solve for
+N ∈ {1, 4, 8, 16} right-hand sides on the Pallas parity-dslash path —
+sites·RHS/s per batch size, demonstrating the gauge-amortization win (one
+gauge read feeds N spinors), with per-N iteration counts regression-guarded
+by the same baseline file.
 """
 
 from __future__ import annotations
@@ -32,6 +38,26 @@ SMOKE_DIMS = (4, 4, 4, 4)
 SMOKE_SEED = 7
 SMOKE_MASS = 0.1
 SMOKE_TOL = 1e-6
+
+# RHS-batch sizes for the gauge-amortization sweep (ISSUE 3 acceptance:
+# sites·RHS/s must grow monotonically from N=1 to N>=8 on the Pallas path).
+BATCH_SIZES = (1, 4, 8, 16)
+
+
+def _timed(fn):
+    """((result, ...), wall-clock µs) of fn() after a warm-up/compile call.
+
+    ``fn`` must return a tuple whose first element is the jax output to
+    drain (block_until_ready) — the shared timing protocol of every solve
+    section below.
+    """
+    import jax
+
+    jax.block_until_ready(fn()[0])  # warm-up/compile, fully drained
+    t0 = time.time()
+    out = fn()
+    jax.block_until_ready(out[0])
+    return out, (time.time() - t0) * 1e6
 
 _SCRIPT = r"""
 import os
@@ -87,19 +113,12 @@ def _run_eo_comparison() -> list[tuple[str, float, str]]:
         r = dslash(u, x, mass) - b
         return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
 
-    def timed(fn):
-        jax.block_until_ready(fn()[0])  # warm-up/compile, fully drained
-        t0 = time.time()
-        out = fn()
-        jax.block_until_ready(out[0])
-        return out, (time.time() - t0) * 1e6
-
-    (x_f, st_f), us_f = timed(lambda: cgnr(
+    (x_f, st_f), us_f = _timed(lambda: cgnr(
         lambda v: dslash(u, v, mass), lambda v: dslash_dagger(u, v, mass),
         b, tol=tol, maxiter=1000))
-    (x_e, st_e), us_e = timed(lambda: solve_wilson_eo(
+    (x_e, st_e), us_e = _timed(lambda: solve_wilson_eo(
         u, b, mass, tol=tol, maxiter=1000))
-    (x_m, st_m), us_m = timed(lambda: solve_wilson_eo_mp(
+    (x_m, st_m), us_m = _timed(lambda: solve_wilson_eo_mp(
         u, b, mass, tol=tol, inner_maxiter=100, max_outer=40))
 
     it_f, it_e = int(st_f.iterations), int(st_e.iterations)
@@ -137,16 +156,9 @@ def _run_eo_smoke() -> dict:
         r = dslash(u, x, SMOKE_MASS) - b
         return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
 
-    def timed(fn):
-        jax.block_until_ready(fn()[0])  # warm-up/compile, fully drained
-        t0 = time.time()
-        out = fn()
-        jax.block_until_ready(out[0])
-        return out, (time.time() - t0) * 1e6
-
-    (x_ref, st_ref), us_ref = timed(lambda: solve_wilson_eo(
+    (x_ref, st_ref), us_ref = _timed(lambda: solve_wilson_eo(
         u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
-    (x_pal, st_pal), us_pal = timed(lambda: solve_wilson_eo(
+    (x_pal, st_pal), us_pal = _timed(lambda: solve_wilson_eo(
         u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
         use_pallas=True, interpret=True))
 
@@ -163,6 +175,54 @@ def _run_eo_smoke() -> dict:
         "sites_per_s_ref": sites_per_s(st_ref, us_ref),
         "sites_per_s_pallas": sites_per_s(st_pal, us_pal),
         "pallas_interpret_mode": True,
+    }
+
+
+def _run_batch_sweep() -> dict:
+    """Multi-RHS batched Schur solve: throughput vs batch size N.
+
+    One gauge field, N random right-hand sides, one masked CG loop on the
+    Pallas parity-dslash path: every matvec reads each gauge plane once
+    and streams all N spinor planes through it, so the per-RHS cost of
+    the launch/transport overhead falls like 1/N — sites·RHS/s should
+    rise monotonically with N until compute dominates.  Per-N iteration
+    counts feed the committed baseline (deterministic seed), wall-clock
+    is informational.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LatticeShape, random_gauge, random_spinor,
+                            solve_wilson_eo_batched)
+    from repro.core.wilson import dslash
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, lat)
+    n_max = max(BATCH_SIZES)
+    b_all = jnp.stack([random_spinor(jax.random.fold_in(kb, i), lat)
+                       for i in range(n_max)])
+
+    entries = []
+    for n in BATCH_SIZES:
+        b_n = b_all[:n]
+        (x, st), us = _timed(lambda b=b_n: solve_wilson_eo_batched(
+            u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
+            use_pallas=True, interpret=True))
+        res = jax.vmap(lambda xx, bb: dslash(u, xx, SMOKE_MASS) - bb)(x, b_n)
+        rel = float(jnp.max(
+            jnp.linalg.norm(res.reshape(n, -1), axis=1)
+            / jnp.linalg.norm(b_n.reshape(n, -1), axis=1)))
+        iters = int(st.iterations)
+        entries.append({
+            "n_rhs": n, "iters": iters, "us": us,
+            "max_rel_res": rel, "all_converged": bool(jnp.all(st.converged)),
+            "sites_rhs_per_s": lat.volume * n * iters / max(us / 1e6, 1e-12),
+        })
+    return {
+        "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
+        "seed": SMOKE_SEED, "pallas_interpret_mode": True,
+        "entries": entries,
     }
 
 
@@ -242,6 +302,16 @@ def run() -> list[tuple[str, float, str]]:
                      f"sites_per_s={smoke['sites_per_s_pallas']:.0f}"))
     except Exception as e:
         rows.append(("eo_smoke", -1.0, f"FAILED:{e!r:.200}"))
+    try:
+        sweep = _run_batch_sweep()
+        report["batch_sweep"] = sweep
+        for e in sweep["entries"]:
+            rows.append((f"cgnr_eo_batched_n{e['n_rhs']}", e["us"],
+                         f"iters={e['iters']};"
+                         f"max_rel_res={e['max_rel_res']:.2e};"
+                         f"sites_rhs_per_s={e['sites_rhs_per_s']:.0f}"))
+    except Exception as e:
+        rows.append(("batch_sweep", -1.0, f"FAILED:{e!r:.200}"))
     try:
         shape = _fused_engine_shape()
         report["fused_engine"] = shape

@@ -2,11 +2,13 @@
 """CI guard: the even-odd Schur CGNR must not regress on the smoke lattice.
 
 Compares the ``eo_smoke`` entry of a freshly generated ``BENCH_solvers.json``
-against the committed ``benchmarks/BENCH_solvers_baseline.json``.  Iteration
-count is an ALGORITHMIC property (deterministic seed, fixed tolerance), so
-it is the cheap, noise-free regression signal — wall-clock on shared CI
-runners is not.  A small slack absorbs cross-platform float reduction
-differences.
+against the committed ``benchmarks/BENCH_solvers_baseline.json``, plus the
+``batch_sweep`` per-N iteration counts of the multi-RHS batched solve (the
+masked batched loop must converge in as few iterations as the committed
+run for every batch size N).  Iteration count is an ALGORITHMIC property
+(deterministic seed, fixed tolerance), so it is the cheap, noise-free
+regression signal — wall-clock on shared CI runners is not.  A small slack
+absorbs cross-platform float reduction differences.
 
 Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
         check_solver_regression.py --generate [baseline.json]
@@ -33,6 +35,45 @@ GUARDED_KEYS = ("cgnr_eo_iters", "cgnr_eo_pallas_iters")
 PROBLEM_KEYS = ("lattice", "mass", "tol", "seed")
 
 
+def _check_batch_sweep(cur: dict, base: dict) -> bool:
+    """Guard the per-N iteration counts of the multi-RHS batched smoke.
+
+    The batched loop's trip count is the slowest RHS's iteration count —
+    deterministic for the committed seed, so regressions in the masked
+    batched solver (or the batched kernels feeding it) show up here.
+    Returns True on failure.
+    """
+    cur_bs, base_bs = cur.get("batch_sweep"), base.get("batch_sweep")
+    if not base_bs:
+        return False  # baseline predates the batched path: nothing to guard
+    if not cur_bs:
+        print("solver-regression guard: baseline has 'batch_sweep' but the "
+              "current BENCH_solvers.json does not")
+        return True
+    for key in PROBLEM_KEYS:
+        if cur_bs.get(key) != base_bs.get(key):
+            print(f"solver-regression guard: batch_sweep '{key}' mismatch "
+                  f"({cur_bs.get(key)} vs baseline {base_bs.get(key)}) — "
+                  "regenerate benchmarks/BENCH_solvers_baseline.json")
+            return True
+    cur_by_n = {e.get("n_rhs"): e for e in cur_bs.get("entries", [])}
+    failed = False
+    for ref in base_bs.get("entries", []):
+        n = ref.get("n_rhs")
+        got = cur_by_n.get(n)
+        if got is None:
+            print(f"solver-regression guard: batch_sweep entry n_rhs={n} "
+                  "missing from current run")
+            failed = True
+            continue
+        limit = int(ref["iters"]) + SLACK_ITERS
+        verdict = "OK" if int(got["iters"]) <= limit else "REGRESSION"
+        print(f"  batched n_rhs={n}: {got['iters']} iters "
+              f"(baseline {ref['iters']}, limit {limit}) {verdict}")
+        failed = failed or int(got["iters"]) > limit
+    return failed
+
+
 def main(argv: list[str]) -> int:
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_solvers_baseline.json")
@@ -42,7 +83,8 @@ def main(argv: list[str]) -> int:
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
         from benchmarks import bench_solvers
-        cur = {"eo_smoke": bench_solvers._run_eo_smoke()}
+        cur = {"eo_smoke": bench_solvers._run_eo_smoke(),
+               "batch_sweep": bench_solvers._run_batch_sweep()}
     else:
         cur_path = argv[1] if len(argv) > 1 else "BENCH_solvers.json"
         if len(argv) > 2:
@@ -86,9 +128,11 @@ def main(argv: list[str]) -> int:
         verdict = "OK" if int(got) <= limit else "REGRESSION"
         print(f"  {key}: {got} (baseline {ref}, limit {limit}) {verdict}")
         failed = failed or int(got) > limit
+    failed = _check_batch_sweep(cur, base) or failed
     if failed:
-        print("solver-regression guard: FAILED — cgnr_eo iteration count "
-              f"regressed on the {base_eo['lattice']} smoke lattice")
+        print("solver-regression guard: FAILED — a guarded iteration count "
+              f"regressed on the {base_eo['lattice']} smoke lattice (see "
+              "the REGRESSION line(s) above)")
         return 1
     print("solver-regression guard: passed")
     return 0

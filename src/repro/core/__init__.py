@@ -11,7 +11,8 @@ Public surface:
 """
 
 from repro.core.lattice import (LatticeShape, complex_to_real_pair,
-                                eo_row_offset, field_dot, field_norm2,
+                                eo_row_offset, field_dot, field_dot_batched,
+                                field_norm2, field_norm2_batched,
                                 merge_eo, merge_eo_gauge, pack_gauge,
                                 pack_spinor, parity_masks, random_gauge,
                                 random_spinor, real_pair_to_complex,
@@ -26,4 +27,5 @@ from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, apply_gamma5, dslash,
                                dslash_packed, normal_op, normal_op_packed,
                                schur_dagger, schur_normal_op, schur_op)
 from repro.core.eo import (EOOperators, eo_operators, eo_operators_packed,
-                           solve_wilson_eo, solve_wilson_eo_mp)
+                           solve_wilson_eo, solve_wilson_eo_batched,
+                           solve_wilson_eo_mp)

@@ -25,6 +25,12 @@ and the per-iteration vector algebra streams through the two fused
 ``cg_fused`` kernels injected into the solver's ``update``/``xpay`` hooks.
 Packing is an isometry (Re⟨a,b⟩ equals the packed real dot product), so
 the real-arithmetic CG produces exactly the complex CGNR iterates.
+
+``solve_wilson_eo_batched`` is the multi-RHS entry point: N right-hand
+sides against ONE gauge field ride a single masked CG loop whose matvec
+amortizes every gauge-plane read across the batch — the workload-scaling
+lever of DESIGN.md §6.  Per-RHS convergence masking keeps each system's
+returned iterate bitwise identical to its independent single-RHS solve.
 """
 
 from __future__ import annotations
@@ -77,15 +83,35 @@ def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
     """The Schur-system blocks on PACKED half fields, Pallas fast path.
 
     The returned callables act on packed (T, Z, Y, 24, Xh) real half
-    fields; ``u_e``/``u_o`` are the packed per-parity link fields.  The
-    Pallas parity kernels hard-code the Wilson parameter r = 1 (their
-    spin-projection tables need the rank-2 projectors).
+    fields — or (N, T, Z, Y, 24, Xh) RHS batches: every block is
+    rank-polymorphic, and the Pallas kernels amortize each gauge-plane
+    fetch across the whole batch (see DESIGN.md §6).
+
+    Supported-parameter matrix (packed path, ``use_pallas`` either way —
+    the packed references round-trip through the same spin-projection
+    contract):
+
+    ==========  =======================  ==============================
+    parameter   supported                notes
+    ==========  =======================  ==============================
+    r           1.0 only                 rank-2 (1 ∓ γ_mu) projectors
+                                         are baked into the trace-time
+                                         half-spinor tables; any other r
+                                         raises ``NotImplementedError``
+    mass        any float                trace-time constant
+    dtype       f32 / bf16 storage       kernels accumulate in f32
+    batch       none or leading N axis   gauge read once per grid step
+    ==========  =======================  ==============================
+
+    For r != 1 use the natural-layout blocks (:func:`eo_operators`), which
+    build the full rank-4 projectors.
     """
-    if r != 1.0:  # ValueError, not assert: must survive `python -O`
-        raise ValueError(
-            "the Pallas parity kernels hard-code r=1 (their spin-projection "
-            f"tables need rank-2 projectors); got r={r}. Use the jnp "
-            "reference path (use_pallas=False) for r != 1.")
+    if r != 1.0:  # a real exception, not assert: must survive `python -O`
+        raise NotImplementedError(
+            "the packed/Pallas parity kernels hard-code r=1 (their "
+            "trace-time spin-projection tables need the rank-2 projectors "
+            f"(1 -+ gamma_mu)); got r={r}. Use the natural-layout path "
+            "(eo_operators / solve_wilson_eo(use_pallas=False)) for r != 1.")
     # local import: repro.core is imported by the kernels package, so a
     # module-level import here would be circular.
     from repro.kernels.wilson_dslash import ops as wops
@@ -142,11 +168,63 @@ def solve_wilson_eo(u: Array, b: Array, mass, *, r: float = 1.0,
     return merge_eo(x_e, x_o), stats
 
 
+def solve_wilson_eo_batched(u: Array, b: Array, mass, *, r: float = 1.0,
+                            tol: float = 1e-8, maxiter: int = 1000,
+                            use_pallas: bool = True,
+                            interpret: bool | None = None,
+                            bz: int | None = None,
+                            ) -> tuple[Array, solvers.SolveStats]:
+    """Solve D x_n = b_n for a BATCH of right-hand sides in one CG loop.
+
+    Args:
+      u: (4, T, Z, Y, X, 3, 3) gauge field, shared by the whole batch —
+        this sharing is the point: the matvec reads each gauge plane once
+        per grid step and streams all N spinor planes through it, so the
+        dslash arithmetic intensity grows with N (DESIGN.md §6).
+      b: (N, T, Z, Y, X, 4, 3) batched RHS.
+    Returns:
+      (x, stats): x is (N, T, Z, Y, X, 4, 3); ``stats.iterations`` is the
+      masked loop's trip count (= the slowest system's iterations) while
+      ``stats.residual_norm2``/``stats.converged`` are per-RHS (N,).
+
+    Per-RHS convergence masking freezes each system the iteration it
+    meets ITS OWN ``tol``: the returned x_n is bitwise the iterate an
+    independent single-RHS solve of b_n would have returned.
+    ``use_pallas=True`` runs packed real half fields through the batched
+    parity kernels and the batched fused vector engine; ``False`` vmaps
+    the natural-layout reference blocks (same Krylov iteration).
+    """
+    if b.ndim != 7:  # a real exception, not assert: must survive `python -O`
+        raise ValueError(
+            f"batched RHS must be (N, T, Z, Y, X, 4, 3); got {b.shape}. "
+            "For a single RHS use solve_wilson_eo (or add a leading axis).")
+    b_e, b_o = jax.vmap(split_eo)(b)
+    if use_pallas:
+        from repro.kernels.cg_fused import fused_engine_batched  # circularity
+        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
+        update, xpay = fused_engine_batched(interpret=interpret)
+        (x_e, x_o), stats = solvers.cgnr_eo(
+            ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
+            pack_spinor(b_e), pack_spinor(b_o),
+            tol=tol, maxiter=maxiter, update=update, xpay=xpay,
+            batched=True)
+        x_e = unpack_spinor(x_e, dtype=b.dtype)
+        x_o = unpack_spinor(x_o, dtype=b.dtype)
+    else:
+        ops = eo_operators(u, mass, r=r)
+        (x_e, x_o), stats = solvers.cgnr_eo(
+            jax.vmap(ops.dhat), jax.vmap(ops.dhat_dag), jax.vmap(ops.d_eo),
+            jax.vmap(ops.d_oe), ops.m_inv, b_e, b_o,
+            tol=tol, maxiter=maxiter, batched=True)
+    return jax.vmap(merge_eo)(x_e, x_o), stats
+
+
 def solve_wilson_eo_mp(u: Array, b: Array, mass, *, r: float = 1.0,
                        tol: float = 1e-6, inner_tol: float = 5e-2,
                        inner_maxiter: int = 200, max_outer: int = 50,
                        low_dtype=jnp.bfloat16, dot=field_dot,
-                       norm2=field_norm2,
+                       norm2=field_norm2, use_pallas: bool = False,
+                       interpret: bool | None = None, bz: int | None = None,
                        ) -> tuple[Array, solvers.SolveStats]:
     """Even-odd + mixed-precision: bf16 half-size inner CG, f32 updates.
 
@@ -156,7 +234,23 @@ def solve_wilson_eo_mp(u: Array, b: Array, mass, *, r: float = 1.0,
     stored iterates are bf16 while every contraction inside the operator
     still accumulates wide — narrow datapath, wide accumulator, as on
     the paper's FPGA.
+
+    ``use_pallas=True`` keeps the WHOLE mixed-precision solve on the
+    packed-field fast path: the low representation is simply the bf16
+    packed real half field (kernels read bf16 storage and accumulate in
+    f32 registers), so ``to_low``/``to_high`` are plain storage casts at
+    the reliable-update boundary — once per outer cycle, on half fields —
+    rather than standalone complex<->real-pair conversion passes, and the
+    inner CG streams through the parity kernels + fused vector engine.
+    Requires r = 1 (raises ``NotImplementedError`` otherwise; see
+    :func:`eo_operators_packed` for the supported-parameter matrix).
     """
+    if use_pallas:
+        return _solve_wilson_eo_mp_pallas(
+            u, b, mass, r=r, tol=tol, inner_tol=inner_tol,
+            inner_maxiter=inner_maxiter, max_outer=max_outer,
+            low_dtype=low_dtype, dot=dot, norm2=norm2,
+            interpret=interpret, bz=bz)
     ops = eo_operators(u, mass, r=r)
     b_e, b_o = split_eo(b)
     high = b.dtype
@@ -184,3 +278,52 @@ def solve_wilson_eo_mp(u: Array, b: Array, mass, *, r: float = 1.0,
         to_high=lambda w: real_pair_to_complex(w, dtype=high),
         dot=dot, norm2=norm2)
     return merge_eo(x_e, x_o), stats
+
+
+def _solve_wilson_eo_mp_pallas(u: Array, b: Array, mass, *, r, tol,
+                               inner_tol, inner_maxiter, max_outer,
+                               low_dtype, dot, norm2, interpret, bz,
+                               ) -> tuple[Array, solvers.SolveStats]:
+    """Mixed-precision Schur solve entirely on packed real half fields.
+
+    Low representation = the packed field itself in ``low_dtype`` storage
+    (the packing is already real, so no real-pair view is needed): links
+    are rounded once up front, the inner CG's iterates/updates live in
+    bf16 through the fused vector engine, and the parity kernels
+    accumulate every contraction in f32 registers — T1's narrow storage /
+    wide accumulate with zero standalone full-field cast passes inside
+    the matvec.
+    """
+    # local import: see eo_operators_packed.
+    from repro.kernels.cg_fused import fused_engine
+    from repro.kernels.wilson_dslash import ops as wops
+
+    ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
+    b_e, b_o = split_eo(b)
+    pb_e = pack_spinor(b_e)
+    pb_o = pack_spinor(b_o)
+    high = pb_e.dtype
+
+    # one up-front rounding of the links — the low operator's gauge reads
+    # then stream bf16 (half the gauge HBM traffic), accumulating wide.
+    u_e_lo = ops.u_e.astype(low_dtype)
+    u_o_lo = ops.u_o.astype(low_dtype)
+    kw = dict(bz=bz, interpret=interpret)
+
+    def a_low(w: Array) -> Array:  # low storage in/out, f32 registers inside
+        return wops.schur_normal_op(u_e_lo, u_o_lo, w, mass, **kw)
+
+    def a_high(v: Array) -> Array:
+        return wops.schur_normal_op(ops.u_e, ops.u_o, v, mass, **kw)
+
+    update, xpay = fused_engine(interpret=interpret)
+    (x_e, x_o), stats = solvers.mpcg_eo(
+        a_low, a_high, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
+        pb_e, pb_o, tol=tol, inner_tol=inner_tol,
+        inner_maxiter=inner_maxiter, max_outer=max_outer,
+        low_dtype=low_dtype,
+        to_low=lambda v: v.astype(low_dtype),
+        to_high=lambda w: w.astype(high),
+        dot=dot, norm2=norm2, update=update, xpay=xpay)
+    return merge_eo(unpack_spinor(x_e, dtype=b.dtype),
+                    unpack_spinor(x_o, dtype=b.dtype)), stats

@@ -98,21 +98,24 @@ def unit_gauge(lat: LatticeShape, dtype=jnp.complex64) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def pack_spinor(psi: jax.Array, dtype=jnp.float32) -> jax.Array:
-    """(T,Z,Y,X,4,3) complex -> (T,Z,Y,24,X) real."""
+    """(..., X, 4, 3) complex -> (..., 24, X) real.
+
+    The canonical site axes are (T, Z, Y, X); any leading axes (e.g. an
+    RHS-batch axis in front of T) pass through unchanged.
+    """
     re = jnp.real(psi).astype(dtype)
     im = jnp.imag(psi).astype(dtype)
-    # (T,Z,Y,X,4,3,2)
+    # (..., X, 4, 3, 2)
     p = jnp.stack([re, im], axis=-1)
-    t, z, y, x = psi.shape[:4]
-    p = p.reshape(t, z, y, x, SPINOR_S)
-    return jnp.moveaxis(p, 3, 4)  # X to innermost
+    p = p.reshape(psi.shape[:-2] + (SPINOR_S,))
+    return jnp.moveaxis(p, -2, -1)  # X to innermost
 
 
 def unpack_spinor(p: jax.Array, dtype=jnp.complex64) -> jax.Array:
-    """(T,Z,Y,24,X) real -> (T,Z,Y,X,4,3) complex."""
-    t, z, y, s, x = p.shape
+    """(..., 24, X) real -> (..., X, 4, 3) complex (leading axes pass through)."""
+    s, x = p.shape[-2:]
     assert s == SPINOR_S
-    q = jnp.moveaxis(p, 4, 3).reshape(t, z, y, x, NSPIN, NCOL, 2)
+    q = jnp.moveaxis(p, -1, -2).reshape(p.shape[:-2] + (x, NSPIN, NCOL, 2))
     return (q[..., 0] + 1j * q[..., 1]).astype(dtype)
 
 
@@ -263,3 +266,19 @@ def field_norm2(a: jax.Array) -> jax.Array:
         return jnp.sum((jnp.real(a) ** 2 + jnp.imag(a) ** 2).astype(acc))
     acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
     return jnp.sum(a.astype(acc) ** 2)
+
+
+# Batched (multi-RHS) reductions: leading axis is the RHS batch, each RHS
+# reduced independently to a per-RHS scalar.  Implemented as vmaps of the
+# single-RHS reductions so a batched solve accumulates each slice in the
+# SAME order as N independent solves — the batched-vs-looped equivalence
+# tests rely on this being bitwise.
+
+def field_dot_batched(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-RHS <a_n, b_n> over all non-batch axes; returns shape (N,)."""
+    return jax.vmap(field_dot)(a, b)
+
+
+def field_norm2_batched(a: jax.Array) -> jax.Array:
+    """Per-RHS ||a_n||^2 over all non-batch axes; returns shape (N,)."""
+    return jax.vmap(field_norm2)(a)

@@ -30,6 +30,15 @@ Design notes
   fused reduction, issued alongside the matvec — the cluster-scale
   analogue of the paper's transfer/compute overlap (T4 in DESIGN.md).
 
+* ``cg``/``cg_trace`` (and the cgnr/cgnr_eo/mpcg/mpcg_eo forwarders) are
+  **multi-RHS batched** behind ``batched=True``: operands carry a leading
+  RHS-batch axis, ``dot``/``norm2`` return per-RHS (N,) scalars, and every
+  iteration applies per-RHS ``alpha``/``beta`` under a convergence MASK —
+  a converged system's ``alpha`` is forced to 0 (its x/r stay bitwise
+  frozen) and its direction update is gated off, so one slow system never
+  perturbs the already-converged ones.  The loop runs until every RHS
+  meets its own relative tolerance (see DESIGN.md §6).
+
 * All solvers are ``lax.while_loop`` based and fully jittable.
 """
 
@@ -40,7 +49,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lattice import field_dot, field_norm2
+from repro.core.lattice import (field_dot, field_dot_batched, field_norm2,
+                                field_norm2_batched)
 
 Array = jax.Array
 Op = Callable[[Array], Array]
@@ -50,11 +60,29 @@ class SolveStats(NamedTuple):
     iterations: Array          # total (inner) iterations executed
     outer_iterations: Array    # outer/reliable-update cycles (1 for plain CG)
     residual_norm2: Array      # final TRUE residual squared (high precision)
-    converged: Array           # bool
+    converged: Array           # bool; per-RHS (N,) for batched solves
 
 
 def _real(x):
     return jnp.real(x) if jnp.iscomplexobj(x) else x
+
+
+def _bcast(s: Array, field: Array) -> Array:
+    """Broadcast per-RHS (N,) scalars over a batched field's site axes."""
+    return s.reshape(s.shape + (1,) * (field.ndim - 1))
+
+
+def _batched_defaults(dot, norm2):
+    """Swap the unbatched default reductions for their per-RHS versions."""
+    if dot is field_dot:
+        dot = field_dot_batched
+    if norm2 is field_norm2:
+        norm2 = field_norm2_batched
+    return dot, norm2
+
+
+# the engine's in-stream norm can be trusted when norm2 is a known default
+_DEFAULT_NORM2 = (field_norm2, field_norm2_batched)
 
 
 # ---------------------------------------------------------------------------
@@ -64,7 +92,8 @@ def _real(x):
 def cg(op: Op, b: Array, x0: Array | None = None, *,
        tol: float = 1e-8, maxiter: int = 1000,
        dot=field_dot, norm2=field_norm2,
-       update=None, xpay=None) -> tuple[Array, SolveStats]:
+       update=None, xpay=None, batched: bool = False,
+       ) -> tuple[Array, SolveStats]:
     """Standard conjugate gradient for a Hermitian positive-definite ``op``.
 
     Stops when ``||r||^2 <= tol^2 * ||b||^2`` or at ``maxiter``.
@@ -78,7 +107,18 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     is recomputed instead — a distributed fused engine should fold the
     collective into ``update`` itself and leave ``norm2`` for the
     initial residual only.
+
+    ``batched=True``: ``b`` (and ``op``'s in/out) carry a leading RHS-batch
+    axis; each system stops against ITS OWN ``tol² ||b_n||²`` through the
+    convergence mask — a converged system's ``alpha`` is masked to 0 (so
+    ``x_n``/``r_n`` freeze bitwise, even inside an injected engine) and
+    its direction update is gated off; the loop runs while ANY system is
+    active.  Default ``dot``/``norm2`` swap to their per-RHS versions; an
+    injected engine must follow the batched contract (per-RHS ``rs`` from
+    ``update``, gate argument on ``xpay``; see DESIGN.md §6).
     """
+    if batched:
+        dot, norm2 = _batched_defaults(dot, norm2)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - op(x) if x0 is not None else b
     p = r
@@ -88,23 +128,37 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
 
     def cond(carry):
         k, x, r, p, rs = carry
-        return jnp.logical_and(k < maxiter, rs > limit)
+        return jnp.logical_and(k < maxiter, jnp.any(rs > limit))
 
     def body(carry):
         k, x, r, p, rs = carry
         ap = op(p)
-        alpha = rs / _real(dot(p, ap))
+        pap = _real(dot(p, ap))
+        if batched:
+            active = rs > limit
+            # alpha = 0 both for frozen systems AND on p·Ap breakdown (the
+            # unbatched path fails visibly as inf/NaN; a masked batch must
+            # skip the update, matching cg_trace's convention)
+            safe = jnp.logical_and(active, pap != 0)
+            alpha = jnp.where(safe, rs / jnp.where(pap == 0, 1.0, pap), 0.0)
+        else:
+            alpha = rs / pap
         if update is None:
-            a = alpha.astype(b.dtype)
+            a = (_bcast(alpha, b) if batched else alpha).astype(b.dtype)
             x = x + a * p
             r = r - a * ap
             rs_new = _real(norm2(r))
         else:
             x, r, rs_new = update(alpha, x, r, p, ap)
-            if norm2 is not field_norm2:  # don't bypass an injected reduction
+            if norm2 not in _DEFAULT_NORM2:  # don't bypass an injected reduction
                 rs_new = _real(norm2(r))
-        beta = rs_new / rs
-        p = (r + beta.astype(b.dtype) * p) if xpay is None else xpay(beta, r, p)
+        beta = rs_new / (jnp.where(rs == 0, 1.0, rs) if batched else rs)
+        if xpay is None:
+            bb = (_bcast(beta, b) if batched else beta).astype(b.dtype)
+            p_new = r + bb * p
+            p = jnp.where(_bcast(active, b), p_new, p) if batched else p_new
+        else:
+            p = xpay(beta, r, p, active) if batched else xpay(beta, r, p)
         return (k + 1, x, r, p, rs_new)
 
     k, x, r, p, rs = jax.lax.while_loop(
@@ -116,18 +170,32 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
 
 def cg_trace(op: Op, b: Array, *, iters: int,
              dot=field_dot, norm2=field_norm2,
-             update=None, xpay=None) -> tuple[Array, Array]:
+             update=None, xpay=None, batched: bool = False,
+             tol: float | None = None) -> tuple[Array, Array]:
     """CG for a fixed number of iterations, recording ||r||^2 per iteration.
 
     Used by convergence benchmarks (paper §2/§3.2 mixed-precision study);
     ``lax.scan`` based so the whole history lowers to one XLA program.
     ``update``/``xpay`` inject the fused vector engine exactly as in
     :func:`cg`.
+
+    ``batched=True`` records a per-RHS history of shape (iters, N); when
+    ``tol`` is also given, the convergence mask of :func:`cg` applies and
+    a converged system's history entries stay flat at their frozen value —
+    the mask-freeze property the batched tests assert on.  ``tol`` is a
+    masking knob of the batched mode only (a fixed-iteration single-RHS
+    trace has nothing to mask) and is rejected without ``batched=True``.
     """
+    if tol is not None and not batched:
+        raise ValueError("cg_trace: tol enables the per-RHS convergence "
+                         "mask and requires batched=True")
+    if batched:
+        dot, norm2 = _batched_defaults(dot, norm2)
     x = jnp.zeros_like(b)
     r = b
     p = r
     rs = _real(norm2(r))
+    limit = None if tol is None else (tol ** 2) * _real(norm2(b))
 
     def step(carry, _):
         x, r, p, rs = carry
@@ -135,17 +203,31 @@ def cg_trace(op: Op, b: Array, *, iters: int,
         pap = _real(dot(p, ap))
         safe = pap != 0
         alpha = jnp.where(safe, rs / jnp.where(safe, pap, 1.0), 0.0)
+        if batched and limit is not None:
+            active = rs > limit
+            alpha = jnp.where(active, alpha, 0.0)
+        else:
+            active = None
         if update is None:
-            a = alpha.astype(b.dtype)
+            a = (_bcast(alpha, b) if batched else alpha).astype(b.dtype)
             x = x + a * p
             r = r - a * ap
             rs_new = _real(norm2(r))
         else:
             x, r, rs_new = update(alpha, x, r, p, ap)
-            if norm2 is not field_norm2:  # don't bypass an injected reduction
+            if norm2 not in _DEFAULT_NORM2:  # don't bypass an injected reduction
                 rs_new = _real(norm2(r))
         beta = jnp.where(rs > 0, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
-        p = (r + beta.astype(b.dtype) * p) if xpay is None else xpay(beta, r, p)
+        if xpay is None:
+            bb = (_bcast(beta, b) if batched else beta).astype(b.dtype)
+            p_new = r + bb * p
+            p = (jnp.where(_bcast(active, b), p_new, p)
+                 if active is not None else p_new)
+        elif batched:
+            gate = active if active is not None else jnp.ones_like(rs, bool)
+            p = xpay(beta, r, p, gate)
+        else:
+            p = xpay(beta, r, p)
         return (x, r, p, rs_new), rs_new
 
     (x, r, p, rs), hist = jax.lax.scan(step, (x, r, p, rs), None, length=iters)
@@ -159,7 +241,9 @@ def cg_trace(op: Op, b: Array, *, iters: int,
 def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
     """Solve D x = b for non-Hermitian D via D^dag D x = D^dag b.
 
-    Keyword arguments (including ``update``/``xpay``) forward to :func:`cg`.
+    Keyword arguments (including ``update``/``xpay``/``batched``) forward
+    to :func:`cg`; for a batched solve the operators must accept the
+    leading RHS-batch axis.
     """
     return cg(lambda v: d_dag_op(d_op(v)), d_dag_op(b), **kw)
 
@@ -191,7 +275,7 @@ def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
 def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
             b_e: Array, b_o: Array, *, tol: float = 1e-8,
             maxiter: int = 1000, dot=field_dot, norm2=field_norm2,
-            update=None, xpay=None,
+            update=None, xpay=None, batched: bool = False,
             ) -> tuple[tuple[Array, Array], SolveStats]:
     """Even-odd Schur-preconditioned CGNR.
 
@@ -200,7 +284,9 @@ def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
         even-parity half fields.
       d_eo, d_oe:     the parity-changing hopping blocks.
       m_inv:          applies M_oo^{-1} (for Wilson: scale by 1/(m+4r)).
-      b_e, b_o:       the RHS split by parity.
+      b_e, b_o:       the RHS split by parity; a leading RHS-batch axis on
+        both (with ``batched=True`` and batch-capable operator blocks)
+        solves all N systems in one masked CG loop.
       update, xpay:   optional fused vector engine, forwarded to :func:`cg`.
     Returns:
       ((x_e, x_o), SolveStats) — merge with ``lattice.merge_eo`` for the
@@ -209,7 +295,7 @@ def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
     b_hat = b_e - d_eo(m_inv(b_o))
     x_e, stats = cg(lambda v: dhat_dag(dhat(v)), dhat_dag(b_hat),
                     tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
-                    update=update, xpay=xpay)
+                    update=update, xpay=xpay, batched=batched)
     x_o = m_inv(b_o - d_oe(x_e))
     return (x_e, x_o), stats
 
@@ -220,6 +306,7 @@ def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
             inner_maxiter: int = 200, max_outer: int = 50,
             low_dtype=jnp.bfloat16, to_low=None, to_high=None,
             dot=field_dot, norm2=field_norm2, update=None, xpay=None,
+            batched: bool = False,
             ) -> tuple[tuple[Array, Array], SolveStats]:
     """Even-odd reduction composed with mixed-precision reliable-update CG.
 
@@ -236,7 +323,7 @@ def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
                       inner_tol=inner_tol, inner_maxiter=inner_maxiter,
                       max_outer=max_outer, low_dtype=low_dtype,
                       to_low=to_low, to_high=to_high, dot=dot, norm2=norm2,
-                      update=update, xpay=xpay)
+                      update=update, xpay=xpay, batched=batched)
     x_o = m_inv(b_o - d_oe(x_e))
     return (x_e, x_o), stats
 
@@ -250,7 +337,8 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
          inner_maxiter: int = 200, max_outer: int = 50,
          low_dtype=jnp.bfloat16, to_low=None, to_high=None,
          dot=field_dot, norm2=field_norm2,
-         update=None, xpay=None) -> tuple[Array, SolveStats]:
+         update=None, xpay=None,
+         batched: bool = False) -> tuple[Array, SolveStats]:
     """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
     high-precision true-residual "reliable updates".
 
@@ -266,7 +354,19 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     Inject them when the representations differ structurally — e.g.
     complex64 fields stored as bf16 real pairs (complex bf16 does not
     exist); ``op_low`` then operates on the low representation.
+
+    ``batched=True``: per-RHS outer residuals; the outer loop (and each
+    masked inner solve) runs until every RHS meets the tolerance.  A
+    converged system enters the next inner solve with a ZEROED low
+    residual, so the inner mask deactivates it at iteration 0 (zero RHS
+    ⇒ zero limit), its correction comes back exactly 0, and its solution
+    stops moving — without this, the RELATIVE ``inner_tol`` would keep
+    iterating on a converged system's noise floor every remaining cycle.
+    The reliable update itself is not masked: recomputing an
+    already-converged true residual is harmless.
     """
+    if batched:
+        dot, norm2 = _batched_defaults(dot, norm2)
     high = b.dtype
     if to_low is None:
         to_low = lambda v: v.astype(low_dtype)
@@ -277,13 +377,17 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
 
     def cond(carry):
         outer, inner_total, x, r, rs = carry
-        return jnp.logical_and(outer < max_outer, rs > limit)
+        return jnp.logical_and(outer < max_outer, jnp.any(rs > limit))
 
     def body(carry):
         outer, inner_total, x, r, rs = carry
-        r_low = to_low(r)
+        rhs = r
+        if batched:  # freeze converged systems: zero RHS -> inactive inner CG
+            rhs = jnp.where(_bcast(rs > limit, r), r, jnp.zeros_like(r))
+        r_low = to_low(rhs)
         d, st = cg(op_low, r_low, tol=inner_tol, maxiter=inner_maxiter,
-                   dot=dot, norm2=norm2, update=update, xpay=xpay)
+                   dot=dot, norm2=norm2, update=update, xpay=xpay,
+                   batched=batched)
         x = x + to_high(d)
         r = b - op_high(x)                     # reliable update (true residual)
         rs = _real(norm2(r))

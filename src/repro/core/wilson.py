@@ -391,7 +391,8 @@ def dslash_packed(up: jax.Array, pp: jax.Array, mass,
 
 
 def apply_gamma5_packed(p: jax.Array) -> jax.Array:
-    t, z, y, s, x = p.shape
+    """gamma5 on a packed field's S axis (-2); leading axes pass through."""
+    assert p.shape[-2] == NSPIN * NCOL * 2
     sign = jnp.repeat(jnp.asarray([1.0, 1.0, -1.0, -1.0], dtype=p.dtype),
                       NCOL * 2)
     return p * sign[:, None]

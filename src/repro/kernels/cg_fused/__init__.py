@@ -1,4 +1,10 @@
-from repro.kernels.cg_fused.kernel import cg_update_pallas, cg_xpay_pallas
-from repro.kernels.cg_fused.ops import (cg_pallas, cg_update, cg_xpay,
-                                        fused_engine)
-from repro.kernels.cg_fused.ref import cg_update_ref, cg_xpay_ref
+from repro.kernels.cg_fused.kernel import (cg_update_batched_pallas,
+                                           cg_update_pallas,
+                                           cg_xpay_batched_pallas,
+                                           cg_xpay_pallas)
+from repro.kernels.cg_fused.ops import (cg_pallas, cg_update,
+                                        cg_update_batched, cg_xpay,
+                                        cg_xpay_batched, fused_engine,
+                                        fused_engine_batched)
+from repro.kernels.cg_fused.ref import (cg_update_batched_ref, cg_update_ref,
+                                        cg_xpay_batched_ref, cg_xpay_ref)

@@ -89,3 +89,80 @@ def cg_xpay_pallas(beta: jax.Array, r: jax.Array, p: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
         interpret=resolve_interpret(interpret),
     )(jnp.asarray(beta, jnp.float32).reshape(1, 1), r, p)
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS (batched) variants: vectors are (N, rows, 128), scalars are
+# per-RHS (N,).  The grid gains a leading batch dimension; per-RHS partial
+# sums land in an (N, nb) output so each right-hand side keeps its own
+# residual norm — the solver's convergence mask needs them separately.
+# ---------------------------------------------------------------------------
+
+
+def _update_batched_kernel(alpha_ref, x_ref, r_ref, p_ref, ap_ref,
+                           xo_ref, ro_ref, rs_ref):
+    alpha = alpha_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    ap = ap_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32) + alpha * p
+    r = r_ref[...].astype(jnp.float32) - alpha * ap
+    xo_ref[...] = x.astype(xo_ref.dtype)
+    ro_ref[...] = r.astype(ro_ref.dtype)
+    rs_ref[0, 0] = jnp.sum(r * r)
+
+
+def cg_update_batched_pallas(alpha: jax.Array, x: jax.Array, r: jax.Array,
+                             p: jax.Array, ap: jax.Array, *,
+                             block_rows: int = 256,
+                             interpret: bool | None = None):
+    """Per-RHS fused triad: (x + α_n p, r - α_n Ap, ||r'_n||²) in one pass.
+
+    Inputs are (N, rows, 128) with per-RHS ``alpha`` of shape (N,); a
+    frozen (converged) RHS rides through with α_n = 0, which leaves its
+    x/r slices bitwise untouched.  Returns per-RHS norms of shape (N,).
+    """
+    n, rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0
+    nb = rows // block_rows
+    vec = pl.BlockSpec((1, block_rows, LANE), lambda ni, i: (ni, i, 0))
+    scal = pl.BlockSpec((1, 1), lambda ni, i: (ni, 0))
+    xo, ro, rs = pl.pallas_call(
+        _update_batched_kernel,
+        grid=(n, nb),
+        in_specs=[scal, vec, vec, vec, vec],
+        out_specs=[vec, vec, pl.BlockSpec((1, 1), lambda ni, i: (ni, i))],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
+                   jax.ShapeDtypeStruct(r.shape, r.dtype),
+                   jax.ShapeDtypeStruct((n, nb), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(alpha, jnp.float32).reshape(n, 1), x, r, p, ap)
+    return xo, ro, jnp.sum(rs, axis=1)
+
+
+def _xpay_batched_kernel(beta_ref, gate_ref, r_ref, p_ref, po_ref):
+    beta = beta_ref[0, 0]
+    gate = gate_ref[0, 0] != 0
+    p32 = p_ref[...].astype(jnp.float32)
+    r32 = r_ref[...].astype(jnp.float32)
+    po_ref[...] = jnp.where(gate, r32 + beta * p32, p32).astype(po_ref.dtype)
+
+
+def cg_xpay_batched_pallas(beta: jax.Array, r: jax.Array, p: jax.Array,
+                           gate: jax.Array, *, block_rows: int = 256,
+                           interpret: bool | None = None):
+    """Gated per-RHS direction update: p_n <- r_n + β_n p_n where gate_n,
+    else p_n unchanged (the frozen lane of the convergence mask)."""
+    n, rows, lane = r.shape
+    assert lane == LANE and rows % block_rows == 0
+    nb = rows // block_rows
+    vec = pl.BlockSpec((1, block_rows, LANE), lambda ni, i: (ni, i, 0))
+    scal = pl.BlockSpec((1, 1), lambda ni, i: (ni, 0))
+    return pl.pallas_call(
+        _xpay_batched_kernel,
+        grid=(n, nb),
+        in_specs=[scal, scal, vec, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(beta, jnp.float32).reshape(n, 1),
+      jnp.asarray(gate, jnp.float32).reshape(n, 1), r, p)

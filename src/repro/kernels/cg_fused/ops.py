@@ -12,11 +12,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cg_fused.kernel import (LANE, cg_update_pallas,
+from repro.kernels.cg_fused.kernel import (LANE, cg_update_batched_pallas,
+                                           cg_update_pallas,
+                                           cg_xpay_batched_pallas,
                                            cg_xpay_pallas)
-from repro.kernels.cg_fused.ref import cg_update_ref, cg_xpay_ref
+from repro.kernels.cg_fused.ref import (cg_update_batched_ref, cg_update_ref,
+                                        cg_xpay_batched_ref, cg_xpay_ref)
 
-__all__ = ["cg_update", "cg_xpay", "cg_pallas", "fused_engine"]
+__all__ = ["cg_update", "cg_xpay", "cg_update_batched", "cg_xpay_batched",
+           "cg_pallas", "fused_engine", "fused_engine_batched"]
 
 
 def _pick_block_rows(rows: int) -> int:
@@ -32,6 +36,16 @@ def _to_stream(v: jax.Array):
     pad = rows * LANE - n
     flat = jnp.pad(v.reshape(-1), (0, pad))
     return flat.reshape(rows, LANE), pad
+
+
+def _to_stream_batched(v: jax.Array):
+    """(N, ...) -> (N, rows, 128): each RHS flattened to its own stream."""
+    nb = v.shape[0]
+    per = v.size // nb
+    rows = -(-per // LANE)
+    pad = rows * LANE - per
+    flat = jnp.pad(v.reshape(nb, -1), ((0, 0), (0, pad)))
+    return flat.reshape(nb, rows, LANE), pad
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
@@ -68,6 +82,52 @@ def cg_xpay(beta, r, p, *, interpret: bool | None = None,
     return po.reshape(-1)[:p.size].reshape(shape)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def cg_update_batched(alpha, x, r, p, ap, *, interpret: bool | None = None,
+                      use_pallas: bool = True):
+    """Per-RHS fused triad for (N, ...) fields; ``alpha`` is (N,).
+
+    Returns (x', r', rs) with rs the per-RHS ||r'_n||² of shape (N,).
+    A frozen RHS (α_n = 0) keeps its x/r slices bitwise unchanged.
+    """
+    if not use_pallas:
+        return cg_update_batched_ref(alpha, x, r, p, ap)
+    shape = x.shape
+    xs, _ = _to_stream_batched(x)
+    rs_, _ = _to_stream_batched(r)
+    ps, _ = _to_stream_batched(p)
+    aps, _ = _to_stream_batched(ap)
+    br = _pick_block_rows(xs.shape[1])
+    xo, ro, rs = cg_update_batched_pallas(alpha, xs, rs_, ps, aps,
+                                          block_rows=br, interpret=interpret)
+    nb = shape[0]
+    per = x.size // nb
+    return (xo.reshape(nb, -1)[:, :per].reshape(shape),
+            ro.reshape(nb, -1)[:, :per].reshape(shape), rs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def cg_xpay_batched(beta, r, p, gate, *, interpret: bool | None = None,
+                    use_pallas: bool = True):
+    """Gated per-RHS direction update for (N, ...) fields.
+
+    ``beta``/``gate`` are (N,): where ``gate`` is set the slice gets
+    ``r + beta p``; a cleared gate freezes the slice (p returned as-is) —
+    the in-kernel form of the solver's convergence mask.
+    """
+    if not use_pallas:
+        return cg_xpay_batched_ref(beta, r, p, gate)
+    shape = p.shape
+    rstream, _ = _to_stream_batched(r)
+    pstream, _ = _to_stream_batched(p)
+    br = _pick_block_rows(pstream.shape[1])
+    po = cg_xpay_batched_pallas(beta, rstream, pstream, gate,
+                                block_rows=br, interpret=interpret)
+    nb = shape[0]
+    per = p.size // nb
+    return po.reshape(nb, -1)[:, :per].reshape(shape)
+
+
 def fused_engine(*, interpret: bool | None = None, use_pallas: bool = True):
     """(update, xpay) pair for the solvers' injectable vector engine.
 
@@ -80,6 +140,23 @@ def fused_engine(*, interpret: bool | None = None, use_pallas: bool = True):
     update = functools.partial(cg_update, interpret=interpret,
                                use_pallas=use_pallas)
     xpay = functools.partial(cg_xpay, interpret=interpret,
+                             use_pallas=use_pallas)
+    return update, xpay
+
+
+def fused_engine_batched(*, interpret: bool | None = None,
+                         use_pallas: bool = True):
+    """(update, xpay) pair for the solvers' BATCHED vector engine.
+
+    For ``cg(..., batched=True)``: ``update`` takes the per-RHS (N,)
+    ``alpha`` (already masked to 0 on converged systems) and returns
+    per-RHS residual norms; ``xpay`` additionally takes the solver's
+    activity ``gate`` so converged directions freeze inside the kernel.
+    See DESIGN.md §6 for the contract.
+    """
+    update = functools.partial(cg_update_batched, interpret=interpret,
+                               use_pallas=use_pallas)
+    xpay = functools.partial(cg_xpay_batched, interpret=interpret,
                              use_pallas=use_pallas)
     return update, xpay
 

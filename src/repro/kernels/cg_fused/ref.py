@@ -1,5 +1,6 @@
 """Pure-jnp oracle for the fused CG vector-update kernels."""
 
+import jax
 import jax.numpy as jnp
 
 
@@ -17,3 +18,22 @@ def cg_xpay_ref(beta, r, p):
         beta.astype(jnp.float32)
     return (r.astype(jnp.float32)
             + b32 * p.astype(jnp.float32)).astype(p.dtype)
+
+
+# Batched (multi-RHS) oracles: leading axis is the RHS batch, scalars are
+# per-RHS (N,).  vmaps of the single-RHS refs so each slice reduces in the
+# same order as an independent solve.
+
+
+def cg_update_batched_ref(alpha, x, r, p, ap):
+    """Per-RHS (x + α_n p, r - α_n Ap, ||r'_n||²); alpha is (N,)."""
+    a = jnp.asarray(alpha, jnp.float32)
+    return jax.vmap(cg_update_ref)(a, x, r, p, ap)
+
+
+def cg_xpay_batched_ref(beta, r, p, gate):
+    """Per-RHS gated direction update: frozen (gate_n False) slices keep p."""
+    b = jnp.asarray(beta, jnp.float32)
+    po = jax.vmap(cg_xpay_ref)(b, r, p)
+    sel = jnp.asarray(gate, bool).reshape((-1,) + (1,) * (p.ndim - 1))
+    return jnp.where(sel, po, p)

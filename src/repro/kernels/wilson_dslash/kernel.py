@@ -36,6 +36,17 @@ Two kernel families share the machinery:
   kernel launches with the axpy folded into the second epilogue — no
   separate full-field scale/add passes.
 
+Both families are **multi-RHS batched**: a spinor field may carry a leading
+RHS-batch axis (N, T, Z, Y, 24, X).  The batched BlockSpecs pin the batch
+block index to 0 (the whole batch rides in each block) while the gauge
+BlockSpecs are untouched — so one HBM fetch of a gauge plane (8 links ×
+18 reals = 144 reals/site) feeds all N spinor planes (24 in + 24 out
+reals/site each), shrinking per-RHS traffic from 144+48 to 144/N+48
+reals/site: an up-to (144+48)/48 ≈ 4x arithmetic-intensity gain before
+the compute roof (see DESIGN.md §6).  The kernel bodies are
+rank-polymorphic (negative-axis rolls/shifts, broadcasting selects), so
+batching adds ZERO trace-time unrolling — compile time is independent of N.
+
 The kernels compute in f32 registers regardless of the (bf16/f32) storage
 dtype — narrow storage, wide accumulate, like the FPGA DSP datapath.
 """
@@ -170,31 +181,41 @@ def _hop(out_r, out_i, psi_r, psi_i, u_r, u_i, mu: int, sign: str,
 
 
 def _split_spinor_block(blk):
-    """(BZ, Y, S=24, X) -> [spin][color] re/im lists of (BZ, Y, X) f32."""
-    bz, y, s, x = blk.shape
-    q = blk.reshape(bz, y, NSPIN, NCOL, 2, x).astype(jnp.float32)
-    re = [[q[:, :, s_, c_, 0, :] for c_ in range(NCOL)] for s_ in range(NSPIN)]
-    im = [[q[:, :, s_, c_, 1, :] for c_ in range(NCOL)] for s_ in range(NSPIN)]
+    """(..., Y, S=24, X) -> [spin][color] re/im lists of (..., Y, X) f32.
+
+    Per-element axis order is (..., BZ, Y, X) — leading axes (e.g. the
+    RHS-batch axis of the batched kernels) pass through unchanged.
+    """
+    x = blk.shape[-1]
+    q = blk.reshape(blk.shape[:-2] + (NSPIN, NCOL, 2, x)).astype(jnp.float32)
+    re = [[q[..., s_, c_, 0, :] for c_ in range(NCOL)] for s_ in range(NSPIN)]
+    im = [[q[..., s_, c_, 1, :] for c_ in range(NCOL)] for s_ in range(NSPIN)]
     return re, im
 
 
 def _split_gauge_block(blk):
-    """(BZ, Y, G=18, X) -> [row][col] re/im lists of (BZ, Y, X) f32."""
-    bz, y, g, x = blk.shape
-    q = blk.reshape(bz, y, NCOL, NCOL, 2, x).astype(jnp.float32)
-    re = [[q[:, :, a, b, 0, :] for b in range(NCOL)] for a in range(NCOL)]
-    im = [[q[:, :, a, b, 1, :] for b in range(NCOL)] for a in range(NCOL)]
+    """(..., Y, G=18, X) -> [row][col] re/im lists of (..., Y, X) f32."""
+    x = blk.shape[-1]
+    q = blk.reshape(blk.shape[:-2] + (NCOL, NCOL, 2, x)).astype(jnp.float32)
+    re = [[q[..., a, b, 0, :] for b in range(NCOL)] for a in range(NCOL)]
+    im = [[q[..., a, b, 1, :] for b in range(NCOL)] for a in range(NCOL)]
     return re, im
 
 
 def _repack_spinor_block(out_r, out_i, dtype):
-    """[spin][color] re/im lists of (BZ, Y, X) -> (BZ, Y, 24, X)."""
+    """[spin][color] re/im lists of (..., Y, X) -> (..., Y, 24, X)."""
     flat = []
     for s in range(NSPIN):
         for c in range(NCOL):
             flat.append(out_r[s][c])
             flat.append(out_i[s][c])
-    return jnp.stack(flat, axis=2).astype(dtype)
+    return jnp.stack(flat, axis=-2).astype(dtype)
+
+
+# Within a block element (..., BZ, Y, X): Y rolls on axis -2, X (lane) rolls
+# on axis -1, the z-shift splices along axis -3 — negative so the same
+# kernel body serves the plain blocks and the batched (NB leading) blocks.
+_Y_AXIS, _X_AXIS, _Z_AXIS = -2, -1, -3
 
 
 def _roll_sc(lists, shift, axis):
@@ -202,23 +223,26 @@ def _roll_sc(lists, shift, axis):
 
 
 def _where_sc(sel, a_lists, b_lists):
-    """Elementwise select between two [..][..] lists of (BZ, Y, X) blocks."""
+    """Elementwise select between two [..][..] lists of (..., Y, X) blocks."""
     return [[jnp.where(sel, a, b) for a, b in zip(ra, rb)]
             for ra, rb in zip(a_lists, b_lists)]
 
 
 def _shift_z(lists, boundary, forward: bool):
-    """Shift [..][..] lists of (BZ,Y,X) along BZ, splicing the boundary
-    plane (1,Y,X) in at the open end."""
+    """Shift [..][..] lists of (..., BZ, Y, X) along BZ, splicing the
+    boundary plane (..., 1, Y, X) in at the open end."""
     out = []
     for r, row in enumerate(lists):
         orow = []
         for c, e in enumerate(row):
             b = boundary[r][c]
+            nz = e.shape[_Z_AXIS]
             if forward:  # value at z+1: drop plane 0, append boundary
-                orow.append(jnp.concatenate([e[1:], b], axis=0))
+                body = jax.lax.slice_in_dim(e, 1, nz, axis=_Z_AXIS)
+                orow.append(jnp.concatenate([body, b], axis=_Z_AXIS))
             else:        # value at z-1: prepend boundary, drop last
-                orow.append(jnp.concatenate([b, e[:-1]], axis=0))
+                body = jax.lax.slice_in_dim(e, 0, nz - 1, axis=_Z_AXIS)
+                orow.append(jnp.concatenate([b, body], axis=_Z_AXIS))
         out.append(orow)
     return out
 
@@ -235,19 +259,35 @@ def _pick_bz(z: int, bz: int | None) -> int:
     return bz
 
 
-def _spinor_specs(t: int, z: int, bz: int, y: int, x: int):
+def _site_spec(zblk: int, y: int, s: int, x: int, tmap, zmap,
+               nb: int | None):
+    """BlockSpec for one (t, z-block) plane of a site field.
+
+    ``nb`` is the RHS-batch extent: None produces the plain 5D layout
+    (1, zblk, y, s, x); an int prepends a FULL batch axis (nb, 1, zblk, y,
+    s, x) whose block index is pinned to 0 — every grid step sees all N
+    spinor planes while the gauge specs (no batch axis) deliver each link
+    plane exactly once, which is the gauge-amortization contract.
+    """
+    if nb is None:
+        return pl.BlockSpec((1, zblk, y, s, x),
+                            lambda ti, zi: (tmap(ti), zmap(zi), 0, 0, 0))
+    return pl.BlockSpec((nb, 1, zblk, y, s, x),
+                        lambda ti, zi: (0, tmap(ti), zmap(zi), 0, 0, 0))
+
+
+def _spinor_specs(t: int, z: int, bz: int, y: int, x: int,
+                  nb: int | None = None):
     """center, t-1, t+1 blocks and the z-boundary planes of a spinor field."""
     s = SPINOR_S
-    c = pl.BlockSpec((1, bz, y, s, x), lambda ti, zi: (ti, zi, 0, 0, 0))
-    tm = pl.BlockSpec((1, bz, y, s, x),
-                      lambda ti, zi: ((ti - 1 + t) % t, zi, 0, 0, 0))
-    tp = pl.BlockSpec((1, bz, y, s, x),
-                      lambda ti, zi: ((ti + 1) % t, zi, 0, 0, 0))
+    ti_id = lambda ti: ti
+    zi_id = lambda zi: zi
+    c = _site_spec(bz, y, s, x, ti_id, zi_id, nb)
+    tm = _site_spec(bz, y, s, x, lambda ti: (ti - 1 + t) % t, zi_id, nb)
+    tp = _site_spec(bz, y, s, x, lambda ti: (ti + 1) % t, zi_id, nb)
     # single boundary z-planes (block size 1 on z -> block index = plane idx)
-    zm = pl.BlockSpec((1, 1, y, s, x),
-                      lambda ti, zi: (ti, (zi * bz - 1 + z) % z, 0, 0, 0))
-    zp = pl.BlockSpec((1, 1, y, s, x),
-                      lambda ti, zi: (ti, (zi * bz + bz) % z, 0, 0, 0))
+    zm = _site_spec(1, y, s, x, ti_id, lambda zi: (zi * bz - 1 + z) % z, nb)
+    zp = _site_spec(1, y, s, x, ti_id, lambda zi: (zi * bz + bz) % z, nb)
     return c, tm, tp, zm, zp
 
 
@@ -268,16 +308,22 @@ def _gauge_specs(t: int, z: int, bz: int, y: int, x: int):
 # ---------------------------------------------------------------------------
 
 
+def _take_plane(ref, batched: bool):
+    """Drop the size-1 T-block axis: axis 0 plain, axis 1 when an RHS-batch
+    axis leads the block."""
+    return ref[:, 0] if batched else ref[0]
+
+
 def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
                    u_c, u_tm, u_zm, out_ref, *, mass: float,
-                   g5in: bool, g5out: bool):
+                   g5in: bool, g5out: bool, batched: bool = False):
     f32 = jnp.float32
     # ---- stage 1: load & unpack (all data now in VMEM) ----
-    pc_r, pc_i = _split_spinor_block(psi_c[0])
-    ptm_r, ptm_i = _split_spinor_block(psi_tm[0])
-    ptp_r, ptp_i = _split_spinor_block(psi_tp[0])
-    pzm_r, pzm_i = _split_spinor_block(psi_zm[0])
-    pzp_r, pzp_i = _split_spinor_block(psi_zp[0])
+    pc_r, pc_i = _split_spinor_block(_take_plane(psi_c, batched))
+    ptm_r, ptm_i = _split_spinor_block(_take_plane(psi_tm, batched))
+    ptp_r, ptp_i = _split_spinor_block(_take_plane(psi_tp, batched))
+    pzm_r, pzm_i = _split_spinor_block(_take_plane(psi_zm, batched))
+    pzp_r, pzp_i = _split_spinor_block(_take_plane(psi_zp, batched))
     u = [_split_gauge_block(u_c[mu, 0]) for mu in range(NDIRS)]
     utm_r, utm_i = _split_gauge_block(u_tm[0, 0])
     uzm_r, uzm_i = _split_gauge_block(u_zm[0, 0])
@@ -307,20 +353,26 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     ubz_i = _shift_z(u[1][1], uzm_i, forward=False)
     hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
 
-    # ---- Y direction (mu=2): rolls on axis 1 of (BZ, Y, X) ----
-    hop(out_r, out_i, _roll_sc(pc_r, -1, 1), _roll_sc(pc_i, -1, 1),
+    # ---- Y direction (mu=2): rolls on the Y axis of (..., BZ, Y, X) ----
+    hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS), _roll_sc(pc_i, -1, _Y_AXIS),
         u[2][0], u[2][1], 2, "fwd")
-    hop(out_r, out_i, _roll_sc(pc_r, 1, 1), _roll_sc(pc_i, 1, 1),
-        _roll_sc(u[2][0], 1, 1), _roll_sc(u[2][1], 1, 1), 2, "bwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS), _roll_sc(pc_i, 1, _Y_AXIS),
+        _roll_sc(u[2][0], 1, _Y_AXIS), _roll_sc(u[2][1], 1, _Y_AXIS),
+        2, "bwd")
 
-    # ---- X direction (mu=3): lane rolls on axis 2 ----
-    hop(out_r, out_i, _roll_sc(pc_r, -1, 2), _roll_sc(pc_i, -1, 2),
+    # ---- X direction (mu=3): lane rolls ----
+    hop(out_r, out_i, _roll_sc(pc_r, -1, _X_AXIS), _roll_sc(pc_i, -1, _X_AXIS),
         u[3][0], u[3][1], 3, "fwd")
-    hop(out_r, out_i, _roll_sc(pc_r, 1, 2), _roll_sc(pc_i, 1, 2),
-        _roll_sc(u[3][0], 1, 2), _roll_sc(u[3][1], 1, 2), 3, "bwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, _X_AXIS), _roll_sc(pc_i, 1, _X_AXIS),
+        _roll_sc(u[3][0], 1, _X_AXIS), _roll_sc(u[3][1], 1, _X_AXIS),
+        3, "bwd")
 
     # ---- stage 4: repack & store ----
-    out_ref[0] = _repack_spinor_block(out_r, out_i, out_ref.dtype)
+    packed = _repack_spinor_block(out_r, out_i, out_ref.dtype)
+    if batched:
+        out_ref[:, 0] = packed
+    else:
+        out_ref[0] = packed
 
 
 def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
@@ -331,33 +383,37 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
 
     Args:
       up:   (4, T, Z, Y, 18, X) packed gauge field.
-      pp:   (T, Z, Y, 24, X) packed spinor field.
+      pp:   (T, Z, Y, 24, X) packed spinor field, or (N, T, Z, Y, 24, X)
+        for an N-RHS batch: the gauge BlockSpecs carry no batch axis, so
+        each link plane is fetched ONCE per grid step and streams all N
+        spinor planes through the stencil (multi-RHS gauge amortization).
       mass: bare mass (trace-time constant, like the paper's #define).
       bz:   z-planes per block (VMEM working-set knob). Default: min(Z, 4).
       interpret: None = interpret only on CPU; bool forces the mode.
       gamma5_in/gamma5_out: compute γ5out D (γ5in ψ) with γ5 folded into the
         constant hop tables — both True gives D† for free.
     Returns:
-      packed D psi (or its γ5-conjugations) with the dtype of ``pp``.
+      packed D psi (or its γ5-conjugations) with the shape/dtype of ``pp``.
     """
     nd, t, z, y, g, x = up.shape
     assert nd == NDIRS and g == GAUGE_G
-    tt, zz, yy, s, xx = pp.shape
+    assert pp.ndim in (5, 6), f"spinor rank must be 5 or 6, got {pp.ndim}"
+    nb = pp.shape[0] if pp.ndim == 6 else None
+    tt, zz, yy, s, xx = pp.shape[-5:]
     assert (tt, zz, yy, xx) == (t, z, y, x) and s == SPINOR_S
     bz = _pick_bz(z, bz)
 
-    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x)
+    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x, nb)
     u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
-    out_spec = pl.BlockSpec((1, bz, y, SPINOR_S, x),
-                            lambda ti, zi: (ti, zi, 0, 0, 0))
 
     kernel = functools.partial(_dslash_kernel, mass=float(mass),
-                               g5in=bool(gamma5_in), g5out=bool(gamma5_out))
+                               g5in=bool(gamma5_in), g5out=bool(gamma5_out),
+                               batched=nb is not None)
     return pl.pallas_call(
         kernel,
         grid=(t, z // bz),
         in_specs=[psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_tm, u_zm],
-        out_specs=out_spec,
+        out_specs=psi_c,
         out_shape=jax.ShapeDtypeStruct(pp.shape, pp.dtype),
         interpret=resolve_interpret(interpret),
     )(*([pp] * 5), *([up] * 3))
@@ -371,7 +427,7 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
 def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
                           u_oc, u_nc, u_ntm, u_nzm, *rest, parity: int,
                           hop_coeff: float, acc_coeff: float, has_acc: bool,
-                          g5in: bool, g5out: bool):
+                          g5in: bool, g5out: bool, batched: bool = False):
     """Half-lattice hopping block: hop_coeff · γ5out Hop(γ5in ψ) [+ acc].
 
     ``u_oc`` holds the links attached to the OUTPUT-parity sites (forward
@@ -380,29 +436,36 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     U_mu(x-mu)† at the neighbour site).  ``parity`` selects which parity
     the output sites are: output rows sit at x = 2j + s_out with
     s_out = (t + z + y + parity) mod 2.
+
+    ``batched``: the spinor blocks (center, neighbours, accumulator, out)
+    carry a leading RHS-batch axis; the gauge blocks never do — one gauge
+    fetch feeds all N half-spinor planes, and every hop below is rank-
+    polymorphic (negative-axis rolls/shifts, broadcasting selects).
     """
     out_ref = rest[-1]
     acc_ref = rest[0] if has_acc else None
 
-    pc_r, pc_i = _split_spinor_block(psi_c[0])
-    ptm_r, ptm_i = _split_spinor_block(psi_tm[0])
-    ptp_r, ptp_i = _split_spinor_block(psi_tp[0])
-    pzm_r, pzm_i = _split_spinor_block(psi_zm[0])
-    pzp_r, pzp_i = _split_spinor_block(psi_zp[0])
+    pc_r, pc_i = _split_spinor_block(_take_plane(psi_c, batched))
+    ptm_r, ptm_i = _split_spinor_block(_take_plane(psi_tm, batched))
+    ptp_r, ptp_i = _split_spinor_block(_take_plane(psi_tp, batched))
+    pzm_r, pzm_i = _split_spinor_block(_take_plane(psi_zm, batched))
+    pzp_r, pzp_i = _split_spinor_block(_take_plane(psi_zp, batched))
     uo = [_split_gauge_block(u_oc[mu, 0]) for mu in range(NDIRS)]
     un = [_split_gauge_block(u_nc[mu, 0]) for mu in range(NDIRS)]
     untm_r, untm_i = _split_gauge_block(u_ntm[0, 0])
     unzm_r, unzm_i = _split_gauge_block(u_nzm[0, 0])
 
-    nbz, ny, nx = pc_r[0][0].shape
+    nbz, ny = pc_r[0][0].shape[-3:-1]
     # Row parity selector: True where the output site offset s_out == 1, i.e.
     # output sites sit at x = 2j + 1 within the row (see lattice.eo_row_offset).
+    # Shape (BZ, Y, 1) broadcasts across both the lane axis and any leading
+    # RHS-batch axis.
     zy = (jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 0)
           + jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 1))
     row = pl.program_id(0) + pl.program_id(1) * nbz + zy + parity
     sel = row % 2 == 1
 
-    zero = jnp.zeros((nbz, ny, nx), jnp.float32)
+    zero = jnp.zeros(pc_r[0][0].shape, jnp.float32)
     out_r = [[zero for _ in range(NCOL)] for _ in range(NSPIN)]
     out_i = [[zero for _ in range(NCOL)] for _ in range(NSPIN)]
 
@@ -422,30 +485,31 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     ubz_i = _shift_z(un[1][1], unzm_i, forward=False)
     hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
 
-    # ---- Y direction (mu=2): rolls on axis 1 of (BZ, Y, X) ----
-    hop(out_r, out_i, _roll_sc(pc_r, -1, 1), _roll_sc(pc_i, -1, 1),
+    # ---- Y direction (mu=2): rolls on the Y axis of (..., BZ, Y, X) ----
+    hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS), _roll_sc(pc_i, -1, _Y_AXIS),
         uo[2][0], uo[2][1], 2, "fwd")
-    hop(out_r, out_i, _roll_sc(pc_r, 1, 1), _roll_sc(pc_i, 1, 1),
-        _roll_sc(un[2][0], 1, 1), _roll_sc(un[2][1], 1, 1), 2, "bwd")
+    hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS), _roll_sc(pc_i, 1, _Y_AXIS),
+        _roll_sc(un[2][0], 1, _Y_AXIS), _roll_sc(un[2][1], 1, _Y_AXIS),
+        2, "bwd")
 
     # ---- X direction (mu=3): parity-compressed lane axis.  The neighbour
     # of compressed index j is j + s_out (forward) / j - (1 - s_out)
     # (backward): a per-row select between the block and its rolled copy.
     hop(out_r, out_i,
-        _where_sc(sel, _roll_sc(pc_r, -1, 2), pc_r),
-        _where_sc(sel, _roll_sc(pc_i, -1, 2), pc_i),
+        _where_sc(sel, _roll_sc(pc_r, -1, _X_AXIS), pc_r),
+        _where_sc(sel, _roll_sc(pc_i, -1, _X_AXIS), pc_i),
         uo[3][0], uo[3][1], 3, "fwd")
     hop(out_r, out_i,
-        _where_sc(sel, pc_r, _roll_sc(pc_r, 1, 2)),
-        _where_sc(sel, pc_i, _roll_sc(pc_i, 1, 2)),
-        _where_sc(sel, un[3][0], _roll_sc(un[3][0], 1, 2)),
-        _where_sc(sel, un[3][1], _roll_sc(un[3][1], 1, 2)), 3, "bwd")
+        _where_sc(sel, pc_r, _roll_sc(pc_r, 1, _X_AXIS)),
+        _where_sc(sel, pc_i, _roll_sc(pc_i, 1, _X_AXIS)),
+        _where_sc(sel, un[3][0], _roll_sc(un[3][0], 1, _X_AXIS)),
+        _where_sc(sel, un[3][1], _roll_sc(un[3][1], 1, _X_AXIS)), 3, "bwd")
 
     # ---- epilogue: scale the hop, fold in the accumulator term ----
     h = jnp.float32(hop_coeff)
     if has_acc:
         a = jnp.float32(acc_coeff)
-        ac_r, ac_i = _split_spinor_block(acc_ref[0])
+        ac_r, ac_i = _split_spinor_block(_take_plane(acc_ref, batched))
         out_r = [[h * out_r[s][c] + a * ac_r[s][c] for c in range(NCOL)]
                  for s in range(NSPIN)]
         out_i = [[h * out_i[s][c] + a * ac_i[s][c] for c in range(NCOL)]
@@ -453,7 +517,11 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     elif hop_coeff != 1.0:
         out_r = [[h * e for e in row] for row in out_r]
         out_i = [[h * e for e in row] for row in out_i]
-    out_ref[0] = _repack_spinor_block(out_r, out_i, out_ref.dtype)
+    packed = _repack_spinor_block(out_r, out_i, out_ref.dtype)
+    if batched:
+        out_ref[:, 0] = packed
+    else:
+        out_ref[0] = packed
 
 
 def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
@@ -464,14 +532,16 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
     nd, t, z, y, g, x = u_out.shape
     assert nd == NDIRS and g == GAUGE_G
     assert u_nbr.shape == u_out.shape
-    tt, zz, yy, s, xx = pp.shape
+    assert pp.ndim in (5, 6), f"spinor rank must be 5 or 6, got {pp.ndim}"
+    nb = pp.shape[0] if pp.ndim == 6 else None
+    tt, zz, yy, s, xx = pp.shape[-5:]
     assert (tt, zz, yy, xx) == (t, z, y, x) and s == SPINOR_S
     assert t % 2 == z % 2 == y % 2 == 0, (
         "even-odd kernels need even T/Z/Y extents: an odd periodic extent "
         f"breaks bipartiteness, got {(t, z, y)}")
     bz = _pick_bz(z, bz)
 
-    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x)
+    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x, nb)
     u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
     in_specs = [psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_c, u_tm, u_zm]
     operands = [*([pp] * 5), u_out, *([u_nbr] * 3)]
@@ -484,7 +554,7 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
         _dslash_parity_kernel, parity=int(parity) % 2,
         hop_coeff=float(hop_coeff), acc_coeff=float(acc_coeff),
         has_acc=psi_acc is not None, g5in=bool(gamma5_in),
-        g5out=bool(gamma5_out))
+        g5out=bool(gamma5_out), batched=nb is not None)
     return pl.pallas_call(
         kernel,
         grid=(t, z // bz),
@@ -506,14 +576,17 @@ def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
     Args:
       u_e, u_o: (4, T, Z, Y, 18, Xh) packed per-parity link fields
                 (``pack_gauge`` of ``split_eo_gauge``'s halves).
-      pp_o:     (T, Z, Y, 24, Xh) packed ODD-parity spinor half field.
+      pp_o:     (T, Z, Y, 24, Xh) packed ODD-parity spinor half field, or
+        (N, T, Z, Y, 24, Xh) for an N-RHS batch — the batched BlockSpecs
+        fetch each gauge plane once per grid step and stream all N spinor
+        planes through it (multi-RHS gauge amortization).
       psi_acc/acc_coeff/hop_coeff: optional fused epilogue
         ``out = acc_coeff * psi_acc + hop_coeff * hop`` (psi_acc is an
-        EVEN-parity half field) — lets the Schur complement avoid separate
-        scale/add HBM passes.
+        EVEN-parity half field, batched iff ``pp_o`` is) — lets the Schur
+        complement avoid separate scale/add HBM passes.
       gamma5_in/gamma5_out: fold γ5 around the hop (tables only, free).
     Returns:
-      packed even-parity half field, dtype of ``pp_o``.
+      packed even-parity half field(s), shape/dtype of ``pp_o``.
     """
     return _dslash_parity_pallas(
         u_e, u_o, pp_o, parity=0, bz=bz, interpret=interpret,

@@ -31,13 +31,19 @@ from repro.core.wilson import schur_op as _core_schur_op
 
 def _via_natural(fn, u_e_p: jax.Array, u_o_p: jax.Array, pp: jax.Array,
                  gamma5_in: bool, gamma5_out: bool) -> jax.Array:
-    """Unpack packed half fields, apply a natural-layout op, repack."""
+    """Unpack packed half fields, apply a natural-layout op, repack.
+
+    A rank-6 ``pp`` is an (N, T, Z, Y, 24, Xh) RHS batch: the natural-layout
+    operator is vmapped over the leading axis (gauge held fixed), so each
+    slice reproduces the single-RHS oracle exactly.
+    """
     u_e = unpack_gauge(u_e_p.astype(jnp.float32))
     u_o = unpack_gauge(u_o_p.astype(jnp.float32))
     v = unpack_spinor(pp.astype(jnp.float32))
     if gamma5_in:
         v = apply_gamma5(v)
-    out = fn(u_e, u_o, v)
+    op = lambda w: fn(u_e, u_o, w)
+    out = jax.vmap(op)(v) if pp.ndim == 6 else op(v)
     if gamma5_out:
         out = apply_gamma5(out)
     return pack_spinor(out, dtype=pp.dtype)

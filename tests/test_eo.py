@@ -7,11 +7,16 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import (LatticeShape, cgnr, dslash, dslash_dagger,
-                        random_gauge, random_spinor, solve_wilson_eo,
-                        solve_wilson_eo_mp)
+                        eo_operators, eo_operators_packed, random_gauge,
+                        random_spinor, solve_wilson_eo,
+                        solve_wilson_eo_batched, solve_wilson_eo_mp,
+                        split_eo, unit_gauge)
+from repro.core import solvers
+from repro.core.lattice import field_norm2_batched
 
 LAT = LatticeShape(4, 4, 4, 4)  # the 4^4 acceptance lattice
 MASS = 0.1
@@ -127,3 +132,139 @@ def test_eo_operators_reject_odd_extent():
     u, b = random_gauge(ku, lat), random_spinor(kb, lat)
     with pytest.raises(AssertionError, match="bipartite"):
         solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=10)
+
+
+def test_eo_packed_path_rejects_r_not_one():
+    """The packed/Pallas path supports r = 1 ONLY (rank-2 projectors are
+    baked into the kernels' trace-time tables): any other r must raise a
+    documented NotImplementedError, while the natural-layout path solves
+    the r != 1 system fine."""
+    lat = LatticeShape(2, 2, 2, 4)
+    key = jax.random.PRNGKey(19)
+    ku, kb = jax.random.split(key)
+    u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+    with pytest.raises(NotImplementedError, match="r=1"):
+        eo_operators_packed(u, MASS, r=0.5)
+    with pytest.raises(NotImplementedError, match="r=1"):
+        solve_wilson_eo(u, b, MASS, r=0.5, tol=TOL, maxiter=10,
+                        use_pallas=True)
+    # the restriction is the packed path's, not the decomposition's
+    x, st = solve_wilson_eo(u, b, MASS, r=0.5, tol=TOL, maxiter=1000,
+                            use_pallas=False)
+    assert bool(st.converged)
+    res = dslash(u, x, MASS, r=0.5) - b
+    assert float(jnp.linalg.norm(res.ravel())
+                 / jnp.linalg.norm(b.ravel())) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS batched solves (gauge-amortized matvec + convergence masking)
+# ---------------------------------------------------------------------------
+
+BATCH_LAT = LatticeShape(2, 4, 4, 4)  # small: interpret-mode trace cost
+
+
+@pytest.fixture(scope="module")
+def batched_problem():
+    key = jax.random.PRNGKey(5)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, BATCH_LAT)
+    b = jnp.stack([random_spinor(jax.random.fold_in(kb, i), BATCH_LAT)
+                   for i in range(3)])
+    return u, b
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_batched_solve_bitwise_matches_looped_singles(batched_problem,
+                                                      use_pallas):
+    """An N-RHS batched solve returns, for every RHS, BITWISE the iterate
+    of its independent single-RHS solve: identical Krylov scalars while
+    all systems are active, and an exact freeze (masked alpha=0 update,
+    gated direction) from each system's own convergence point on."""
+    u, b = batched_problem
+    n = b.shape[0]
+    xb, stb = solve_wilson_eo_batched(u, b, MASS, tol=TOL, maxiter=1000,
+                                      use_pallas=use_pallas)
+    assert stb.converged.shape == (n,) and bool(jnp.all(stb.converged))
+    assert stb.residual_norm2.shape == (n,)
+    iters = []
+    for i in range(n):
+        xi, sti = solve_wilson_eo(u, b[i], MASS, tol=TOL, maxiter=1000,
+                                  use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(xb[i]), np.asarray(xi))
+        iters.append(int(sti.iterations))
+    # the masked loop runs exactly as long as the slowest system
+    assert int(stb.iterations) == max(iters)
+    for i in range(n):
+        assert _rel_res(u, xb[i], b[i]) < 1e-5
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["ref", "pallas"])
+def test_batched_mask_freezes_easy_rhs(use_pallas):
+    """A deliberately easy RHS (free-field zero-momentum eigenmode: the
+    constant spinor is an exact eigenvector of the unit-gauge Schur
+    operator) mixed with a hard random RHS converges within ~1 iteration
+    and stays FROZEN while the hard one iterates on."""
+    u = unit_gauge(BATCH_LAT)
+    easy = jnp.ones(BATCH_LAT.dims + (4, 3), jnp.complex64)
+    hard = random_spinor(jax.random.PRNGKey(9), BATCH_LAT)
+    b = jnp.stack([easy, hard])
+    x_easy, st_easy = solve_wilson_eo(u, easy, MASS, tol=TOL, maxiter=1000,
+                                      use_pallas=use_pallas)
+    x_hard, st_hard = solve_wilson_eo(u, hard, MASS, tol=TOL, maxiter=1000,
+                                      use_pallas=use_pallas)
+    assert int(st_easy.iterations) <= 2 < int(st_hard.iterations)
+    xb, stb = solve_wilson_eo_batched(u, b, MASS, tol=TOL, maxiter=1000,
+                                      use_pallas=use_pallas)
+    assert bool(jnp.all(stb.converged))
+    assert int(stb.iterations) == int(st_hard.iterations)
+    # the easy system froze at ITS early convergence point — bitwise the
+    # single-solve result, not a further-iterated one
+    np.testing.assert_array_equal(np.asarray(xb[0]), np.asarray(x_easy))
+    np.testing.assert_array_equal(np.asarray(xb[1]), np.asarray(x_hard))
+
+
+def test_batched_trace_residual_history_freezes_after_convergence():
+    """cg_trace(batched=True, tol=...) per-RHS histories: once a system
+    crosses its limit its recorded ||r||² stays EXACTLY flat (the masked
+    update recomputes the same frozen residual), and the easy system
+    crosses strictly earlier than the hard one."""
+    u = unit_gauge(BATCH_LAT)
+    easy = jnp.ones(BATCH_LAT.dims + (4, 3), jnp.complex64)
+    hard = random_spinor(jax.random.PRNGKey(9), BATCH_LAT)
+    ops = eo_operators(u, MASS)
+    b_e, b_o = jax.vmap(split_eo)(jnp.stack([easy, hard]))
+    b_hat = b_e - jax.vmap(ops.d_eo)(ops.m_inv(b_o))
+    rhs = jax.vmap(ops.dhat_dag)(b_hat)
+    a_hat = jax.vmap(lambda v: ops.dhat_dag(ops.dhat(v)))
+    _, hist = solvers.cg_trace(a_hat, rhs, iters=12, batched=True, tol=TOL)
+    hist = np.asarray(hist)
+    assert hist.shape == (12, 2)
+    limit = (TOL ** 2) * np.asarray(field_norm2_batched(rhs))
+    crossings = []
+    for i in range(2):
+        below = np.nonzero(hist[:, i] <= limit[i])[0]
+        assert below.size, f"RHS {i} never converged in the trace window"
+        k0 = below[0]
+        crossings.append(k0)
+        assert np.all(hist[k0:, i] == hist[k0, i]), (
+            f"RHS {i} kept moving after its convergence at iter {k0}")
+    assert crossings[0] < crossings[1]
+
+
+def test_eo_mp_pallas_fast_path(batched_problem):
+    """solve_wilson_eo_mp(use_pallas=True): the bf16-inner mixed-precision
+    solve rides the packed parity kernels + fused engine and still
+    converges to the f32 tolerance, matching the reference mp solve."""
+    u, b = batched_problem
+    b0 = b[0]
+    x_ref, st_ref = solve_wilson_eo_mp(u, b0, MASS, tol=TOL, inner_tol=5e-2,
+                                       inner_maxiter=100, max_outer=40)
+    x_pal, st_pal = solve_wilson_eo_mp(u, b0, MASS, tol=TOL, inner_tol=5e-2,
+                                       inner_maxiter=100, max_outer=40,
+                                       use_pallas=True)
+    assert bool(st_ref.converged) and bool(st_pal.converged)
+    assert _rel_res(u, x_pal, b0) < 1e-5
+    # same two-level structure: bulk work in low-precision inner iterations
+    assert int(st_pal.iterations) >= 2 * int(st_pal.outer_iterations)
+    assert float(jnp.max(jnp.abs(x_pal - x_ref))) < 1e-3
