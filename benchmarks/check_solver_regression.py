@@ -74,6 +74,36 @@ def _check_batch_sweep(cur: dict, base: dict) -> bool:
     return failed
 
 
+def _check_eo_sharded(cur: dict, base: dict) -> bool:
+    """Guard the sharded batched EO Schur solve's iteration count.
+
+    The fused one-psum-per-iteration reduction and the parity halo
+    corrections must not change the Krylov math: the 8-way sharded
+    pipelined CGNR's trip count is deterministic for the committed seed
+    and compared directly (same slack as the single-device entries).
+    Returns True on failure.
+    """
+    cur_s, base_s = cur.get("eo_sharded"), base.get("eo_sharded")
+    if not base_s:
+        return False  # baseline predates the sharded path: nothing to guard
+    if not cur_s:
+        print("solver-regression guard: baseline has 'eo_sharded' but the "
+              "current BENCH_solvers.json does not")
+        return True
+    for key in PROBLEM_KEYS + ("n_rhs", "mesh", "solver"):
+        if cur_s.get(key) != base_s.get(key):
+            print(f"solver-regression guard: eo_sharded '{key}' mismatch "
+                  f"({cur_s.get(key)} vs baseline {base_s.get(key)}) — "
+                  "regenerate benchmarks/BENCH_solvers_baseline.json")
+            return True
+    limit = int(base_s["iters"]) + SLACK_ITERS
+    verdict = "OK" if int(cur_s["iters"]) <= limit else "REGRESSION"
+    print(f"  eo_sharded n_rhs={cur_s['n_rhs']} mesh={cur_s['mesh']}: "
+          f"{cur_s['iters']} iters (baseline {base_s['iters']}, "
+          f"limit {limit}) {verdict}")
+    return int(cur_s["iters"]) > limit
+
+
 def main(argv: list[str]) -> int:
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_solvers_baseline.json")
@@ -84,7 +114,8 @@ def main(argv: list[str]) -> int:
             os.path.abspath(__file__))))
         from benchmarks import bench_solvers
         cur = {"eo_smoke": bench_solvers._run_eo_smoke(),
-               "batch_sweep": bench_solvers._run_batch_sweep()}
+               "batch_sweep": bench_solvers._run_batch_sweep(),
+               "eo_sharded": bench_solvers._run_eo_sharded()}
     else:
         cur_path = argv[1] if len(argv) > 1 else "BENCH_solvers.json"
         if len(argv) > 2:
@@ -129,6 +160,7 @@ def main(argv: list[str]) -> int:
         print(f"  {key}: {got} (baseline {ref}, limit {limit}) {verdict}")
         failed = failed or int(got) > limit
     failed = _check_batch_sweep(cur, base) or failed
+    failed = _check_eo_sharded(cur, base) or failed
     if failed:
         print("solver-regression guard: FAILED — a guarded iteration count "
               f"regressed on the {base_eo['lattice']} smoke lattice (see "

@@ -5,9 +5,12 @@ Public surface:
   lattice   — geometry, SU(3) fields, layout packing
   wilson    — the Dirac-Wilson operator (natural + packed layouts)
   solvers   — cg / cgnr / cgnr_eo / mpcg / mpcg_eo / pipecg / bicgstab
-  eo        — even-odd (Schur) preconditioned solves, end to end
+  eo        — even-odd (Schur) blocks + eo_context; legacy solve forwarders
+  plan      — SolverPlan: THE solve entry point ({operator, backend, batch,
+              precision, mesh} resolved to callables; solve_plan runs it)
   precision — (low, high) precision-pair policies
-  distributed — shard_map domain decomposition + halo-overlap dslash
+  distributed — shard_map domain decomposition, halo-overlap dslash (full
+              AND parity-compressed), psum-fused reductions
 """
 
 from repro.core.lattice import (LatticeShape, complex_to_real_pair,
@@ -26,6 +29,9 @@ from repro.core.wilson import (DSLASH_FLOPS_PER_SITE, apply_gamma5, dslash,
                                dslash_eo, dslash_flops, dslash_oe,
                                dslash_packed, normal_op, normal_op_packed,
                                schur_dagger, schur_normal_op, schur_op)
-from repro.core.eo import (EOOperators, eo_operators, eo_operators_packed,
-                           solve_wilson_eo, solve_wilson_eo_batched,
-                           solve_wilson_eo_mp)
+from repro.core.eo import (EOContext, EOOperators, eo_context, eo_operators,
+                           eo_operators_packed, solve_wilson_eo,
+                           solve_wilson_eo_batched, solve_wilson_eo_mp)
+from repro.core.plan import SolverPlan
+from repro.core.plan import resolve as resolve_plan
+from repro.core.plan import solve as solve_plan

@@ -25,7 +25,6 @@ communications ... to establish total error estimates"):
 
 from __future__ import annotations
 
-import functools
 from typing import Mapping
 
 import jax
@@ -33,8 +32,6 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import compat
-from repro.core import solvers
 from repro.core.wilson import (apply_gamma5_packed, dslash_packed,
                                hop_term_packed)
 
@@ -101,14 +98,150 @@ def dslash_halo(up: jax.Array, pp: jax.Array, mass,
     return out
 
 
-def dslash_dagger_halo(up, pp, mass, sharded, r: float = 1.0):
+def dslash_dagger_halo(up, pp, mass, sharded, r: float = 1.0,
+                       use_pallas: bool = False):
     return apply_gamma5_packed(
-        dslash_halo(up, apply_gamma5_packed(pp), mass, sharded, r=r))
+        dslash_halo(up, apply_gamma5_packed(pp), mass, sharded, r=r,
+                    use_pallas=use_pallas))
 
 
-def normal_op_halo(up, pp, mass, sharded, r: float = 1.0):
-    return dslash_dagger_halo(up, dslash_halo(up, pp, mass, sharded, r=r),
-                              mass, sharded, r=r)
+def normal_op_halo(up, pp, mass, sharded, r: float = 1.0,
+                   use_pallas: bool = False):
+    return dslash_dagger_halo(up, dslash_halo(up, pp, mass, sharded, r=r,
+                                              use_pallas=use_pallas),
+                              mass, sharded, r=r, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Parity-compressed halo exchange: the even-odd Schur fast path, sharded
+# ---------------------------------------------------------------------------
+#
+# The parity hop blocks D_eo / D_oe only roll the UNCOMPRESSED axes
+# (T, Z, Y) — the x-direction hops stay inside a row (the lane axis, never
+# sharded) — so their halo structure is identical to the full-lattice
+# stencil above: evaluate the bulk with local periodic wrap, then correct
+# the two boundary planes of every sharded direction with
+# `collective_permute`d neighbour planes.  The correction hop for a
+# t/z/y direction on a parity-compressed half field is the SAME
+# ``hop_term_packed`` used by the full-lattice fix-ups: this is the
+# paper's layering argument made concrete — the data-transport layer is
+# untouched while the operator underneath swapped from full to parity.
+#
+# Requirement: every sharded LOCAL extent must be even.  Shard origins
+# are then even too, so each device's local row parity equals the global
+# row parity and the (local) bulk kernels compute the right projections.
+#
+# A batched RHS axis (N, T, Z, Y, 24, Xh) rides in front and is never
+# sharded: the spinor boundary planes carry the batch, but the GAUGE
+# boundary planes don't — each direction's link halo is exchanged once
+# per plane regardless of N.
+
+
+def _g5(p: jax.Array) -> jax.Array:
+    """gamma5 on a (possibly batched) plane of a packed half field."""
+    return apply_gamma5_packed(p)
+
+
+def _hop_plane(u_plane: jax.Array, psi_plane: jax.Array, mu: int,
+               forward: bool) -> jax.Array:
+    """``hop_term_packed`` on one (possibly RHS-batched) boundary plane."""
+    if psi_plane.ndim == 6:
+        return jax.vmap(
+            lambda q: hop_term_packed(u_plane, q, mu, forward=forward))(
+                psi_plane)
+    return hop_term_packed(u_plane, psi_plane, mu, forward=forward)
+
+
+def parity_hop_halo(which: str, u_e: jax.Array, u_o: jax.Array,
+                    pp: jax.Array, sharded: Mapping[int, tuple[str, int]], *,
+                    use_pallas: bool = False, gamma5_in: bool = False,
+                    gamma5_out: bool = False, psi_acc: jax.Array | None = None,
+                    acc_coeff: float = 0.0, hop_coeff: float = 1.0,
+                    bz: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Parity hop block on a LOCAL shard; call inside ``shard_map``.
+
+    Computes ``acc_coeff * psi_acc + hop_coeff * γ5out Hop(γ5in ψ)`` where
+    Hop is D_eo (``which="eo"``: odd ψ in, even out) or D_oe: the bulk via
+    the local-block kernel entry (:func:`repro.kernels.wilson_dslash.ops.
+    hop_block`, Pallas or reference), the boundary planes of every sharded
+    direction corrected with exchanged halos.  γ5 factors are applied to
+    the correction PLANES only (plane-sized work), mirroring the kernels'
+    trace-time γ5 folding — no standalone full-field γ5 pass exists on
+    this path.
+    """
+    # local import: repro.core is imported by the kernels package, so a
+    # module-level import here would be circular.
+    from repro.kernels.wilson_dslash import ops as wops
+
+    out = wops.hop_block(u_e, u_o, pp, which=which, gamma5_in=gamma5_in,
+                         gamma5_out=gamma5_out, psi_acc=psi_acc,
+                         acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+                         use_pallas=use_pallas, bz=bz, interpret=interpret)
+    u_out, u_nbr = (u_e, u_o) if which == "eo" else (u_o, u_e)
+    batch = pp.ndim - 5  # 0 or 1 leading RHS-batch axes
+    hc = jnp.asarray(hop_coeff, jnp.float32)
+    for mu, (ax, n) in sorted(sharded.items()):
+        if n == 1:
+            continue
+        fwd = [(i, (i + 1) % n) for i in range(n)]  # recv from prev rank
+        bwd = [(i, (i - 1) % n) for i in range(n)]  # recv from next rank
+        pax = mu + batch
+        first = _take(pp, pax, 0)
+        last = _take(pp, pax, -1)
+        if gamma5_in:  # fold γ5 into the plane, exactly like the kernels
+            first, last = _g5(first), _g5(last)
+        u_out_last = _take(u_out[mu], mu, -1)
+        u_nbr_last = _take(u_nbr[mu], mu, -1)
+
+        psi_prev = lax.ppermute(last, ax, fwd)    # ψ at my (axis)-1 edge
+        u_prev = lax.ppermute(u_nbr_last, ax, fwd)  # U_mu at that edge
+        psi_next = lax.ppermute(first, ax, bwd)   # ψ at my (axis)+1 edge
+
+        # backward hop into plane 0: bulk used the local wrap (last plane)
+        wrong_b = _hop_plane(u_nbr_last, last, mu, forward=False)
+        right_b = _hop_plane(u_prev, psi_prev, mu, forward=False)
+        # forward hop into plane -1: U is local (output site), ψ was wrapped
+        wrong_f = _hop_plane(u_out_last, first, mu, forward=True)
+        right_f = _hop_plane(u_out_last, psi_next, mu, forward=True)
+
+        delta_b, delta_f = right_b - wrong_b, right_f - wrong_f
+        if gamma5_out:
+            delta_b, delta_f = _g5(delta_b), _g5(delta_f)
+        out = _add_at(out, pax, 0, hc * delta_b)
+        out = _add_at(out, pax, -1, hc * delta_f)
+    return out
+
+
+def schur_op_halo(u_e, u_o, pp_e, mass, sharded, *, use_pallas: bool = False,
+                  dagger: bool = False, bz: int | None = None,
+                  interpret: bool | None = None):
+    """Sharded Schur complement D_hat ψ = m ψ - D_eo D_oe ψ / m (m = mass+4).
+
+    Two local hop blocks with the γ5 (``dagger``) and the mass-term axpy
+    folded exactly as in the single-device kernel path — the only extra
+    work versus one device is the boundary-plane corrections and their
+    ppermutes, which XLA overlaps with the bulk stencils.
+    """
+    m = float(mass) + 4.0
+    tmp_o = parity_hop_halo("oe", u_e, u_o, pp_e, sharded,
+                            use_pallas=use_pallas, gamma5_in=dagger,
+                            bz=bz, interpret=interpret)
+    return parity_hop_halo("eo", u_e, u_o, tmp_o, sharded,
+                           use_pallas=use_pallas, gamma5_out=dagger,
+                           psi_acc=pp_e, acc_coeff=m, hop_coeff=-1.0 / m,
+                           bz=bz, interpret=interpret)
+
+
+def schur_normal_op_halo(u_e, u_o, pp_e, mass, sharded, *,
+                         use_pallas: bool = False, bz: int | None = None,
+                         interpret: bool | None = None):
+    """A_hat = D_hat^dag D_hat on local shards — four hop blocks, zero
+    standalone full-field γ5/axpy passes, halo corrections per block."""
+    w = schur_op_halo(u_e, u_o, pp_e, mass, sharded, use_pallas=use_pallas,
+                      bz=bz, interpret=interpret)
+    return schur_op_halo(u_e, u_o, w, mass, sharded, use_pallas=use_pallas,
+                         dagger=True, bz=bz, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -133,19 +266,59 @@ def lattice_specs(mesh: Mesh, axis_map: Mapping[int, str] | None = None):
     return psi_spec, gauge_spec, sharded
 
 
-def make_psum_dots(mesh: Mesh):
-    """Local-shard inner products with a single fused psum across the mesh."""
+def make_psum_dots(mesh: Mesh, batched: bool = False):
+    """Local-shard inner products with one psum per reduction across the mesh.
+
+    ``batched=True``: operands carry a leading RHS-batch axis and the
+    reductions return per-RHS ``(N,)`` scalars — the N local partial sums
+    still travel in a SINGLE ``psum`` (one collective for the whole batch),
+    never N per-RHS collectives.
+    """
     axes = tuple(mesh.axis_names)
+    lead = 1 if batched else 0
 
     def dot(a, b):
-        local = jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+        red = tuple(range(lead, a.ndim))
+        local = jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32),
+                        axis=red)
         return lax.psum(local, axes)
 
     def norm2(a):
         a32 = a.astype(jnp.float32)
-        return lax.psum(jnp.sum(a32 * a32), axes)
+        return lax.psum(jnp.sum(a32 * a32, axis=tuple(range(lead, a.ndim))),
+                        axes)
 
     return dot, norm2
+
+
+def make_fused_psum_dots(mesh: Mesh, batched: bool = False):
+    """The pipelined-CG reduction: gamma = (r, r) and delta = (w, r) — for
+    EVERY right-hand side — fused into ONE ``psum`` per iteration.
+
+    The local partial sums are stacked into a single (2,) or (2, N) array
+    before the collective, so the sharded pipelined CGNR pays exactly one
+    all-reduce per iteration regardless of batch size (jaxpr-asserted in
+    tests/test_distributed.py) — the cluster-scale version of the paper's
+    "global communications ... to establish total error estimates" being
+    batched into one transfer.
+    """
+    axes = tuple(mesh.axis_names)
+    lead = 1 if batched else 0
+
+    def fused_dots(r, w):
+        red = tuple(range(lead, r.ndim))
+        r32, w32 = r.astype(jnp.float32), w.astype(jnp.float32)
+        local = jnp.stack([jnp.sum(r32 * r32, axis=red),
+                           jnp.sum(w32 * r32, axis=red)])
+        both = lax.psum(local, axes)      # the iteration's ONLY collective
+        return both[0], both[1]
+
+    return fused_dots
+
+
+# (solver name) -> (plan.solver, plan.precision) for the legacy entry point
+_LEGACY_SOLVERS = {"cg": ("cgnr", "single"), "pipecg": ("pipecg", "single"),
+                   "mpcg": ("cgnr", "mixed"), "cg16": ("cgnr", "low")}
 
 
 def solve_wilson(mesh: Mesh, up: jax.Array, b: jax.Array, mass, *,
@@ -155,47 +328,23 @@ def solve_wilson(mesh: Mesh, up: jax.Array, b: jax.Array, mass, *,
                  residual_replacement_every: int = 25):
     """Solve D x = b (via the HPD normal equations) on a device mesh.
 
-    ``solver``: "cg" | "pipecg" | "mpcg".  Returns (x, SolveStats), both
-    with the same sharding as the inputs / replicated scalars.
+    ``solver``: "cg" | "pipecg" | "mpcg" | "cg16".  Returns (x,
+    SolveStats), both with the same sharding as the inputs / replicated
+    scalars.  Thin forwarder: builds the equivalent full-operator
+    :class:`repro.core.plan.SolverPlan` (packed-layout contract) and
+    executes it.
     """
-    psi_spec, gauge_spec, sharded = lattice_specs(mesh, axis_map)
-    dot, norm2 = make_psum_dots(mesh)
-
-    def local_solve(up_l, b_l):
-        op = functools.partial(normal_op_halo, mass=mass, sharded=sharded,
-                               r=r)
-        rhs = dslash_dagger_halo(up_l, b_l, mass, sharded, r=r)
-        if solver == "cg":
-            return solvers.cg(lambda v: op(up_l, v), rhs, tol=tol,
-                              maxiter=maxiter, dot=dot, norm2=norm2)
-        if solver == "pipecg":
-            return solvers.pipecg(
-                lambda v: op(up_l, v), rhs, tol=tol, maxiter=maxiter,
-                residual_replacement_every=residual_replacement_every,
-                dot=dot, norm2=norm2)
-        if solver == "mpcg":
-            up_low = up_l.astype(low_dtype)
-            return solvers.mpcg(
-                lambda v: op(up_low, v), lambda v: op(up_l, v), rhs,
-                tol=tol, inner_tol=inner_tol, inner_maxiter=maxiter,
-                low_dtype=low_dtype, dot=dot, norm2=norm2)
-        if solver == "cg16":
-            # pure low-precision CG (no reliable updates): NOT accurate to
-            # tol — exists to measure the low-precision iteration cost that
-            # mpcg's inner loop pays (EXPERIMENTS.md §Perf H3)
-            up_low = up_l.astype(low_dtype)
-            x, st = solvers.cg(lambda v: op(up_low, v),
-                               rhs.astype(low_dtype), tol=tol,
-                               maxiter=maxiter, dot=dot, norm2=norm2)
-            return x.astype(b_l.dtype), st
+    if solver not in _LEGACY_SOLVERS:
         raise ValueError(f"unknown solver {solver!r}")
-
-    shmapped = compat.shard_map(
-        local_solve, mesh=mesh,
-        in_specs=(gauge_spec, psi_spec),
-        out_specs=(psi_spec, solvers.SolveStats(P(), P(), P(), P())),
-        check_vma=False)
-    return jax.jit(shmapped)(up, b)
+    from repro.core import plan as plan_mod  # forwarder; avoid import cycle
+    sv, precision = _LEGACY_SOLVERS[solver]
+    p = plan_mod.SolverPlan(operator="full", solver=sv, precision=precision,
+                            low=low_dtype, mesh=mesh, axis_map=axis_map, r=r)
+    return plan_mod.solve(
+        p, up, b, mass, tol=tol, maxiter=maxiter, inner_tol=inner_tol,
+        inner_maxiter=maxiter,
+        residual_replacement_every=residual_replacement_every,
+        layout="packed")
 
 
 def shard_lattice_fields(mesh: Mesh, up: jax.Array, pp: jax.Array,

@@ -1,52 +1,40 @@
-"""Even-odd (red-black) Schur-preconditioned Wilson solves, end to end.
+"""Even-odd (red-black) Schur-preconditioned Wilson solves.
 
-This module is the glue between the three layers that implement the
-decomposition:
+This module owns the Schur-decomposition PLUMBING shared by every
+even-odd solve path:
 
-* :mod:`repro.core.lattice` — parity geometry (``split_eo``/``merge_eo``,
-  per-parity gauge fields);
-* :mod:`repro.core.wilson`  — the parity blocks ``dslash_eo``/``dslash_oe``
-  and the Schur operator ``schur_op`` on even half fields;
-* :mod:`repro.core.solvers` — ``cgnr_eo``/``mpcg_eo``, operator-agnostic.
+* :class:`EOOperators`/:func:`eo_operators`/:func:`eo_operators_packed` —
+  the parity blocks of D bound to a gauge field, natural-layout reference
+  or packed Pallas fast path;
+* :func:`eo_context` — the one-stop resolver: operator blocks + RHS/
+  solution layout converters + the fused vector engine, derived ONCE for
+  a given (backend, batch shape).  This is what the
+  :mod:`repro.core.plan` resolver builds every single-device even-odd
+  solve from — the three historical ``solve_wilson_eo*`` variants used
+  to re-derive the parity gauge/packing independently.
 
-``solve_wilson_eo`` takes natural-layout (u, b) and returns the
-full-lattice solution; ``solve_wilson_eo_mp`` composes the Schur
-reduction with the paper's mixed-precision reliable-update CG: the inner
-solve iterates on bf16 real-pair half fields (narrow storage) while the
-operator accumulates and the reliable updates run in f32/complex64
-(wide arithmetic) — the two central optimizations of the source paper
-working together.
-
-With ``use_pallas=True`` the whole Schur solve runs on the Pallas fast
-path: the CG iterates on PACKED real half fields (T, Z, Y, 24, Xh), the
-matvec is four parity-hop kernel launches (γ5 and the Schur axpy folded
-into kernel prologues/epilogues — see :mod:`repro.kernels.wilson_dslash`),
-and the per-iteration vector algebra streams through the two fused
-``cg_fused`` kernels injected into the solver's ``update``/``xpay`` hooks.
-Packing is an isometry (Re⟨a,b⟩ equals the packed real dot product), so
-the real-arithmetic CG produces exactly the complex CGNR iterates.
-
-``solve_wilson_eo_batched`` is the multi-RHS entry point: N right-hand
-sides against ONE gauge field ride a single masked CG loop whose matvec
-amortizes every gauge-plane read across the batch — the workload-scaling
-lever of DESIGN.md §6.  Per-RHS convergence masking keeps each system's
-returned iterate bitwise identical to its independent single-RHS solve.
+``solve_wilson_eo`` / ``solve_wilson_eo_batched`` / ``solve_wilson_eo_mp``
+remain the stable public entry points but are now thin forwarders to the
+:class:`repro.core.plan.SolverPlan` machinery: each one names its path as
+a plan (operator family, backend, batch shape, precision policy) and the
+plan resolver executes it.  Their contracts — including the bitwise
+batched-equals-looped-singles guarantee and the packed-path r=1
+restriction — are unchanged and tested in tests/test_eo.py.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import solvers
-from repro.core.lattice import (complex_to_real_pair, field_dot, field_norm2,
-                                merge_eo, pack_gauge, pack_spinor,
-                                real_pair_to_complex, split_eo,
-                                split_eo_gauge, unpack_spinor)
+from repro.core.lattice import (field_dot, field_norm2, merge_eo, pack_gauge,
+                                pack_spinor, split_eo, split_eo_gauge,
+                                unpack_spinor)
 from repro.core.wilson import (dslash_eo, dslash_oe, schur_dagger,
-                               schur_normal_op, schur_op)
+                               schur_op)
 
 Array = jax.Array
 
@@ -130,6 +118,78 @@ def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
         u_e=upe, u_o=upo)
 
 
+class EOContext(NamedTuple):
+    """A resolved even-odd solve: blocks + layout converters + engine.
+
+    ``prepare`` maps the natural-layout RHS ``b`` to the pair of
+    working-layout half fields the solver iterates on; ``finish`` inverts
+    it for the solution.  ``engine`` is the (update, xpay) fused vector
+    engine when the working layout is packed (Pallas streaming triads),
+    else None (the solver's default jnp algebra).  The blocks in ``ops``
+    already accept the declared batch shape — vmapped natural-layout
+    references or rank-polymorphic packed kernels.
+    """
+
+    ops: EOOperators
+    prepare: Callable[[Array], tuple[Array, Array]]
+    finish: Callable[[Array, Array], Array]
+    engine: tuple[Callable, Callable] | None
+    packed: bool
+    batched: bool
+
+
+def eo_context(u: Array, mass, *, r: float = 1.0, use_pallas: bool = False,
+               batched: bool = False, bz: int | None = None,
+               interpret: bool | None = None,
+               out_dtype=jnp.complex64) -> EOContext:
+    """Resolve the even-odd solve pieces for one (backend, batch) shape.
+
+    This is the single place the parity gauge split, the field packing,
+    the batch vmapping and the fused-engine choice are derived —
+    everything downstream (the plan resolver, and through it the
+    ``solve_wilson_eo*`` forwarders) composes these callables.
+    """
+    if use_pallas:
+        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
+
+        def prepare(b: Array) -> tuple[Array, Array]:
+            b_e, b_o = (jax.vmap(split_eo)(b) if batched else split_eo(b))
+            return pack_spinor(b_e), pack_spinor(b_o)
+
+        def finish(x_e: Array, x_o: Array) -> Array:
+            xe = unpack_spinor(x_e, dtype=out_dtype)
+            xo = unpack_spinor(x_o, dtype=out_dtype)
+            return (jax.vmap(merge_eo)(xe, xo) if batched
+                    else merge_eo(xe, xo))
+
+        # local import: see eo_operators_packed
+        from repro.kernels.cg_fused import fused_engine, fused_engine_batched
+        engine = (fused_engine_batched(interpret=interpret) if batched
+                  else fused_engine(interpret=interpret))
+        return EOContext(ops=ops, prepare=prepare, finish=finish,
+                         engine=engine, packed=True, batched=batched)
+
+    ops = eo_operators(u, mass, r=r)
+    if batched:
+        # natural-layout blocks are single-RHS; vmap them (m_inv is
+        # elementwise and batch-transparent already)
+        ops = ops._replace(dhat=jax.vmap(ops.dhat),
+                           dhat_dag=jax.vmap(ops.dhat_dag),
+                           d_eo=jax.vmap(ops.d_eo),
+                           d_oe=jax.vmap(ops.d_oe))
+
+        return EOContext(ops=ops, prepare=jax.vmap(split_eo),
+                         finish=jax.vmap(merge_eo), engine=None,
+                         packed=False, batched=True)
+    return EOContext(ops=ops, prepare=split_eo, finish=merge_eo,
+                     engine=None, packed=False, batched=False)
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points — thin forwarders to the SolverPlan machinery
+# ---------------------------------------------------------------------------
+
+
 def solve_wilson_eo(u: Array, b: Array, mass, *, r: float = 1.0,
                     tol: float = 1e-8, maxiter: int = 1000,
                     dot=field_dot, norm2=field_norm2,
@@ -142,30 +202,19 @@ def solve_wilson_eo(u: Array, b: Array, mass, *, r: float = 1.0,
     merged full-lattice solution out, but the CG runs on half-size
     vectors against the better-conditioned reduced operator.
 
-    ``use_pallas=True`` moves the whole solve onto the Pallas fast path:
-    packed real half fields, parity-hop stencil kernels for the matvec and
-    the fused streaming kernels for the per-iteration vector algebra.
+    Forwards to ``plan.solve`` with the equivalent
+    ``SolverPlan(operator="eo-schur", backend=...)``; ``use_pallas=True``
+    is the ``backend="pallas"`` fast path (packed real half fields,
+    parity-hop stencil kernels, fused streaming vector algebra).
     ``interpret``/``bz`` tune the kernels (None = backend defaults).
     """
-    if use_pallas:
-        from repro.kernels.cg_fused import fused_engine  # see note above
-
-        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
-        b_e, b_o = split_eo(b)
-        update, xpay = fused_engine(interpret=interpret)
-        (x_e, x_o), stats = solvers.cgnr_eo(
-            ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
-            pack_spinor(b_e), pack_spinor(b_o),
-            tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
-            update=update, xpay=xpay)
-        return merge_eo(unpack_spinor(x_e, dtype=b.dtype),
-                        unpack_spinor(x_o, dtype=b.dtype)), stats
-    ops = eo_operators(u, mass, r=r)
-    b_e, b_o = split_eo(b)
-    (x_e, x_o), stats = solvers.cgnr_eo(
-        ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv, b_e, b_o,
-        tol=tol, maxiter=maxiter, dot=dot, norm2=norm2)
-    return merge_eo(x_e, x_o), stats
+    from repro.core import plan as plan_mod  # forwarder; avoid import cycle
+    p = plan_mod.SolverPlan(
+        operator="eo-schur",
+        backend="pallas" if use_pallas else "reference",
+        r=r, bz=bz, interpret=interpret)
+    return plan_mod.solve(p, u, b, mass, tol=tol, maxiter=maxiter,
+                          dot=dot, norm2=norm2)
 
 
 def solve_wilson_eo_batched(u: Array, b: Array, mass, *, r: float = 1.0,
@@ -185,38 +234,26 @@ def solve_wilson_eo_batched(u: Array, b: Array, mass, *, r: float = 1.0,
     Returns:
       (x, stats): x is (N, T, Z, Y, X, 4, 3); ``stats.iterations`` is the
       masked loop's trip count (= the slowest system's iterations) while
-      ``stats.residual_norm2``/``stats.converged`` are per-RHS (N,).
+      ``stats.residual_norm2``/``stats.converged``/``stats.rhs_iterations``
+      are per-RHS (N,).
 
     Per-RHS convergence masking freezes each system the iteration it
     meets ITS OWN ``tol``: the returned x_n is bitwise the iterate an
-    independent single-RHS solve of b_n would have returned.
-    ``use_pallas=True`` runs packed real half fields through the batched
-    parity kernels and the batched fused vector engine; ``False`` vmaps
-    the natural-layout reference blocks (same Krylov iteration).
+    independent single-RHS solve of b_n would have returned.  Forwards to
+    ``plan.solve`` with ``SolverPlan(operator="eo-schur", nrhs=N)``;
+    ``use_pallas`` selects the backend exactly as in
+    :func:`solve_wilson_eo`.
     """
     if b.ndim != 7:  # a real exception, not assert: must survive `python -O`
         raise ValueError(
             f"batched RHS must be (N, T, Z, Y, X, 4, 3); got {b.shape}. "
             "For a single RHS use solve_wilson_eo (or add a leading axis).")
-    b_e, b_o = jax.vmap(split_eo)(b)
-    if use_pallas:
-        from repro.kernels.cg_fused import fused_engine_batched  # circularity
-        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
-        update, xpay = fused_engine_batched(interpret=interpret)
-        (x_e, x_o), stats = solvers.cgnr_eo(
-            ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
-            pack_spinor(b_e), pack_spinor(b_o),
-            tol=tol, maxiter=maxiter, update=update, xpay=xpay,
-            batched=True)
-        x_e = unpack_spinor(x_e, dtype=b.dtype)
-        x_o = unpack_spinor(x_o, dtype=b.dtype)
-    else:
-        ops = eo_operators(u, mass, r=r)
-        (x_e, x_o), stats = solvers.cgnr_eo(
-            jax.vmap(ops.dhat), jax.vmap(ops.dhat_dag), jax.vmap(ops.d_eo),
-            jax.vmap(ops.d_oe), ops.m_inv, b_e, b_o,
-            tol=tol, maxiter=maxiter, batched=True)
-    return jax.vmap(merge_eo)(x_e, x_o), stats
+    from repro.core import plan as plan_mod  # forwarder; avoid import cycle
+    p = plan_mod.SolverPlan(
+        operator="eo-schur",
+        backend="pallas" if use_pallas else "reference",
+        nrhs=b.shape[0], r=r, bz=bz, interpret=interpret)
+    return plan_mod.solve(p, u, b, mass, tol=tol, maxiter=maxiter)
 
 
 def solve_wilson_eo_mp(u: Array, b: Array, mass, *, r: float = 1.0,
@@ -244,86 +281,15 @@ def solve_wilson_eo_mp(u: Array, b: Array, mass, *, r: float = 1.0,
     inner CG streams through the parity kernels + fused vector engine.
     Requires r = 1 (raises ``NotImplementedError`` otherwise; see
     :func:`eo_operators_packed` for the supported-parameter matrix).
+
+    Forwards to ``plan.solve`` with ``SolverPlan(operator="eo-schur",
+    precision="mixed", low=low_dtype)``.
     """
-    if use_pallas:
-        return _solve_wilson_eo_mp_pallas(
-            u, b, mass, r=r, tol=tol, inner_tol=inner_tol,
-            inner_maxiter=inner_maxiter, max_outer=max_outer,
-            low_dtype=low_dtype, dot=dot, norm2=norm2,
-            interpret=interpret, bz=bz)
-    ops = eo_operators(u, mass, r=r)
-    b_e, b_o = split_eo(b)
-    high = b.dtype
-
-    def round_links(w: Array) -> Array:
-        pair = complex_to_real_pair(w, dtype=low_dtype)
-        return real_pair_to_complex(pair, dtype=w.dtype)
-
-    u_e_lo, u_o_lo = round_links(ops.u_e), round_links(ops.u_o)
-
-    def a_low(w: Array) -> Array:  # bf16 real-pair in/out, wide inside
-        v = real_pair_to_complex(w, dtype=high)
-        av = schur_normal_op(u_e_lo, u_o_lo, v, mass, r=r)
-        return complex_to_real_pair(av, dtype=low_dtype)
-
-    def a_high(v: Array) -> Array:
-        return schur_normal_op(ops.u_e, ops.u_o, v, mass, r=r)
-
-    (x_e, x_o), stats = solvers.mpcg_eo(
-        a_low, a_high, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
-        b_e, b_o, tol=tol, inner_tol=inner_tol,
-        inner_maxiter=inner_maxiter, max_outer=max_outer,
-        low_dtype=low_dtype,
-        to_low=lambda v: complex_to_real_pair(v, dtype=low_dtype),
-        to_high=lambda w: real_pair_to_complex(w, dtype=high),
-        dot=dot, norm2=norm2)
-    return merge_eo(x_e, x_o), stats
-
-
-def _solve_wilson_eo_mp_pallas(u: Array, b: Array, mass, *, r, tol,
-                               inner_tol, inner_maxiter, max_outer,
-                               low_dtype, dot, norm2, interpret, bz,
-                               ) -> tuple[Array, solvers.SolveStats]:
-    """Mixed-precision Schur solve entirely on packed real half fields.
-
-    Low representation = the packed field itself in ``low_dtype`` storage
-    (the packing is already real, so no real-pair view is needed): links
-    are rounded once up front, the inner CG's iterates/updates live in
-    bf16 through the fused vector engine, and the parity kernels
-    accumulate every contraction in f32 registers — T1's narrow storage /
-    wide accumulate with zero standalone full-field cast passes inside
-    the matvec.
-    """
-    # local import: see eo_operators_packed.
-    from repro.kernels.cg_fused import fused_engine
-    from repro.kernels.wilson_dslash import ops as wops
-
-    ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
-    b_e, b_o = split_eo(b)
-    pb_e = pack_spinor(b_e)
-    pb_o = pack_spinor(b_o)
-    high = pb_e.dtype
-
-    # one up-front rounding of the links — the low operator's gauge reads
-    # then stream bf16 (half the gauge HBM traffic), accumulating wide.
-    u_e_lo = ops.u_e.astype(low_dtype)
-    u_o_lo = ops.u_o.astype(low_dtype)
-    kw = dict(bz=bz, interpret=interpret)
-
-    def a_low(w: Array) -> Array:  # low storage in/out, f32 registers inside
-        return wops.schur_normal_op(u_e_lo, u_o_lo, w, mass, **kw)
-
-    def a_high(v: Array) -> Array:
-        return wops.schur_normal_op(ops.u_e, ops.u_o, v, mass, **kw)
-
-    update, xpay = fused_engine(interpret=interpret)
-    (x_e, x_o), stats = solvers.mpcg_eo(
-        a_low, a_high, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
-        pb_e, pb_o, tol=tol, inner_tol=inner_tol,
-        inner_maxiter=inner_maxiter, max_outer=max_outer,
-        low_dtype=low_dtype,
-        to_low=lambda v: v.astype(low_dtype),
-        to_high=lambda w: w.astype(high),
-        dot=dot, norm2=norm2, update=update, xpay=xpay)
-    return merge_eo(unpack_spinor(x_e, dtype=b.dtype),
-                    unpack_spinor(x_o, dtype=b.dtype)), stats
+    from repro.core import plan as plan_mod  # forwarder; avoid import cycle
+    p = plan_mod.SolverPlan(
+        operator="eo-schur",
+        backend="pallas" if use_pallas else "reference",
+        precision="mixed", low=low_dtype, r=r, bz=bz, interpret=interpret)
+    return plan_mod.solve(p, u, b, mass, tol=tol, inner_tol=inner_tol,
+                          inner_maxiter=inner_maxiter, max_outer=max_outer,
+                          dot=dot, norm2=norm2)

@@ -61,6 +61,12 @@ class SolveStats(NamedTuple):
     outer_iterations: Array    # outer/reliable-update cycles (1 for plain CG)
     residual_norm2: Array      # final TRUE residual squared (high precision)
     converged: Array           # bool; per-RHS (N,) for batched solves
+    # per-RHS (N,) iteration counts for batched solves: the step at which
+    # each system's convergence mask froze it (``iterations`` is the
+    # slowest system's count = the masked loop's trip count).  None for
+    # unbatched solves, so the pytree structure of legacy stats (and the
+    # shard_map out_specs built from them) is unchanged.
+    rhs_iterations: Array | None = None
 
 
 def _real(x):
@@ -127,11 +133,11 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     limit = (tol ** 2) * bs
 
     def cond(carry):
-        k, x, r, p, rs = carry
+        k, x, r, p, rs = carry[:5]
         return jnp.logical_and(k < maxiter, jnp.any(rs > limit))
 
     def body(carry):
-        k, x, r, p, rs = carry
+        k, x, r, p, rs = carry[:5]
         ap = op(p)
         pap = _real(dot(p, ap))
         if batched:
@@ -159,12 +165,20 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
             p = jnp.where(_bcast(active, b), p_new, p) if batched else p_new
         else:
             p = xpay(beta, r, p, active) if batched else xpay(beta, r, p)
+        if batched:
+            # per-RHS trip counts: a system still active this step ran it
+            it = jnp.where(active, k + 1, carry[5])
+            return (k + 1, x, r, p, rs_new, it)
         return (k + 1, x, r, p, rs_new)
 
-    k, x, r, p, rs = jax.lax.while_loop(
-        cond, body, (jnp.asarray(0, jnp.int32), x, r, p, rs))
+    init = (jnp.asarray(0, jnp.int32), x, r, p, rs)
+    if batched:
+        init = init + (jnp.zeros_like(rs, jnp.int32),)
+    out = jax.lax.while_loop(cond, body, init)
+    k, x, r, p, rs = out[:5]
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
-                       residual_norm2=rs, converged=rs <= limit)
+                       residual_norm2=rs, converged=rs <= limit,
+                       rhs_iterations=out[5] if batched else None)
     return x, stats
 
 
@@ -376,11 +390,11 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     limit = (tol ** 2) * bs
 
     def cond(carry):
-        outer, inner_total, x, r, rs = carry
+        outer, inner_total, x, r, rs = carry[:5]
         return jnp.logical_and(outer < max_outer, jnp.any(rs > limit))
 
     def body(carry):
-        outer, inner_total, x, r, rs = carry
+        outer, inner_total, x, r, rs = carry[:5]
         rhs = r
         if batched:  # freeze converged systems: zero RHS -> inactive inner CG
             rhs = jnp.where(_bcast(rs > limit, r), r, jnp.zeros_like(r))
@@ -391,13 +405,20 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
         x = x + to_high(d)
         r = b - op_high(x)                     # reliable update (true residual)
         rs = _real(norm2(r))
-        return (outer + 1, inner_total + st.iterations, x, r, rs)
+        out = (outer + 1, inner_total + st.iterations, x, r, rs)
+        if batched:  # per-RHS inner-iteration totals across outer cycles
+            out = out + (carry[5] + st.rhs_iterations,)
+        return out
 
     init = (jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
             jnp.zeros_like(b), b, bs)
-    outer, inner_total, x, r, rs = jax.lax.while_loop(cond, body, init)
+    if batched:
+        init = init + (jnp.zeros_like(bs, jnp.int32),)
+    out = jax.lax.while_loop(cond, body, init)
+    outer, inner_total, x, r, rs = out[:5]
     stats = SolveStats(iterations=inner_total, outer_iterations=outer,
-                       residual_norm2=rs, converged=rs <= limit)
+                       residual_norm2=rs, converged=rs <= limit,
+                       rhs_iterations=out[5] if batched else None)
     return x, stats
 
 
@@ -407,7 +428,8 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
 
 def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
            residual_replacement_every: int = 25,
-           dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
+           dot=field_dot, norm2=field_norm2, fused_dots=None,
+           batched: bool = False) -> tuple[Array, SolveStats]:
     """Pipelined CG: the two inner products of an iteration are fused into a
     single reduction which the scheduler can overlap with the matvec
     ``A w`` — per-iteration collective count drops from 2-3 to 1.
@@ -417,17 +439,34 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
     ``r = b - A x`` is recomputed and the recurrences restarted — the same
     reliable-update idea the paper applies across precisions (Ref. [10]),
     applied here across recurrence drift.  Set 0 to disable.
+
+    ``fused_dots(r, w) -> (gamma, delta)`` injects the iteration's single
+    reduction (``gamma = (r, r)``, ``delta = (w, r)``).  The default
+    composes the injected ``norm2``/``dot``; a distributed implementation
+    should stack both local partials and issue ONE ``psum`` — see
+    :func:`repro.core.distributed.make_fused_psum_dots` — making this the
+    only collective per iteration.
+
+    ``batched=True`` follows the masked multi-RHS contract of :func:`cg`:
+    per-RHS ``gamma``/``delta``/``alpha``/``beta`` of shape (N,), a
+    converged system's ``alpha`` masked to 0 (x/r/w freeze) and its
+    z/q/p recurrences gated off, the loop running until every RHS meets
+    its own relative tolerance.  The residual replacement stays global
+    (recomputing a converged system's true residual is harmless).
     """
+    if batched:
+        dot, norm2 = _batched_defaults(dot, norm2)
     x = jnp.zeros_like(b)
     r = b
     w = op(r)
     dt = b.dtype
     rr = int(residual_replacement_every)
 
-    # fused reduction: gamma = (r,r), delta = (w,r) — computed together so a
-    # distributed `dot` implementation can batch them into one collective.
-    def fused_dots(r, w):
-        return _real(norm2(r)), _real(dot(w, r))
+    if fused_dots is None:
+        # fused reduction: computed together so a distributed implementation
+        # can batch both into one collective.
+        def fused_dots(r, w):
+            return _real(norm2(r)), _real(dot(w, r))
 
     gamma, delta = fused_dots(r, w)
     bs = _real(norm2(b))
@@ -435,28 +474,43 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
 
     zero = jnp.zeros_like(b)
     init = (jnp.asarray(0, jnp.int32), x, r, w, zero, zero, zero,
-            gamma, delta, jnp.asarray(1.0, gamma.dtype),
-            jnp.asarray(0.0, gamma.dtype), jnp.asarray(True))
+            gamma, delta, jnp.ones_like(gamma),
+            jnp.zeros_like(gamma), jnp.asarray(True))
+    if batched:
+        init = init + (jnp.zeros_like(gamma, jnp.int32),)
 
     def cond(c):
-        k, *_, gamma, delta, alpha_prev, gamma_prev, restart = c
-        return jnp.logical_and(k < maxiter, gamma > limit)
+        k, gamma = c[0], c[7]
+        return jnp.logical_and(k < maxiter, jnp.any(gamma > limit))
 
     def body(c):
         (k, x, r, w, z, q, p, gamma, delta, alpha_prev, gamma_prev,
-         restarted) = c
+         restarted) = c[:12]
         m = op(w)  # ← overlaps the (gamma, delta) reduction
         beta = jnp.where(restarted, 0.0,
                          gamma / jnp.where(gamma_prev == 0, 1.0, gamma_prev))
         denom = delta - beta * gamma / jnp.where(alpha_prev == 0, 1.0,
                                                  alpha_prev)
         alpha = gamma / jnp.where(denom == 0, 1.0, denom)
-        z = m + beta.astype(dt) * z
-        q = w + beta.astype(dt) * q
-        p = r + beta.astype(dt) * p
-        x = x + alpha.astype(dt) * p
-        r = r - alpha.astype(dt) * q
-        w = w - alpha.astype(dt) * z
+        if batched:
+            active = gamma > limit
+            alpha = jnp.where(active, alpha, 0.0)  # freeze x/r/w bitwise
+            bb, aa = _bcast(beta, b).astype(dt), _bcast(alpha, b).astype(dt)
+            gate = _bcast(active, b)
+            # gate the recurrence vectors too: beta -> 1 for a frozen
+            # system (its gamma stopped moving), which would keep GROWING
+            # p/q/z without this.
+            z = jnp.where(gate, m + bb * z, z)
+            q = jnp.where(gate, w + bb * q, q)
+            p = jnp.where(gate, r + bb * p, p)
+        else:
+            bb = aa = None
+            z = m + beta.astype(dt) * z
+            q = w + beta.astype(dt) * q
+            p = r + beta.astype(dt) * p
+        x = x + (aa if batched else alpha.astype(dt)) * p
+        r = r - (aa if batched else alpha.astype(dt)) * q
+        w = w - (aa if batched else alpha.astype(dt)) * z
 
         if rr > 0:
             do_replace = (k + 1) % rr == 0
@@ -470,13 +524,17 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
         else:
             do_replace = jnp.asarray(False)
         gamma_new, delta_new = fused_dots(r, w)
-        return (k + 1, x, r, w, z, q, p, gamma_new, delta_new, alpha, gamma,
-                do_replace)
+        out = (k + 1, x, r, w, z, q, p, gamma_new, delta_new, alpha, gamma,
+               do_replace)
+        if batched:
+            out = out + (jnp.where(active, k + 1, c[12]),)
+        return out
 
     out = jax.lax.while_loop(cond, body, init)
     k, x, gamma = out[0], out[1], out[7]
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
-                       residual_norm2=gamma, converged=gamma <= limit)
+                       residual_norm2=gamma, converged=gamma <= limit,
+                       rhs_iterations=out[12] if batched else None)
     return x, stats
 
 

@@ -298,7 +298,11 @@ def hop_term_packed(u_mu: jax.Array, psi_nbr: jax.Array, mu: int,
       forward: True -> (r - gamma) U psi ; False -> (r + gamma) U^dag psi.
 
     Shared by ``dslash_packed`` (with rolled inputs) and the distributed
-    halo fix-ups in :mod:`repro.core.distributed` (with exchanged planes).
+    halo fix-ups in :mod:`repro.core.distributed` (with exchanged planes) —
+    both the full-lattice ones and the parity-compressed even-odd ones:
+    for mu in {t, z, y} a half-field hop keeps the compressed x index, so
+    the same plane correction applies verbatim to (T', Z', Y, *, Xh)
+    boundary planes with the per-parity link fields swapped in.
     """
     acc = jnp.float32 if psi_nbr.dtype in (jnp.bfloat16, jnp.float16,
                                            jnp.float32) else psi_nbr.dtype

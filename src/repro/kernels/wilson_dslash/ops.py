@@ -118,6 +118,45 @@ def dslash_oe(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
                             gamma5_in=gamma5_in, gamma5_out=gamma5_out)
 
 
+_STATIC_HOP = ("which", "bz", "interpret", "use_pallas", "gamma5_in",
+               "gamma5_out", "acc_coeff", "hop_coeff")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_HOP)
+def hop_block(u_e: jax.Array, u_o: jax.Array, pp: jax.Array, *,
+              which: str, gamma5_in: bool = False, gamma5_out: bool = False,
+              psi_acc: jax.Array | None = None, acc_coeff: float = 0.0,
+              hop_coeff: float = 1.0, bz: int | None = None,
+              interpret: bool | None = None,
+              use_pallas: bool = True) -> jax.Array:
+    """One parity hop block with the full fused-epilogue surface exposed:
+
+        out = acc_coeff * psi_acc + hop_coeff * γ5out Hop_which(γ5in ψ)
+
+    This is the shard_map-compatible LOCAL building block of the
+    distributed even-odd fast path (:mod:`repro.core.distributed`): called
+    on a per-device shard it evaluates the bulk stencil with local periodic
+    wrap, and the halo layer corrects only the boundary planes.  ``which``
+    is ``"eo"`` (odd in, even out) or ``"oe"`` (even in, odd out); ``pp``
+    may carry a leading RHS-batch axis.  The ``use_pallas=False`` reference
+    composes the same epilogue out of the round-trip oracle blocks.
+    """
+    if which not in ("eo", "oe"):  # must survive `python -O`
+        raise ValueError(f"hop_block: which must be 'eo' or 'oe', "
+                         f"got {which!r}")
+    if not use_pallas:
+        ref = dslash_eo_ref if which == "eo" else dslash_oe_ref
+        hop = ref(u_e, u_o, pp, gamma5_in=gamma5_in, gamma5_out=gamma5_out)
+        out = hop if hop_coeff == 1.0 else hop_coeff * hop
+        if psi_acc is not None:
+            out = acc_coeff * psi_acc + out
+        return out.astype(pp.dtype)
+    kern = dslash_eo_pallas if which == "eo" else dslash_oe_pallas
+    return kern(u_e, u_o, pp, bz=bz, interpret=interpret,
+                gamma5_in=gamma5_in, gamma5_out=gamma5_out,
+                psi_acc=psi_acc, acc_coeff=acc_coeff, hop_coeff=hop_coeff)
+
+
 _STATIC_SCHUR = ("mass", "bz", "interpret", "use_pallas", "dagger")
 
 

@@ -1,11 +1,18 @@
-"""Lattice solver launcher — the paper's workload end-to-end.
+"""Lattice solver launcher — the paper's workload end-to-end, plan-driven.
 
-``python -m repro.launch.solve --lattice 8x8x8x16 --solver mpcg``
+Every invocation builds ONE :class:`repro.core.plan.SolverPlan` and
+executes it — the CLI axes map 1:1 onto plan fields:
 
-Builds a random SU(3) gauge configuration, solves D x = b via the chosen
-CG variant (optionally distributed over a device mesh, optionally through
-the Pallas dslash kernel), and reports iterations / residuals / derived
-FLOP rates using the paper's 1320 flop/site dslash convention (§5).
+    python -m repro.launch.solve --lattice 4x4x4x8 --solver mpcg
+    python -m repro.launch.solve --solver cgnr_eo --backend pallas
+    python -m repro.launch.solve --parity eo --backend pallas --nrhs 8
+    python -m repro.launch.solve --parity eo --nrhs 4 --mesh debug \
+        --solver pipecg     # sharded batched Schur, 1 psum/iteration
+
+Builds a random SU(3) gauge configuration, solves D x = b (for one RHS or
+an ``--nrhs`` batch) via the planned CG variant, and reports iterations —
+per right-hand side for batched solves — plus residuals and derived FLOP
+rates using the paper's 1320 flop/site dslash convention (§5).
 """
 
 from __future__ import annotations
@@ -17,13 +24,50 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (LatticeShape, cg, dslash_flops, mpcg, pipecg)
-from repro.core import distributed as dist
-from repro.core.wilson import (dslash_dagger_packed, dslash_packed,
-                               normal_op_packed)
+from repro.core import LatticeShape, dslash_flops, random_spinor
+from repro.core import plan as plan_mod
+from repro.core.wilson import dslash
 from repro.data import lattice_problem
-from repro.kernels.wilson_dslash import dslash as dslash_kernel
 from repro.launch.mesh import make_debug_mesh
+
+# legacy/compound solver names -> (Krylov loop, precision, parity default).
+# "--parity"/"--backend" override the inferred parts, so the historical
+# spellings keep working while the plan fields stay orthogonal.
+_SOLVER_ALIASES = {
+    "cg": ("cgnr", "single", "full"),
+    "cgnr": ("cgnr", "single", "full"),
+    "pipecg": ("pipecg", "single", None),
+    "mpcg": ("cgnr", "mixed", "full"),
+    "cg16": ("cgnr", "low", "full"),
+    "cg-pallas": ("cgnr", "single", "full"),
+    "cgnr_eo": ("cgnr", "single", "eo"),
+    "pipecg_eo": ("pipecg", "single", "eo"),
+    "cgnr_eo_mp": ("cgnr", "mixed", "eo"),
+}
+
+
+def build_plan(args) -> plan_mod.SolverPlan:
+    """Resolve the CLI axes to a SolverPlan (pure; unit-tested)."""
+    loop, precision, parity = _SOLVER_ALIASES[args.solver]
+    if args.parity is not None:
+        parity = args.parity
+    elif parity is None:
+        parity = "full"
+    backend = args.backend
+    if args.solver == "cg-pallas":
+        backend = "pallas"
+    mesh = None
+    if args.mesh == "debug":
+        mesh = make_debug_mesh((2, 2), ("data", "model")) \
+            if len(jax.devices()) >= 4 else None
+        if mesh is None:
+            raise SystemExit(
+                "[solve] <4 devices; run under "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return plan_mod.SolverPlan(
+        operator="eo-schur" if parity == "eo" else "full",
+        backend=backend, solver=loop, precision=precision,
+        nrhs=args.nrhs, mesh=mesh)
 
 
 def main(argv=None):
@@ -32,7 +76,14 @@ def main(argv=None):
                    help="TxZxYxX extents")
     p.add_argument("--mass", type=float, default=0.2)
     p.add_argument("--solver", default="mpcg",
-                   choices=["cg", "pipecg", "mpcg", "cg-pallas"])
+                   choices=sorted(_SOLVER_ALIASES))
+    p.add_argument("--parity", choices=["full", "eo"], default=None,
+                   help="operator family (default: inferred from --solver)")
+    p.add_argument("--backend", choices=["reference", "pallas"],
+                   default="reference")
+    p.add_argument("--nrhs", type=int, default=None,
+                   help="solve N right-hand sides in one masked batched CG "
+                        "loop (gauge reads amortized across the batch)")
     p.add_argument("--tol", type=float, default=1e-6)
     p.add_argument("--maxiter", type=int, default=2000)
     p.add_argument("--mesh", default="none", choices=["none", "debug"])
@@ -41,52 +92,60 @@ def main(argv=None):
 
     t, z, y, x = (int(v) for v in args.lattice.split("x"))
     shape = LatticeShape(t, z, y, x)
-    up, b = lattice_problem(shape, mass=args.mass, seed=args.seed)
+    u, b = lattice_problem(shape, mass=args.mass, seed=args.seed,
+                           packed=False)
+    if args.nrhs is not None:
+        key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 1)
+        b = jnp.stack([random_spinor(jax.random.fold_in(key, i), shape)
+                       for i in range(args.nrhs)])
     m = args.mass
 
-    t0 = time.time()
-    if args.mesh != "none":
-        mesh = make_debug_mesh((2, 2), ("data", "model")) \
-            if len(jax.devices()) >= 4 else None
-        if mesh is None:
-            print("[solve] <4 devices; run under "
-                  "XLA_FLAGS=--xla_force_host_platform_device_count=8")
-            return 1
-        upd, bd = dist.shard_lattice_fields(mesh, up, b)
-        xsol, st = dist.solve_wilson(mesh, upd, bd, m, solver=args.solver,
-                                     tol=args.tol, maxiter=args.maxiter)
-        xsol = jax.device_get(xsol)
-        iters = int(st.iterations)
-    elif args.solver == "cg-pallas":
-        from repro.kernels.cg_fused import cg_pallas
-        op = lambda v: dslash_dagger_packed(
-            up, dslash_kernel(up, v, m), m)
-        rhs = dslash_dagger_packed(up, b, m)
-        xsol, (k, rs) = cg_pallas(op, rhs, tol=args.tol,
-                                  maxiter=args.maxiter)
-        iters = int(k)
-    else:
-        op_hi = lambda v: normal_op_packed(up, v, m)
-        rhs = dslash_dagger_packed(up, b, m)
-        if args.solver == "cg":
-            xsol, st = cg(op_hi, rhs, tol=args.tol, maxiter=args.maxiter)
-        elif args.solver == "pipecg":
-            xsol, st = pipecg(op_hi, rhs, tol=args.tol,
-                              maxiter=args.maxiter)
-        else:
-            up_lo = up.astype(jnp.bfloat16)
-            op_lo = lambda v: normal_op_packed(up_lo, v, m)
-            xsol, st = mpcg(op_lo, op_hi, rhs, tol=args.tol,
-                            inner_maxiter=args.maxiter)
-        iters = int(st.iterations)
-    dt = time.time() - t0
+    try:
+        plan = build_plan(args)
+    except (ValueError, NotImplementedError) as e:
+        print(f"[solve] invalid plan: {e}")
+        return 1
+    print(f"[solve] plan: operator={plan.operator} backend={plan.backend} "
+          f"solver={plan.solver} precision={plan.precision} "
+          f"nrhs={plan.nrhs} mesh="
+          f"{dict(plan.mesh.shape) if plan.mesh is not None else None}")
 
-    res = dslash_packed(up, jnp.asarray(xsol), m) - b
-    rel = float(jnp.linalg.norm(res.ravel()) / jnp.linalg.norm(b.ravel()))
-    # each CGNR iteration applies D and D^dag (2 dslash) + vector algebra
-    flops = 2 * dslash_flops(shape.volume) * max(iters, 1) * 2
+    t0 = time.time()
+    try:
+        xsol, st = plan_mod.solve(plan, u, b, m, tol=args.tol,
+                                  maxiter=args.maxiter)
+    except (ValueError, NotImplementedError) as e:
+        # dispatch-time rejections (e.g. full + mesh + nrhs) — same
+        # friendly failure as a plan that fails to construct
+        print(f"[solve] invalid plan: {e}")
+        return 1
+    jax.block_until_ready(xsol)
+    dt = time.time() - t0
+    iters = int(st.iterations)
+
+    if plan.nrhs is not None:
+        res = jax.vmap(lambda xx, bb: dslash(u, xx, m) - bb)(xsol, b)
+        rels = (jnp.linalg.norm(res.reshape(plan.nrhs, -1), axis=1)
+                / jnp.linalg.norm(b.reshape(plan.nrhs, -1), axis=1))
+        rel = float(jnp.max(rels))
+        per_rhs = [int(v) for v in st.rhs_iterations]
+        print("[solve] per-RHS iterations: " + " ".join(
+            f"rhs{i}={n}" for i, n in enumerate(per_rhs)))
+        print("[solve] per-RHS rel_res:   " + " ".join(
+            f"rhs{i}={float(r):.2e}" for i, r in enumerate(rels)))
+        n_systems = plan.nrhs
+    else:
+        res = dslash(u, xsol, m) - b
+        rel = float(jnp.linalg.norm(res.ravel())
+                    / jnp.linalg.norm(b.ravel()))
+        n_systems = 1
+
+    # each CGNR iteration applies D and D^dag (2 dslash) + vector algebra;
+    # the even-odd Schur matvec does the same work on half-size fields.
+    volume = shape.volume // 2 if plan.operator == "eo-schur" else shape.volume
+    flops = 2 * dslash_flops(volume) * max(iters, 1) * 2 * n_systems
     print(f"[solve] lattice={shape} solver={args.solver} iters={iters} "
-          f"rel_res={rel:.2e} time={dt:.2f}s "
+          f"max_rel_res={rel:.2e} time={dt:.2f}s "
           f"~{flops/dt/1e9:.2f} GFLOP/s (CPU, interpret-mode kernels)")
     return 0 if rel < 10 * args.tol else 1
 

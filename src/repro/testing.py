@@ -78,6 +78,27 @@ def full_field_passes(jaxpr, size: int):
             and any(getattr(v.aval, "size", 0) == size for v in e.outvars)]
 
 
+def while_body_psum_counts(jaxpr):
+    """Per-``while_loop`` count of ``psum`` collectives in its body.
+
+    Walks every ``while`` equation reachable from ``jaxpr`` (through
+    ``shard_map``/``pjit``/... via :func:`collect_eqns`) and counts the
+    psum-family equations inside each loop body — the per-iteration
+    collective cost of a distributed solver.  The fused-reduction
+    contract of DESIGN.md §7 is ``while_body_psum_counts(...) == [1]``
+    for the sharded pipelined CGNR: one stacked psum per CG iteration,
+    regardless of batch size.
+    """
+    counts = []
+    for eqn in collect_eqns(jaxpr):
+        if eqn.primitive.name != "while":
+            continue
+        body = eqn.params["body_jaxpr"]
+        counts.append(sum(1 for e in collect_eqns(body)
+                          if e.primitive.name.startswith("psum")))
+    return counts
+
+
 def maybe_hypothesis():
     """Return (given, settings, st) — real hypothesis or skipping stubs."""
     try:

@@ -1,0 +1,193 @@
+"""SolverPlan: validation, resolution, and the unified solve entry point.
+
+The sharded plans (mesh != None) are exercised on 8 fake devices in
+tests/test_distributed.py; here we pin down the single-device resolution
+table — that one ``plan.solve`` call reproduces each legacy path — and
+the declarative surface (field validation, layout/batch contracts, CLI
+mapping).
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LatticeShape, SolverPlan, cgnr, dslash,
+                        dslash_dagger, random_gauge, random_spinor,
+                        resolve_plan, solve_plan, solve_wilson_eo)
+from repro.core.eo import EOContext
+
+LAT = LatticeShape(4, 4, 4, 4)
+MASS = 0.1
+TOL = 1e-6
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    return random_gauge(ku, LAT), random_spinor(kb, LAT)
+
+
+def _rel_res(u, x, b):
+    r = dslash(u, x, MASS) - b
+    return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
+
+
+# ---------------------------------------------------------------------------
+# Declarative surface
+# ---------------------------------------------------------------------------
+
+
+def test_plan_field_validation():
+    with pytest.raises(ValueError, match="operator"):
+        SolverPlan(operator="odd-even")
+    with pytest.raises(ValueError, match="backend"):
+        SolverPlan(backend="cuda")
+    with pytest.raises(ValueError, match="solver"):
+        SolverPlan(solver="gmres")
+    with pytest.raises(ValueError, match="precision"):
+        SolverPlan(precision="double")
+    with pytest.raises(ValueError, match="pipecg"):
+        SolverPlan(solver="pipecg", precision="mixed")
+    with pytest.raises(ValueError, match="full"):
+        SolverPlan(operator="eo-schur", precision="low")
+    with pytest.raises(ValueError, match="nrhs"):
+        SolverPlan(nrhs=0)
+
+
+def test_plan_batch_and_layout_contracts(problem):
+    u, b = problem
+    with pytest.raises(ValueError, match="rank-7"):
+        solve_plan(SolverPlan(nrhs=2), u, b, MASS)  # single-RHS b
+    bb = jnp.stack([b, b, b])
+    with pytest.raises(ValueError, match="batch axis"):
+        solve_plan(SolverPlan(nrhs=2), u, bb, MASS)  # N mismatch
+    with pytest.raises(ValueError, match="natural"):
+        solve_plan(SolverPlan(operator="eo-schur"), u, b, MASS,
+                   layout="packed")
+    with pytest.raises(ValueError, match="layout"):
+        solve_plan(SolverPlan(), u, b, MASS, layout="interleaved")
+
+
+def test_resolve_builds_backend_specific_context(problem):
+    u, _ = problem
+    ref = resolve_plan(SolverPlan(operator="eo-schur"), u, MASS)
+    assert isinstance(ref, EOContext)
+    assert not ref.packed and ref.engine is None
+    pal = resolve_plan(SolverPlan(operator="eo-schur", backend="pallas"),
+                       u, MASS)
+    assert pal.packed and pal.engine is not None and len(pal.engine) == 2
+    with pytest.raises(ValueError, match="even-odd"):
+        resolve_plan(SolverPlan(operator="full"), u, MASS)
+
+
+# ---------------------------------------------------------------------------
+# The resolution table, single-device rows
+# ---------------------------------------------------------------------------
+
+
+def test_full_plan_matches_plain_cgnr(problem):
+    """operator='full' reproduces CGNR on D†D: same solution, packed
+    working layout notwithstanding."""
+    u, b = problem
+    x_ref, st_ref = cgnr(lambda v: dslash(u, v, MASS),
+                         lambda v: dslash_dagger(u, v, MASS), b,
+                         tol=TOL, maxiter=1000)
+    x, st = solve_plan(SolverPlan(operator="full"), u, b, MASS,
+                       tol=TOL, maxiter=1000)
+    assert bool(st.converged) and st.rhs_iterations is None
+    assert _rel_res(u, x, b) < 1e-5
+    assert float(jnp.max(jnp.abs(x - x_ref))) < 1e-4
+    # the packed real CG is the same Krylov iteration as the complex one
+    assert abs(int(st.iterations) - int(st_ref.iterations)) <= 1
+
+
+def test_eo_plan_is_the_forwarder_path(problem):
+    """solve_wilson_eo forwards to plan.solve: identical array out."""
+    u, b = problem
+    x_fwd, st_fwd = solve_wilson_eo(u, b, MASS, tol=TOL, maxiter=1000)
+    x_pl, st_pl = solve_plan(SolverPlan(operator="eo-schur"), u, b, MASS,
+                             tol=TOL, maxiter=1000)
+    np.testing.assert_array_equal(np.asarray(x_fwd), np.asarray(x_pl))
+    assert int(st_fwd.iterations) == int(st_pl.iterations)
+
+
+def test_pipelined_eo_plan_converges(problem):
+    """solver='pipecg' on the Schur system: same answer, pipelined loop."""
+    u, b = problem
+    x_cg, st_cg = solve_plan(SolverPlan(operator="eo-schur"), u, b, MASS,
+                             tol=TOL, maxiter=1000)
+    x_pi, st_pi = solve_plan(SolverPlan(operator="eo-schur",
+                                        solver="pipecg"),
+                             u, b, MASS, tol=TOL, maxiter=1000)
+    assert bool(st_pi.converged)
+    assert _rel_res(u, x_pi, b) < 1e-5
+    assert float(jnp.max(jnp.abs(x_pi - x_cg))) < 1e-4
+    # the three-term recurrence costs at most a few extra iterations
+    assert int(st_pi.iterations) <= int(st_cg.iterations) + 5
+
+
+def test_batched_full_plan_per_rhs_stats(problem):
+    """operator='full' + nrhs: masked batched CGNR with per-RHS stats —
+    the batch axis is a plan field, not an eo-schur special case."""
+    u, b0 = problem
+    easy = jnp.zeros_like(b0)  # zero RHS converges at iteration 0
+    b = jnp.stack([b0, easy])
+    x, st = solve_plan(SolverPlan(operator="full", nrhs=2), u, b, MASS,
+                       tol=TOL, maxiter=1000)
+    assert st.converged.shape == (2,) and bool(jnp.all(st.converged))
+    assert st.rhs_iterations.shape == (2,)
+    assert int(st.rhs_iterations[1]) == 0  # frozen from the start
+    assert int(st.rhs_iterations[0]) == int(st.iterations)
+    assert _rel_res(u, x[0], b0) < 1e-5
+    np.testing.assert_array_equal(np.asarray(x[1]),
+                                  np.zeros_like(np.asarray(x[1])))
+
+
+def test_mesh_plan_combinations_rejected(problem):
+    """Unsupported sharded combinations fail loudly, not wrongly."""
+    u, b = problem
+    # a fake mesh is enough: validation fires before any device work
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    with pytest.raises(NotImplementedError, match="single"):
+        solve_plan(SolverPlan(operator="eo-schur", precision="mixed",
+                              mesh=mesh), u, b, MASS)
+    with pytest.raises(NotImplementedError, match="eo-schur"):
+        solve_plan(SolverPlan(operator="full", nrhs=2, mesh=mesh),
+                   u, jnp.stack([b, b]), MASS)
+    # the whole sharded parity stack (bulk blocks AND halo corrections)
+    # hard-codes r=1 — on BOTH backends it must refuse, not answer wrongly
+    with pytest.raises(NotImplementedError, match="r=1"):
+        solve_plan(SolverPlan(operator="eo-schur", mesh=mesh, r=0.5),
+                   u, b, MASS)
+
+
+# ---------------------------------------------------------------------------
+# CLI mapping (launch/solve.py is plan-driven)
+# ---------------------------------------------------------------------------
+
+
+def _args(**kw):
+    base = dict(solver="mpcg", parity=None, backend="reference",
+                nrhs=None, mesh="none")
+    base.update(kw)
+    return argparse.Namespace(**base)
+
+
+def test_cli_builds_plans_from_legacy_solver_names():
+    from repro.launch.solve import build_plan
+    p = build_plan(_args(solver="cgnr_eo"))
+    assert (p.operator, p.solver, p.precision) == ("eo-schur", "cgnr",
+                                                   "single")
+    p = build_plan(_args(solver="mpcg"))
+    assert (p.operator, p.precision) == ("full", "mixed")
+    p = build_plan(_args(solver="cg-pallas"))
+    assert (p.operator, p.backend) == ("full", "pallas")
+    p = build_plan(_args(solver="pipecg", parity="eo", backend="pallas",
+                         nrhs=8))
+    assert (p.operator, p.backend, p.solver, p.nrhs) == (
+        "eo-schur", "pallas", "pipecg", 8)
