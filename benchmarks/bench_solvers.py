@@ -27,6 +27,16 @@ The ``eo_sharded`` section records the plan-driven sharded batched EO
 Schur solve (8 fake host devices, pipelined CGNR with its single fused
 psum per iteration) — its trip count is guarded too, pinning the
 distributed fast path's Krylov math to the committed baseline.
+
+The ``eo_smoke_tm`` section runs the SAME smoke problem through the
+operator registry's second family (twisted-mass, site term
+(m+4) + i·mu·gamma5) on both backends — guarding that the site-term
+epilogue hook keeps the transport stack's Krylov math stable for a
+non-Wilson operator.
+
+Every timed entry is tagged with its ``backend`` (reference/pallas) and
+``interpret`` mode, and reports the warm steady-state call (``us_warm``)
+separately from the first, compile-inclusive call (``us_first``).
 """
 
 from __future__ import annotations
@@ -44,25 +54,35 @@ SMOKE_SEED = 7
 SMOKE_MASS = 0.1
 SMOKE_TOL = 1e-6
 
+# twisted-mass smoke row: same problem, second operator family (the
+# registry's proof that the transport stack is operator-agnostic)
+SMOKE_TM_MU = 0.25
+
 # RHS-batch sizes for the gauge-amortization sweep (ISSUE 3 acceptance:
 # sites·RHS/s must grow monotonically from N=1 to N>=8 on the Pallas path).
 BATCH_SIZES = (1, 4, 8, 16)
 
 
 def _timed(fn):
-    """((result, ...), wall-clock µs) of fn() after a warm-up/compile call.
+    """((result, ...), first-call µs, warm µs) of fn().
 
-    ``fn`` must return a tuple whose first element is the jax output to
-    drain (block_until_ready) — the shared timing protocol of every solve
+    The FIRST call includes compilation (trace + lower + compile); the
+    second call hits the jit cache and measures steady-state execution.
+    Both are reported so the JSON separates compile cost from the warm
+    throughput the paper's §5 tables are about.  ``fn`` must return a
+    tuple whose first element is the jax output to drain
+    (block_until_ready) — the shared timing protocol of every solve
     section below.
     """
     import jax
 
-    jax.block_until_ready(fn()[0])  # warm-up/compile, fully drained
+    t0 = time.time()
+    jax.block_until_ready(fn()[0])  # compile-inclusive first call
+    us_first = (time.time() - t0) * 1e6
     t0 = time.time()
     out = fn()
     jax.block_until_ready(out[0])
-    return out, (time.time() - t0) * 1e6
+    return out, us_first, (time.time() - t0) * 1e6
 
 _SCRIPT = r"""
 import os
@@ -118,12 +138,12 @@ def _run_eo_comparison() -> list[tuple[str, float, str]]:
         r = dslash(u, x, mass) - b
         return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
 
-    (x_f, st_f), us_f = _timed(lambda: cgnr(
+    (x_f, st_f), _, us_f = _timed(lambda: cgnr(
         lambda v: dslash(u, v, mass), lambda v: dslash_dagger(u, v, mass),
         b, tol=tol, maxiter=1000))
-    (x_e, st_e), us_e = _timed(lambda: solve_wilson_eo(
+    (x_e, st_e), _, us_e = _timed(lambda: solve_wilson_eo(
         u, b, mass, tol=tol, maxiter=1000))
-    (x_m, st_m), us_m = _timed(lambda: solve_wilson_eo_mp(
+    (x_m, st_m), _, us_m = _timed(lambda: solve_wilson_eo_mp(
         u, b, mass, tol=tol, inner_maxiter=100, max_outer=40))
 
     it_f, it_e = int(st_f.iterations), int(st_e.iterations)
@@ -161,9 +181,9 @@ def _run_eo_smoke() -> dict:
         r = dslash(u, x, SMOKE_MASS) - b
         return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
 
-    (x_ref, st_ref), us_ref = _timed(lambda: solve_wilson_eo(
+    (x_ref, st_ref), us_ref_first, us_ref = _timed(lambda: solve_wilson_eo(
         u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
-    (x_pal, st_pal), us_pal = _timed(lambda: solve_wilson_eo(
+    (x_pal, st_pal), us_pal_first, us_pal = _timed(lambda: solve_wilson_eo(
         u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
         use_pallas=True, interpret=True))
 
@@ -180,6 +200,69 @@ def _run_eo_smoke() -> dict:
         "sites_per_s_ref": sites_per_s(st_ref, us_ref),
         "sites_per_s_pallas": sites_per_s(st_pal, us_pal),
         "pallas_interpret_mode": True,
+        # per-backend tagged entries: warm steady-state timing separated
+        # from the first (compile-inclusive) call
+        "entries": [
+            {"name": "cgnr_eo", "backend": "reference", "interpret": None,
+             "iters": int(st_ref.iterations), "us_first": us_ref_first,
+             "us_warm": us_ref},
+            {"name": "cgnr_eo_pallas", "backend": "pallas",
+             "interpret": True, "iters": int(st_pal.iterations),
+             "us_first": us_pal_first, "us_warm": us_pal},
+        ],
+    }
+
+
+def _run_eo_smoke_tm() -> dict:
+    """Twisted-mass EO Schur smoke: the registry's second operator family.
+
+    Same lattice/seed/tolerance as ``eo_smoke``, site term
+    (m+4) + i·mu·gamma5 — the iteration counts are the guarded signal
+    that the operator-registry indirection (site-term epilogues folded
+    into the SAME four hop-kernel launches) keeps the Krylov math stable
+    on both backends.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LatticeShape, SolverPlan, random_gauge,
+                            random_spinor, solve_plan)
+    from repro.core.operators import dslash_g
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+
+    def rel(x):
+        r = dslash_g(u, x, SMOKE_MASS, twist=SMOKE_TM_MU) - b
+        return float(jnp.linalg.norm(r.ravel()) / jnp.linalg.norm(b.ravel()))
+
+    def plan(backend):
+        return SolverPlan(operator="eo-schur",
+                          operator_family="twisted-mass", mu=SMOKE_TM_MU,
+                          backend=backend,
+                          interpret=True if backend == "pallas" else None)
+
+    (x_ref, st_ref), us_ref_first, us_ref = _timed(lambda: solve_plan(
+        plan("reference"), u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
+    (x_pal, st_pal), us_pal_first, us_pal = _timed(lambda: solve_plan(
+        plan("pallas"), u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
+
+    return {
+        "lattice": str(lat), "mass": SMOKE_MASS, "mu": SMOKE_TM_MU,
+        "tol": SMOKE_TOL, "seed": SMOKE_SEED, "operator": "twisted-mass",
+        "cgnr_eo_tm_iters": int(st_ref.iterations),
+        "cgnr_eo_tm_pallas_iters": int(st_pal.iterations),
+        "rel_res_ref": rel(x_ref), "rel_res_pallas": rel(x_pal),
+        "pallas_interpret_mode": True,
+        "entries": [
+            {"name": "cgnr_eo_tm", "backend": "reference",
+             "interpret": None, "iters": int(st_ref.iterations),
+             "us_first": us_ref_first, "us_warm": us_ref},
+            {"name": "cgnr_eo_tm_pallas", "backend": "pallas",
+             "interpret": True, "iters": int(st_pal.iterations),
+             "us_first": us_pal_first, "us_warm": us_pal},
+        ],
     }
 
 
@@ -211,7 +294,7 @@ def _run_batch_sweep() -> dict:
     entries = []
     for n in BATCH_SIZES:
         b_n = b_all[:n]
-        (x, st), us = _timed(lambda b=b_n: solve_wilson_eo_batched(
+        (x, st), us_first, us = _timed(lambda b=b_n: solve_wilson_eo_batched(
             u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
             use_pallas=True, interpret=True))
         res = jax.vmap(lambda xx, bb: dslash(u, xx, SMOKE_MASS) - bb)(x, b_n)
@@ -220,13 +303,15 @@ def _run_batch_sweep() -> dict:
             / jnp.linalg.norm(b_n.reshape(n, -1), axis=1)))
         iters = int(st.iterations)
         entries.append({
-            "n_rhs": n, "iters": iters, "us": us,
+            "n_rhs": n, "iters": iters, "us_warm": us, "us_first": us_first,
+            "backend": "pallas", "interpret": True,
             "max_rel_res": rel, "all_converged": bool(jnp.all(st.converged)),
             "sites_rhs_per_s": lat.volume * n * iters / max(us / 1e6, 1e-12),
         })
     return {
         "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
         "seed": SMOKE_SEED, "pallas_interpret_mode": True,
+        "backend": "pallas", "interpret": True,
         "entries": entries,
     }
 
@@ -250,8 +335,10 @@ b = jnp.stack([random_spinor(jax.random.fold_in(kb, i), lat)
                for i in range(n)])
 p = plan_mod.SolverPlan(operator="eo-schur", backend="reference",
                         solver="pipecg", nrhs=n, mesh=mesh)
+t0 = time.time()
 x, st = plan_mod.solve(p, u, b, mass, tol=tol, maxiter=500)
-jax.block_until_ready(x)             # warm-up/compile drained
+jax.block_until_ready(x)             # compile-inclusive first call
+us_first = (time.time() - t0) * 1e6
 t0 = time.time()
 x, st = plan_mod.solve(p, u, b, mass, tol=tol, maxiter=500)
 jax.block_until_ready(x)
@@ -261,10 +348,11 @@ rel = float(jnp.max(jnp.linalg.norm(res.reshape(n, -1), axis=1)
                     / jnp.linalg.norm(b.reshape(n, -1), axis=1)))
 out = {"lattice": str(lat), "mass": mass, "tol": tol, "seed": seed,
        "n_rhs": n, "mesh": "2x2x2", "solver": "pipecg",
+       "backend": "reference", "interpret": None,
        "iters": int(st.iterations),
        "rhs_iters": [int(v) for v in st.rhs_iterations],
        "max_rel_res": rel, "all_converged": bool(jnp.all(st.converged)),
-       "us": us,
+       "us_warm": us, "us_first": us_first,
        "sites_rhs_per_s": lat.volume * n * int(st.iterations)
                           / max(us / 1e6, 1e-12)}
 print("RESULT" + json.dumps(out))
@@ -329,6 +417,7 @@ def _fused_engine_shape() -> dict:
 
     shapes = sorted((shape_of(e) for e in calls), reverse=True)
     out = {"pallas_calls_per_iteration": len(calls),
+           "backend": "pallas", "interpret": True,
            "naive_traffic": "7R+3W",
            "kernel_traffic": "+".join(f"{r}R{w}W" for r, w in shapes)}
     if len(shapes) == 2:
@@ -370,10 +459,19 @@ def run() -> list[tuple[str, float, str]]:
     except Exception as e:
         rows.append(("eo_smoke", -1.0, f"FAILED:{e!r:.200}"))
     try:
+        tm = _run_eo_smoke_tm()
+        report["eo_smoke_tm"] = tm
+        for e in tm["entries"]:
+            rows.append((e["name"] + "_4x4x4x4", e["us_warm"],
+                         f"iters={e['iters']};backend={e['backend']};"
+                         f"us_first={e['us_first']:.0f}"))
+    except Exception as e:
+        rows.append(("eo_smoke_tm", -1.0, f"FAILED:{e!r:.200}"))
+    try:
         sweep = _run_batch_sweep()
         report["batch_sweep"] = sweep
         for e in sweep["entries"]:
-            rows.append((f"cgnr_eo_batched_n{e['n_rhs']}", e["us"],
+            rows.append((f"cgnr_eo_batched_n{e['n_rhs']}", e["us_warm"],
                          f"iters={e['iters']};"
                          f"max_rel_res={e['max_rel_res']:.2e};"
                          f"sites_rhs_per_s={e['sites_rhs_per_s']:.0f}"))
@@ -382,7 +480,7 @@ def run() -> list[tuple[str, float, str]]:
     try:
         sh = _run_eo_sharded()
         report["eo_sharded"] = sh
-        rows.append((f"cgnr_eo_sharded_n{sh['n_rhs']}", sh["us"],
+        rows.append((f"cgnr_eo_sharded_n{sh['n_rhs']}", sh["us_warm"],
                      f"iters={sh['iters']};mesh={sh['mesh']};"
                      f"max_rel_res={sh['max_rel_res']:.2e};"
                      f"sites_rhs_per_s={sh['sites_rhs_per_s']:.0f}"))

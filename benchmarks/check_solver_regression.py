@@ -1,14 +1,23 @@
 #!/usr/bin/env python
-"""CI guard: the even-odd Schur CGNR must not regress on the smoke lattice.
+"""CI guard: solver iteration counts must not regress on the smoke lattice.
 
-Compares the ``eo_smoke`` entry of a freshly generated ``BENCH_solvers.json``
-against the committed ``benchmarks/BENCH_solvers_baseline.json``, plus the
-``batch_sweep`` per-N iteration counts of the multi-RHS batched solve (the
-masked batched loop must converge in as few iterations as the committed
-run for every batch size N).  Iteration count is an ALGORITHMIC property
-(deterministic seed, fixed tolerance), so it is the cheap, noise-free
-regression signal — wall-clock on shared CI runners is not.  A small slack
-absorbs cross-platform float reduction differences.
+Compares a freshly generated ``BENCH_solvers.json`` against the committed
+``benchmarks/BENCH_solvers_baseline.json``:
+
+* ``eo_smoke``    — single-RHS Schur CGNR, reference + Pallas backends;
+* ``eo_smoke_tm`` — the same solve through the operator registry's
+  twisted-mass family (site-term epilogues folded into the same kernels);
+* ``batch_sweep`` — per-N iteration counts of the multi-RHS batched solve;
+* ``eo_sharded``  — the 8-way sharded pipelined Schur solve's trip count.
+
+Iteration count is an ALGORITHMIC property (deterministic seed, fixed
+tolerance), so it is the cheap, noise-free regression signal — wall-clock
+on shared CI runners is not.  A small slack absorbs cross-platform float
+reduction differences.
+
+EVERY guarded entry is checked and the full expected-vs-actual table is
+printed — a failure never hides the state of the other entries behind the
+first mismatch.
 
 Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
         check_solver_regression.py --generate [baseline.json]
@@ -29,79 +38,120 @@ import sys
 
 SLACK_ITERS = 2  # float-reduction jitter across platforms, not a budget
 
-GUARDED_KEYS = ("cgnr_eo_iters", "cgnr_eo_pallas_iters")
+# section -> guarded iteration-count keys inside it
+GUARDED_SECTIONS = {
+    "eo_smoke": ("cgnr_eo_iters", "cgnr_eo_pallas_iters"),
+    "eo_smoke_tm": ("cgnr_eo_tm_iters", "cgnr_eo_tm_pallas_iters"),
+}
+
+# section -> extra problem keys beyond PROBLEM_KEYS that must match
+EXTRA_PROBLEM_KEYS = {"eo_smoke_tm": ("mu", "operator")}
 
 # the guarded solve is only comparable if its parameters match the baseline
 PROBLEM_KEYS = ("lattice", "mass", "tol", "seed")
 
 
-def _check_batch_sweep(cur: dict, base: dict) -> bool:
-    """Guard the per-N iteration counts of the multi-RHS batched smoke.
+class _Table:
+    """Collects every comparison; prints one expected-vs-actual table."""
 
-    The batched loop's trip count is the slowest RHS's iteration count —
-    deterministic for the committed seed, so regressions in the masked
-    batched solver (or the batched kernels feeding it) show up here.
-    Returns True on failure.
-    """
-    cur_bs, base_bs = cur.get("batch_sweep"), base.get("batch_sweep")
+    def __init__(self):
+        self.rows: list[tuple[str, str, object, object, object, str]] = []
+
+    def add(self, section, metric, baseline, actual, limit, verdict):
+        self.rows.append((section, metric, baseline, actual, limit, verdict))
+
+    def mismatch(self, section, metric, baseline, actual):
+        self.add(section, metric, baseline, actual, "-", "MISMATCH")
+
+    def missing(self, section, metric, baseline):
+        self.add(section, metric, baseline, "-", "-", "MISSING")
+
+    def iters(self, section, metric, baseline, actual):
+        limit = int(baseline) + SLACK_ITERS
+        verdict = "OK" if int(actual) <= limit else "REGRESSION"
+        self.add(section, metric, int(baseline), int(actual), limit, verdict)
+
+    @property
+    def failed(self) -> bool:
+        return any(r[-1] != "OK" for r in self.rows)
+
+    def print(self):
+        header = ("section", "metric", "baseline", "actual", "limit",
+                  "verdict")
+        rows = [header] + [tuple(str(v) for v in r) for r in self.rows]
+        widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+        for i, row in enumerate(rows):
+            print("  " + "  ".join(v.ljust(w) for v, w in zip(row, widths)))
+            if i == 0:
+                print("  " + "  ".join("-" * w for w in widths))
+
+
+def _problem_match(table, name, cur, base, extra=()) -> bool:
+    """Record (and fail on) any problem-parameter drift; True if usable."""
+    ok = True
+    for key in PROBLEM_KEYS + tuple(extra):
+        if cur.get(key) != base.get(key):
+            table.mismatch(name, key, base.get(key), cur.get(key))
+            ok = False
+    return ok
+
+
+def _check_section(table, name, cur, base):
+    """Guard the flat iteration-count keys of one smoke section."""
+    keys = GUARDED_SECTIONS[name]
+    base_s = base.get(name)
+    if not base_s:
+        return  # baseline predates this section: nothing to guard
+    cur_s = cur.get(name)
+    if not cur_s:
+        table.missing(name, "(section)", "present")
+        return
+    if not _problem_match(table, name, cur_s, base_s,
+                          extra=EXTRA_PROBLEM_KEYS.get(name, ())):
+        return
+    for key in keys:
+        got, ref = cur_s.get(key), base_s.get(key)
+        if got is None or ref is None:
+            table.missing(name, key, ref)
+            continue
+        table.iters(name, key, ref, got)
+
+
+def _check_batch_sweep(table, cur, base):
+    """Guard the per-N iteration counts of the multi-RHS batched smoke."""
+    base_bs = base.get("batch_sweep")
     if not base_bs:
-        return False  # baseline predates the batched path: nothing to guard
+        return
+    cur_bs = cur.get("batch_sweep")
     if not cur_bs:
-        print("solver-regression guard: baseline has 'batch_sweep' but the "
-              "current BENCH_solvers.json does not")
-        return True
-    for key in PROBLEM_KEYS:
-        if cur_bs.get(key) != base_bs.get(key):
-            print(f"solver-regression guard: batch_sweep '{key}' mismatch "
-                  f"({cur_bs.get(key)} vs baseline {base_bs.get(key)}) — "
-                  "regenerate benchmarks/BENCH_solvers_baseline.json")
-            return True
+        table.missing("batch_sweep", "(section)", "present")
+        return
+    if not _problem_match(table, "batch_sweep", cur_bs, base_bs):
+        return
     cur_by_n = {e.get("n_rhs"): e for e in cur_bs.get("entries", [])}
-    failed = False
     for ref in base_bs.get("entries", []):
         n = ref.get("n_rhs")
         got = cur_by_n.get(n)
         if got is None:
-            print(f"solver-regression guard: batch_sweep entry n_rhs={n} "
-                  "missing from current run")
-            failed = True
+            table.missing("batch_sweep", f"n_rhs={n} iters", ref.get("iters"))
             continue
-        limit = int(ref["iters"]) + SLACK_ITERS
-        verdict = "OK" if int(got["iters"]) <= limit else "REGRESSION"
-        print(f"  batched n_rhs={n}: {got['iters']} iters "
-              f"(baseline {ref['iters']}, limit {limit}) {verdict}")
-        failed = failed or int(got["iters"]) > limit
-    return failed
+        table.iters("batch_sweep", f"n_rhs={n} iters", ref["iters"],
+                    got["iters"])
 
 
-def _check_eo_sharded(cur: dict, base: dict) -> bool:
-    """Guard the sharded batched EO Schur solve's iteration count.
-
-    The fused one-psum-per-iteration reduction and the parity halo
-    corrections must not change the Krylov math: the 8-way sharded
-    pipelined CGNR's trip count is deterministic for the committed seed
-    and compared directly (same slack as the single-device entries).
-    Returns True on failure.
-    """
-    cur_s, base_s = cur.get("eo_sharded"), base.get("eo_sharded")
+def _check_eo_sharded(table, cur, base):
+    """Guard the sharded batched EO Schur solve's iteration count."""
+    base_s = base.get("eo_sharded")
     if not base_s:
-        return False  # baseline predates the sharded path: nothing to guard
+        return
+    cur_s = cur.get("eo_sharded")
     if not cur_s:
-        print("solver-regression guard: baseline has 'eo_sharded' but the "
-              "current BENCH_solvers.json does not")
-        return True
-    for key in PROBLEM_KEYS + ("n_rhs", "mesh", "solver"):
-        if cur_s.get(key) != base_s.get(key):
-            print(f"solver-regression guard: eo_sharded '{key}' mismatch "
-                  f"({cur_s.get(key)} vs baseline {base_s.get(key)}) — "
-                  "regenerate benchmarks/BENCH_solvers_baseline.json")
-            return True
-    limit = int(base_s["iters"]) + SLACK_ITERS
-    verdict = "OK" if int(cur_s["iters"]) <= limit else "REGRESSION"
-    print(f"  eo_sharded n_rhs={cur_s['n_rhs']} mesh={cur_s['mesh']}: "
-          f"{cur_s['iters']} iters (baseline {base_s['iters']}, "
-          f"limit {limit}) {verdict}")
-    return int(cur_s["iters"]) > limit
+        table.missing("eo_sharded", "(section)", "present")
+        return
+    if not _problem_match(table, "eo_sharded", cur_s, base_s,
+                          extra=("n_rhs", "mesh", "solver")):
+        return
+    table.iters("eo_sharded", "iters", base_s["iters"], cur_s["iters"])
 
 
 def main(argv: list[str]) -> int:
@@ -114,6 +164,7 @@ def main(argv: list[str]) -> int:
             os.path.abspath(__file__))))
         from benchmarks import bench_solvers
         cur = {"eo_smoke": bench_solvers._run_eo_smoke(),
+               "eo_smoke_tm": bench_solvers._run_eo_smoke_tm(),
                "batch_sweep": bench_solvers._run_batch_sweep(),
                "eo_sharded": bench_solvers._run_eo_sharded()}
     else:
@@ -134,37 +185,21 @@ def main(argv: list[str]) -> int:
         print(f"solver-regression guard: cannot load {base_path}: {e}")
         return 1
 
-    cur_eo = cur.get("eo_smoke")
-    base_eo = base.get("eo_smoke")
-    if not cur_eo or not base_eo:
-        print("solver-regression guard: missing 'eo_smoke' section "
-              f"(current: {bool(cur_eo)}, baseline: {bool(base_eo)})")
+    table = _Table()
+    for name in GUARDED_SECTIONS:
+        _check_section(table, name, cur, base)
+    _check_batch_sweep(table, cur, base)
+    _check_eo_sharded(table, cur, base)
+    if not table.rows:
+        print("solver-regression guard: nothing to compare (baseline has "
+              "no guarded sections)")
         return 1
-    for key in PROBLEM_KEYS:
-        if cur_eo.get(key) != base_eo.get(key):
-            print(f"solver-regression guard: '{key}' mismatch "
-                  f"({cur_eo.get(key)} vs baseline {base_eo.get(key)}) — "
-                  "regenerate benchmarks/BENCH_solvers_baseline.json")
-            return 1
-
-    failed = False
-    for key in GUARDED_KEYS:
-        got, ref = cur_eo.get(key), base_eo.get(key)
-        if got is None or ref is None:
-            print(f"solver-regression guard: '{key}' missing "
-                  f"(current: {got}, baseline: {ref})")
-            failed = True
-            continue
-        limit = int(ref) + SLACK_ITERS
-        verdict = "OK" if int(got) <= limit else "REGRESSION"
-        print(f"  {key}: {got} (baseline {ref}, limit {limit}) {verdict}")
-        failed = failed or int(got) > limit
-    failed = _check_batch_sweep(cur, base) or failed
-    failed = _check_eo_sharded(cur, base) or failed
-    if failed:
-        print("solver-regression guard: FAILED — a guarded iteration count "
-              f"regressed on the {base_eo['lattice']} smoke lattice (see "
-              "the REGRESSION line(s) above)")
+    table.print()
+    if table.failed:
+        print("solver-regression guard: FAILED — see the non-OK rows above "
+              "(MISMATCH = regenerate benchmarks/BENCH_solvers_baseline."
+              "json, MISSING = a guarded entry disappeared, REGRESSION = "
+              "an iteration count exceeded baseline + slack)")
         return 1
     print("solver-regression guard: passed")
     return 0

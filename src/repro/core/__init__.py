@@ -4,6 +4,8 @@ the Dirac-Wilson operator, adapted from FPGA dataflow to TPU (see DESIGN.md).
 Public surface:
   lattice   — geometry, SU(3) fields, layout packing
   wilson    — the Dirac-Wilson operator (natural + packed layouts)
+  operators — the operator registry: site-local terms (wilson,
+              twisted-mass) decoupled from the shared hop transport
   solvers   — cg / cgnr / cgnr_eo / mpcg / mpcg_eo / pipecg / bicgstab
   eo        — even-odd (Schur) blocks + eo_context; legacy solve forwarders
   plan      — SolverPlan: THE solve entry point ({operator, backend, batch,
@@ -21,6 +23,11 @@ from repro.core.lattice import (LatticeShape, complex_to_real_pair,
                                 random_spinor, real_pair_to_complex,
                                 split_eo, split_eo_gauge, unit_gauge,
                                 unpack_gauge, unpack_spinor)
+from repro.core.operators import (LatticeOperator, SiteTerm, dslash_g,
+                                  dslash_dagger_g, get_operator,
+                                  normal_op_g, operator_names,
+                                  register_operator, schur_dagger_g,
+                                  schur_normal_op_g, schur_op_g)
 from repro.core.precision import PrecisionPolicy
 from repro.core.solvers import (SolveStats, bicgstab, cg, cg_trace, cgnr,
                                 cgnr_eo, mpcg, mpcg_eo, pipecg)

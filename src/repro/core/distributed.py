@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.operators import apply_igamma5_packed, schur_launch_coeffs
 from repro.core.wilson import (apply_gamma5_packed, dslash_packed,
                                hop_term_packed)
 
@@ -54,8 +55,9 @@ def _add_at(arr: jax.Array, axis: int, idx: int, delta: jax.Array):
 
 def dslash_halo(up: jax.Array, pp: jax.Array, mass,
                 sharded: Mapping[int, tuple[str, int]],
-                r: float = 1.0, use_pallas: bool = False) -> jax.Array:
-    """Dirac-Wilson dslash on a LOCAL shard; call inside ``shard_map``.
+                r: float = 1.0, use_pallas: bool = False,
+                twist: float = 0.0) -> jax.Array:
+    """Full-lattice dslash on a LOCAL shard; call inside ``shard_map``.
 
     Args:
       up:      local (4, Tl, Zl, Yl, 18, X) gauge shard.
@@ -63,13 +65,19 @@ def dslash_halo(up: jax.Array, pp: jax.Array, mass,
       sharded: {lattice_axis (0=T,1=Z,2=Y): (mesh_axis_name, axis_size)}.
       use_pallas: run the bulk stencil through the Pallas plane-streaming
         kernel (the TPU deployment path; r=1 only) instead of the jnp op.
+      twist: operator-registry site-term twist (0 = Wilson).  Site-LOCAL
+        by construction, so it rides the bulk stencil and the halo
+        corrections (hop-only) are untouched — the registry's transport
+        contract.
     """
     # 1) bulk: local periodic stencil (independent of any communication)
     if use_pallas:
         from repro.kernels.wilson_dslash.kernel import dslash_pallas
-        out = dslash_pallas(up, pp, mass)
+        out = dslash_pallas(up, pp, mass, twist=twist)
     else:
         out = dslash_packed(up, pp, mass, r=r)
+        if twist != 0.0:
+            out = (out + twist * apply_igamma5_packed(pp)).astype(out.dtype)
 
     # 2) halo exchange + boundary-plane corrections per sharded direction
     for mu, (ax, n) in sorted(sharded.items()):
@@ -99,17 +107,20 @@ def dslash_halo(up: jax.Array, pp: jax.Array, mass,
 
 
 def dslash_dagger_halo(up, pp, mass, sharded, r: float = 1.0,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False, twist: float = 0.0):
+    """D^dag = gamma5 D(-twist) gamma5 on a local shard."""
     return apply_gamma5_packed(
         dslash_halo(up, apply_gamma5_packed(pp), mass, sharded, r=r,
-                    use_pallas=use_pallas))
+                    use_pallas=use_pallas, twist=-twist))
 
 
 def normal_op_halo(up, pp, mass, sharded, r: float = 1.0,
-                   use_pallas: bool = False):
+                   use_pallas: bool = False, twist: float = 0.0):
     return dslash_dagger_halo(up, dslash_halo(up, pp, mass, sharded, r=r,
-                                              use_pallas=use_pallas),
-                              mass, sharded, r=r, use_pallas=use_pallas)
+                                              use_pallas=use_pallas,
+                                              twist=twist),
+                              mass, sharded, r=r, use_pallas=use_pallas,
+                              twist=twist)
 
 
 # ---------------------------------------------------------------------------
@@ -157,18 +168,21 @@ def parity_hop_halo(which: str, u_e: jax.Array, u_o: jax.Array,
                     use_pallas: bool = False, gamma5_in: bool = False,
                     gamma5_out: bool = False, psi_acc: jax.Array | None = None,
                     acc_coeff: float = 0.0, hop_coeff: float = 1.0,
+                    acc_twist: float = 0.0, hop_twist: float = 0.0,
                     bz: int | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Parity hop block on a LOCAL shard; call inside ``shard_map``.
 
-    Computes ``acc_coeff * psi_acc + hop_coeff * γ5out Hop(γ5in ψ)`` where
-    Hop is D_eo (``which="eo"``: odd ψ in, even out) or D_oe: the bulk via
-    the local-block kernel entry (:func:`repro.kernels.wilson_dslash.ops.
-    hop_block`, Pallas or reference), the boundary planes of every sharded
-    direction corrected with exchanged halos.  γ5 factors are applied to
-    the correction PLANES only (plane-sized work), mirroring the kernels'
-    trace-time γ5 folding — no standalone full-field γ5 pass exists on
-    this path.
+    Computes ``(acc_coeff + acc_twist·iγ5) psi_acc + (hop_coeff +
+    hop_twist·iγ5) γ5out Hop(γ5in ψ)`` where Hop is D_eo (``which="eo"``:
+    odd ψ in, even out) or D_oe: the bulk via the local-block kernel entry
+    (:func:`repro.kernels.wilson_dslash.ops.hop_block`, Pallas or
+    reference), the boundary planes of every sharded direction corrected
+    with exchanged halos.  γ5 factors — and the operator registry's
+    site-term twists — are applied to the correction PLANES only
+    (plane-sized work), mirroring the kernels' trace-time folding: no
+    standalone full-field γ5/twist pass exists on this path for any
+    operator family.
     """
     # local import: repro.core is imported by the kernels package, so a
     # module-level import here would be circular.
@@ -177,6 +191,7 @@ def parity_hop_halo(which: str, u_e: jax.Array, u_o: jax.Array,
     out = wops.hop_block(u_e, u_o, pp, which=which, gamma5_in=gamma5_in,
                          gamma5_out=gamma5_out, psi_acc=psi_acc,
                          acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+                         acc_twist=acc_twist, hop_twist=hop_twist,
                          use_pallas=use_pallas, bz=bz, interpret=interpret)
     u_out, u_nbr = (u_e, u_o) if which == "eo" else (u_o, u_e)
     batch = pp.ndim - 5  # 0 or 1 leading RHS-batch axes
@@ -208,40 +223,67 @@ def parity_hop_halo(which: str, u_e: jax.Array, u_o: jax.Array,
         delta_b, delta_f = right_b - wrong_b, right_f - wrong_f
         if gamma5_out:
             delta_b, delta_f = _g5(delta_b), _g5(delta_f)
-        out = _add_at(out, pax, 0, hc * delta_b)
-        out = _add_at(out, pax, -1, hc * delta_f)
+        if hop_twist != 0.0:
+            # the same (hop_coeff + hop_twist·iγ5) epilogue the bulk kernel
+            # folded, applied plane-sized to the corrections
+            ht = jnp.asarray(hop_twist, jnp.float32)
+            delta_b = hc * delta_b + ht * apply_igamma5_packed(delta_b)
+            delta_f = hc * delta_f + ht * apply_igamma5_packed(delta_f)
+        else:
+            delta_b, delta_f = hc * delta_b, hc * delta_f
+        out = _add_at(out, pax, 0, delta_b)
+        out = _add_at(out, pax, -1, delta_f)
     return out
 
 
 def schur_op_halo(u_e, u_o, pp_e, mass, sharded, *, use_pallas: bool = False,
-                  dagger: bool = False, bz: int | None = None,
-                  interpret: bool | None = None):
-    """Sharded Schur complement D_hat ψ = m ψ - D_eo D_oe ψ / m (m = mass+4).
+                  twist: float = 0.0, dagger: bool = False,
+                  bz: int | None = None, interpret: bool | None = None):
+    """Sharded Schur complement D_hat ψ = S ψ - D_eo S^-1 D_oe ψ with the
+    registry site term S = (mass+4) + i·twist·γ5 (Wilson: twist = 0).
 
-    Two local hop blocks with the γ5 (``dagger``) and the mass-term axpy
-    folded exactly as in the single-device kernel path — the only extra
-    work versus one device is the boundary-plane corrections and their
-    ppermutes, which XLA overlaps with the bulk stencils.
+    Two local hop blocks with the γ5 (``dagger``), the site-term axpy and
+    the twist folded exactly as in the single-device kernel path — the
+    only extra work versus one device is the boundary-plane corrections
+    and their ppermutes, which XLA overlaps with the bulk stencils.
     """
     m = float(mass) + 4.0
+    if twist == 0.0:
+        tmp_o = parity_hop_halo("oe", u_e, u_o, pp_e, sharded,
+                                use_pallas=use_pallas, gamma5_in=dagger,
+                                bz=bz, interpret=interpret)
+        return parity_hop_halo("eo", u_e, u_o, tmp_o, sharded,
+                               use_pallas=use_pallas, gamma5_out=dagger,
+                               psi_acc=pp_e, acc_coeff=m,
+                               hop_coeff=-1.0 / m,
+                               bz=bz, interpret=interpret)
+    # twisted: the same two-launch split as the single-device kernels —
+    # the sign algebra has ONE home, operators.schur_launch_coeffs
+    # (S(∓tw)^-1 into the first block's epilogue, S(±tw) into the
+    # second block's accumulator; dagger = γ5 D_hat(-tw) γ5)
+    h1c, h1t, acc, acct = schur_launch_coeffs(m, twist, dagger)
     tmp_o = parity_hop_halo("oe", u_e, u_o, pp_e, sharded,
                             use_pallas=use_pallas, gamma5_in=dagger,
+                            hop_coeff=h1c, hop_twist=h1t,
                             bz=bz, interpret=interpret)
     return parity_hop_halo("eo", u_e, u_o, tmp_o, sharded,
                            use_pallas=use_pallas, gamma5_out=dagger,
-                           psi_acc=pp_e, acc_coeff=m, hop_coeff=-1.0 / m,
-                           bz=bz, interpret=interpret)
+                           psi_acc=pp_e, acc_coeff=acc, acc_twist=acct,
+                           hop_coeff=-1.0, bz=bz, interpret=interpret)
 
 
 def schur_normal_op_halo(u_e, u_o, pp_e, mass, sharded, *,
-                         use_pallas: bool = False, bz: int | None = None,
+                         use_pallas: bool = False, twist: float = 0.0,
+                         bz: int | None = None,
                          interpret: bool | None = None):
     """A_hat = D_hat^dag D_hat on local shards — four hop blocks, zero
-    standalone full-field γ5/axpy passes, halo corrections per block."""
+    standalone full-field γ5/axpy/twist passes, halo corrections per
+    block, for every registered operator family."""
     w = schur_op_halo(u_e, u_o, pp_e, mass, sharded, use_pallas=use_pallas,
-                      bz=bz, interpret=interpret)
+                      twist=twist, bz=bz, interpret=interpret)
     return schur_op_halo(u_e, u_o, w, mass, sharded, use_pallas=use_pallas,
-                         dagger=True, bz=bz, interpret=interpret)
+                         twist=twist, dagger=True, bz=bz,
+                         interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

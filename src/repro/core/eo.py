@@ -33,8 +33,8 @@ from repro.core import solvers
 from repro.core.lattice import (field_dot, field_norm2, merge_eo, pack_gauge,
                                 pack_spinor, split_eo, split_eo_gauge,
                                 unpack_spinor)
-from repro.core.wilson import (dslash_eo, dslash_oe, schur_dagger,
-                               schur_op)
+from repro.core.operators import (SiteTerm, schur_dagger_g, schur_op_g)
+from repro.core.wilson import dslash_eo, dslash_oe
 
 Array = jax.Array
 
@@ -46,26 +46,34 @@ class EOOperators(NamedTuple):
     dhat_dag: solvers.Op   # its gamma5-adjoint
     d_eo: solvers.Op       # odd -> even hopping block
     d_oe: solvers.Op       # even -> odd hopping block
-    m_inv: solvers.Op      # M_oo^{-1} = 1/(m + 4r)
+    m_inv: solvers.Op      # M_oo^{-1} (site-term inverse; 1/(m+4r) Wilson)
     u_e: Array             # per-parity link fields (for callers reusing them)
     u_o: Array
 
 
-def eo_operators(u: Array, mass, r: float = 1.0) -> EOOperators:
-    """Split the gauge field by parity and bind the Schur-system blocks."""
+def eo_operators(u: Array, mass, r: float = 1.0,
+                 twist: float = 0.0) -> EOOperators:
+    """Split the gauge field by parity and bind the Schur-system blocks.
+
+    ``twist`` is the operator registry's site-term twist (the site block
+    is ``(m + 4r) + i·twist·γ5``); 0 is Wilson, bitwise the historical
+    blocks.  The hop blocks ``d_eo``/``d_oe`` are operator-agnostic
+    transport and never see the twist.
+    """
     u_e, u_o = split_eo_gauge(u)
-    m = mass + 4.0 * r
+    site = SiteTerm(mass + 4.0 * r, twist)
     return EOOperators(
-        dhat=lambda v: schur_op(u_e, u_o, v, mass, r=r),
-        dhat_dag=lambda v: schur_dagger(u_e, u_o, v, mass, r=r),
+        dhat=lambda v: schur_op_g(u_e, u_o, v, mass, r=r, twist=twist),
+        dhat_dag=lambda v: schur_dagger_g(u_e, u_o, v, mass, r=r,
+                                          twist=twist),
         d_eo=lambda v: dslash_eo(u_e, u_o, v, r=r),
         d_oe=lambda v: dslash_oe(u_e, u_o, v, r=r),
-        m_inv=lambda v: v / m,
+        m_inv=site.solve,
         u_e=u_e, u_o=u_o)
 
 
 def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
-                        bz: int | None = None,
+                        twist: float = 0.0, bz: int | None = None,
                         interpret: bool | None = None,
                         use_pallas: bool = True) -> EOOperators:
     """The Schur-system blocks on PACKED half fields, Pallas fast path.
@@ -87,6 +95,10 @@ def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
                                          half-spinor tables; any other r
                                          raises ``NotImplementedError``
     mass        any float                trace-time constant
+    twist       any float                site-term twist (operator
+                                         registry): folded into the
+                                         kernel epilogues, still 2
+                                         launches per Schur block
     dtype       f32 / bf16 storage       kernels accumulate in f32
     batch       none or leading N axis   gauge read once per grid step
     ==========  =======================  ==============================
@@ -106,15 +118,15 @@ def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
 
     u_e, u_o = split_eo_gauge(u)
     upe, upo = pack_gauge(u_e), pack_gauge(u_o)
-    m = mass + 4.0 * r
+    site = SiteTerm(mass + 4.0 * r, twist)
     kw = dict(bz=bz, interpret=interpret, use_pallas=use_pallas)
     return EOOperators(
-        dhat=lambda v: wops.schur_op(upe, upo, v, mass, **kw),
-        dhat_dag=lambda v: wops.schur_op(upe, upo, v, mass, dagger=True,
-                                         **kw),
+        dhat=lambda v: wops.schur_op(upe, upo, v, mass, twist=twist, **kw),
+        dhat_dag=lambda v: wops.schur_op(upe, upo, v, mass, twist=twist,
+                                         dagger=True, **kw),
         d_eo=lambda v: wops.dslash_eo(upe, upo, v, **kw),
         d_oe=lambda v: wops.dslash_oe(upe, upo, v, **kw),
-        m_inv=lambda v: v / m,
+        m_inv=site.solve,
         u_e=upe, u_o=upo)
 
 
@@ -138,7 +150,8 @@ class EOContext(NamedTuple):
     batched: bool
 
 
-def eo_context(u: Array, mass, *, r: float = 1.0, use_pallas: bool = False,
+def eo_context(u: Array, mass, *, r: float = 1.0, twist: float = 0.0,
+               use_pallas: bool = False,
                batched: bool = False, bz: int | None = None,
                interpret: bool | None = None,
                out_dtype=jnp.complex64) -> EOContext:
@@ -147,10 +160,14 @@ def eo_context(u: Array, mass, *, r: float = 1.0, use_pallas: bool = False,
     This is the single place the parity gauge split, the field packing,
     the batch vmapping and the fused-engine choice are derived —
     everything downstream (the plan resolver, and through it the
-    ``solve_wilson_eo*`` forwarders) composes these callables.
+    ``solve_wilson_eo*`` forwarders) composes these callables.  ``twist``
+    selects the operator family's site term (0 = Wilson); the layout
+    converters, batching and the fused engine are operator-agnostic and
+    identical for every family.
     """
     if use_pallas:
-        ops = eo_operators_packed(u, mass, r=r, bz=bz, interpret=interpret)
+        ops = eo_operators_packed(u, mass, r=r, twist=twist, bz=bz,
+                                  interpret=interpret)
 
         def prepare(b: Array) -> tuple[Array, Array]:
             b_e, b_o = (jax.vmap(split_eo)(b) if batched else split_eo(b))
@@ -169,7 +186,7 @@ def eo_context(u: Array, mass, *, r: float = 1.0, use_pallas: bool = False,
         return EOContext(ops=ops, prepare=prepare, finish=finish,
                          engine=engine, packed=True, batched=batched)
 
-    ops = eo_operators(u, mass, r=r)
+    ops = eo_operators(u, mass, r=r, twist=twist)
     if batched:
         # natural-layout blocks are single-RHS; vmap them (m_inv is
         # elementwise and batch-transparent already)

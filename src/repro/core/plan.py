@@ -15,6 +15,12 @@ historical entry point (``solve_wilson_eo``/``_mp``/``_batched``,
 equivalent plan, and every new scaling axis is a plan FIELD rather than
 a new code path.
 
+The physics is a plan field too: ``operator_family`` names a registered
+:class:`repro.core.operators.LatticeOperator` ("wilson" default,
+"twisted-mass" + ``mu``), and the resolver pulls the family's site term
+from the registry — the hop transport underneath every row of the table
+below is shared by all families.
+
 Resolution table (DESIGN.md §7 carries the full version):
 
 ==========  =========  ======  =====  =========  ==========================
@@ -58,8 +64,9 @@ from repro.core.lattice import (complex_to_real_pair, field_dot, field_norm2,
                                 merge_eo, pack_gauge, pack_spinor,
                                 real_pair_to_complex, split_eo,
                                 split_eo_gauge, unpack_spinor)
+from repro.core.operators import (SiteTerm, get_operator,
+                                  schur_normal_op_g, unknown_name)
 from repro.core.precision import parse_dtype
-from repro.core.wilson import schur_normal_op
 
 Array = jax.Array
 
@@ -77,6 +84,14 @@ class SolverPlan:
       operator:  "full" (CGNR on D†D over the full lattice) or "eo-schur"
         (CGNR on the half-size Schur complement — T3's algorithmic
         reduction).
+      operator_family: which registered lattice operator to apply —
+        "wilson" (default) or "twisted-mass" (see
+        :mod:`repro.core.operators`).  The family contributes ONLY its
+        site-local term; the hop transport, batching, precision packing
+        and halo exchange are shared by every family.
+      mu: the twisted-mass site parameter (``i·mu·γ5`` diagonal term);
+        only meaningful for families that declare it (validation rejects
+        a nonzero ``mu`` for families that don't).
       backend:   "reference" (jnp, the paper's CPU debugging path) or
         "pallas" (plane-streaming stencil kernels + fused vector engine).
       solver:    "cgnr" or "pipecg" (pipelined: ONE fused reduction per
@@ -97,6 +112,8 @@ class SolverPlan:
     """
 
     operator: str = "eo-schur"
+    operator_family: str = "wilson"
+    mu: float = 0.0
     backend: str = "reference"
     solver: str = "cgnr"
     precision: str = "single"
@@ -115,9 +132,14 @@ class SolverPlan:
                                      ("precision", self.precision,
                                       _PRECISIONS)):
             if value not in allowed:
-                raise ValueError(
-                    f"SolverPlan.{name} must be one of {allowed}, "
-                    f"got {value!r}")
+                raise ValueError("SolverPlan: " + unknown_name(
+                    f"SolverPlan.{name}", value, allowed))
+        spec = get_operator(self.operator_family)  # did-you-mean on unknown
+        if self.mu != 0.0 and "mu" not in spec.params:
+            raise ValueError(
+                f"SolverPlan: operator family {spec.name!r} has no site "
+                f"parameter 'mu' (got mu={self.mu}); pick a family that "
+                "declares it, e.g. operator_family='twisted-mass'")
         if self.precision in ("mixed", "low") and self.solver == "pipecg":
             raise ValueError(
                 "SolverPlan: the mixed/low precision paths use the "
@@ -138,6 +160,43 @@ class SolverPlan:
     def low_dtype(self):
         return parse_dtype(self.low)
 
+    @property
+    def twist(self) -> float:
+        """The family's site-term twist — the ONE number the transport
+        stack needs from the registry (0.0 for Wilson: every consumer
+        then emits the historical program bitwise).  Derived from the
+        registered ``make_site_term`` (evaluated at mass 0 — a family's
+        twist is mass-independent), NOT from any hardcoded parameter
+        name, so a family mapping its declared params to the twist
+        differently is honoured."""
+        return float(self.site_term(0.0).twist)
+
+    def site_term(self, mass) -> SiteTerm:
+        """The family's site-local diagonal block for a given bare mass."""
+        spec = get_operator(self.operator_family)
+        kw = {name: getattr(self, name) for name in spec.params}
+        return spec.make_site_term(mass, self.r, **kw)
+
+
+def _family_site(plan: SolverPlan, mass) -> SiteTerm:
+    """The family's site term from the registry, transport-contract checked.
+
+    The transport stack folds the site SCALE as ``mass + 4r`` at kernel
+    trace time, so a registered family may vary only the twist; a family
+    declaring any other scale fails loudly here instead of being
+    silently solved with the Wilson scale.  (Lifting this needs a
+    kernel-level scale parameter first.)
+    """
+    site = plan.site_term(float(mass))
+    expected = float(mass) + 4.0 * plan.r
+    if float(site.scale) != expected:
+        raise NotImplementedError(
+            f"operator family {plan.operator_family!r} declared site "
+            f"scale {float(site.scale)!r} but the transport kernels fold "
+            f"mass + 4r = {expected!r} at trace time; a family with a "
+            "different scale needs a kernel-level scale parameter")
+    return site
+
 
 def resolve(plan: SolverPlan, u: Array, mass, *,
             out_dtype=jnp.complex64) -> EOContext:
@@ -155,6 +214,7 @@ def resolve(plan: SolverPlan, u: Array, mass, *,
                          f"plan.operator={plan.operator!r} resolves inside "
                          "solve()")
     return eo_context(u, mass, r=plan.r,
+                      twist=_family_site(plan, mass).twist,
                       use_pallas=plan.backend == "pallas",
                       batched=plan.batched, bz=plan.bz,
                       interpret=plan.interpret, out_dtype=out_dtype)
@@ -272,6 +332,7 @@ def _solve_eo_mp(plan, u, b, mass, *, tol, maxiter, inner_tol,
     of the complex half field, links rounded once up front.
     """
     low_dtype = plan.low_dtype
+    twist = _family_site(plan, mass).twist
     ctx = resolve(plan, u, mass, out_dtype=b.dtype)
     b_e, b_o = ctx.prepare(b)
     ops = ctx.ops
@@ -284,7 +345,7 @@ def _solve_eo_mp(plan, u, b, mass, *, tol, maxiter, inner_tol,
         # reads then stream bf16 (half the gauge HBM traffic), wide inside.
         u_e_lo = ops.u_e.astype(low_dtype)
         u_o_lo = ops.u_o.astype(low_dtype)
-        kkw = dict(bz=plan.bz, interpret=plan.interpret)
+        kkw = dict(twist=twist, bz=plan.bz, interpret=plan.interpret)
 
         def a_low(w):  # low storage in/out, f32 registers inside
             return wops.schur_normal_op(u_e_lo, u_o_lo, w, mass, **kkw)
@@ -305,11 +366,13 @@ def _solve_eo_mp(plan, u, b, mass, *, tol, maxiter, inner_tol,
 
         def a_low(w):  # bf16 real-pair in/out, wide inside
             v = real_pair_to_complex(w, dtype=high)
-            av = schur_normal_op(u_e_lo, u_o_lo, v, mass, r=plan.r)
+            av = schur_normal_op_g(u_e_lo, u_o_lo, v, mass, r=plan.r,
+                                   twist=twist)
             return complex_to_real_pair(av, dtype=low_dtype)
 
         def a_high(v):
-            return schur_normal_op(ops.u_e, ops.u_o, v, mass, r=plan.r)
+            return schur_normal_op_g(ops.u_e, ops.u_o, v, mass, r=plan.r,
+                                     twist=twist)
 
         to_low = lambda v: complex_to_real_pair(v, dtype=low_dtype)
         to_high = lambda w: real_pair_to_complex(w, dtype=high)
@@ -341,7 +404,8 @@ def _solve_full(plan, u, b, mass, *, tol, maxiter, inner_tol,
     up = u if packed_in else pack_gauge(u)
     pp = b if packed_in else pack_spinor(b)
     m = float(mass)
-    kw = dict(bz=plan.bz, interpret=plan.interpret,
+    kw = dict(twist=_family_site(plan, mass).twist, bz=plan.bz,
+              interpret=plan.interpret,
               use_pallas=plan.backend == "pallas")
     op_hi = lambda v: wops.normal_op(up, v, m, **kw)
     rhs = wops.dslash_dagger(up, pp, m, **kw)
@@ -390,12 +454,14 @@ def _solve_full_sharded(plan, u, b, mass, *, tol, maxiter, inner_tol,
     use_pallas = plan.backend == "pallas"
     low_dtype = plan.low_dtype
     r = plan.r
+    twist = _family_site(plan, mass).twist
 
     def local_solve(up_l, b_l):
         op = functools.partial(dist.normal_op_halo, mass=mass,
-                               sharded=sharded, r=r, use_pallas=use_pallas)
+                               sharded=sharded, r=r, use_pallas=use_pallas,
+                               twist=twist)
         rhs = dist.dslash_dagger_halo(up_l, b_l, mass, sharded, r=r,
-                                      use_pallas=use_pallas)
+                                      use_pallas=use_pallas, twist=twist)
         if plan.precision == "mixed":
             up_low = up_l.astype(low_dtype)
             return solvers.mpcg(
@@ -493,9 +559,9 @@ def _plan_key(plan: SolverPlan):
     """Hashable identity of a plan (axis_map may be a plain dict)."""
     axis_map = (None if plan.axis_map is None
                 else tuple(sorted(plan.axis_map.items())))
-    return (plan.operator, plan.backend, plan.solver, plan.precision,
-            str(plan.low), plan.nrhs, plan.mesh, axis_map, plan.r,
-            plan.bz, plan.interpret)
+    return (plan.operator, plan.operator_family, plan.mu, plan.backend,
+            plan.solver, plan.precision, str(plan.low), plan.nrhs,
+            plan.mesh, axis_map, plan.r, plan.bz, plan.interpret)
 
 
 # (plan identity, solve params) -> jitted shard_map'd solve.  Reusing the
@@ -515,19 +581,21 @@ def _sharded_eo_solver(plan: SolverPlan, mass: float, tol: float,
     batched = plan.batched
     psi_spec, gauge_spec, sharded = dist.lattice_specs(mesh, plan.axis_map)
     bspec = P(None, *psi_spec) if batched else psi_spec
-    m = mass + 4.0 * plan.r
+    site = _family_site(plan, mass)  # registry site term, contract-checked
+    twist = site.twist
     kkw = dict(sharded=sharded, use_pallas=plan.backend == "pallas",
                bz=plan.bz, interpret=plan.interpret)
+    skw = dict(twist=twist, **kkw)
     pdot, pnorm2 = dist.make_psum_dots(mesh, batched=batched)
 
     def local_solve(upe_l, upo_l, pbe_l, pbo_l):
         d_eo = lambda v: dist.parity_hop_halo("eo", upe_l, upo_l, v, **kkw)
         d_oe = lambda v: dist.parity_hop_halo("oe", upe_l, upo_l, v, **kkw)
         dhat_dag = lambda v: dist.schur_op_halo(upe_l, upo_l, v, mass,
-                                                dagger=True, **kkw)
+                                                dagger=True, **skw)
         a_hat = lambda v: dist.schur_normal_op_halo(upe_l, upo_l, v, mass,
-                                                    **kkw)
-        m_inv = lambda v: v / m
+                                                    **skw)
+        m_inv = site.solve
         b_hat = pbe_l - d_eo(m_inv(pbo_l))
         rhs = dhat_dag(b_hat)
         if plan.solver == "pipecg":

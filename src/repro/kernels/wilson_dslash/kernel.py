@@ -316,7 +316,8 @@ def _take_plane(ref, batched: bool):
 
 def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
                    u_c, u_tm, u_zm, out_ref, *, mass: float,
-                   g5in: bool, g5out: bool, batched: bool = False):
+                   twist: float = 0.0, g5in: bool, g5out: bool,
+                   batched: bool = False):
     f32 = jnp.float32
     # ---- stage 1: load & unpack (all data now in VMEM) ----
     pc_r, pc_i = _split_spinor_block(_take_plane(psi_c, batched))
@@ -336,6 +337,17 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
              for s in range(NSPIN)]
     out_i = [[(m4 if s < 2 else m4_lo) * pc_i[s][c] for c in range(NCOL)]
              for s in range(NSPIN)]
+
+    # site-term twist (operator registry): + γ5out (twist·iγ5) γ5in ψ.
+    # γ5 commutes through, so the wrap collapses to i·twist·γ5 ψ when the
+    # flags agree (γ5² = 1) and to i·twist·ψ when exactly one is set —
+    # per-spin trace-time constants; twist = 0 (Wilson) emits nothing.
+    if twist != 0.0:
+        for s in range(NSPIN):
+            tw = f32(-twist if (g5in == g5out and s >= 2) else twist)
+            for c in range(NCOL):
+                out_r[s][c] = out_r[s][c] - tw * pc_i[s][c]
+                out_i[s][c] = out_i[s][c] + tw * pc_r[s][c]
 
     hop = functools.partial(_hop, g5in=g5in, g5out=g5out)
 
@@ -377,7 +389,7 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
 
 def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
                   bz: int | None = None, interpret: bool | None = None,
-                  gamma5_in: bool = False,
+                  twist: float = 0.0, gamma5_in: bool = False,
                   gamma5_out: bool = False) -> jax.Array:
     """Dirac-Wilson dslash via the Pallas plane-streaming kernel.
 
@@ -388,6 +400,8 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
         each link plane is fetched ONCE per grid step and streams all N
         spinor planes through the stencil (multi-RHS gauge amortization).
       mass: bare mass (trace-time constant, like the paper's #define).
+      twist: site-term twist (operator registry): adds ``i·twist·γ5 ψ`` to
+        the mass term inside the kernel (twisted-mass Wilson); 0 = Wilson.
       bz:   z-planes per block (VMEM working-set knob). Default: min(Z, 4).
       interpret: None = interpret only on CPU; bool forces the mode.
       gamma5_in/gamma5_out: compute γ5out D (γ5in ψ) with γ5 folded into the
@@ -407,7 +421,8 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
     u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
 
     kernel = functools.partial(_dslash_kernel, mass=float(mass),
-                               g5in=bool(gamma5_in), g5out=bool(gamma5_out),
+                               twist=float(twist), g5in=bool(gamma5_in),
+                               g5out=bool(gamma5_out),
                                batched=nb is not None)
     return pl.pallas_call(
         kernel,
@@ -427,6 +442,7 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
 def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
                           u_oc, u_nc, u_ntm, u_nzm, *rest, parity: int,
                           hop_coeff: float, acc_coeff: float, has_acc: bool,
+                          hop_twist: float = 0.0, acc_twist: float = 0.0,
                           g5in: bool, g5out: bool, batched: bool = False):
     """Half-lattice hopping block: hop_coeff · γ5out Hop(γ5in ψ) [+ acc].
 
@@ -505,18 +521,48 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
         _where_sc(sel, un[3][0], _roll_sc(un[3][0], 1, _X_AXIS)),
         _where_sc(sel, un[3][1], _roll_sc(un[3][1], 1, _X_AXIS)), 3, "bwd")
 
-    # ---- epilogue: scale the hop, fold in the accumulator term ----
+    # ---- epilogue: site-term maps on the hop and the accumulator ----
+    #   out = (acc_coeff + acc_twist·iγ5)(ψ_acc)
+    #       + (hop_coeff + hop_twist·iγ5)(γ5out Hop(γ5in ψ))
+    # A zero-twist epilogue (Wilson) takes the historical branch verbatim
+    # (the bitwise-identity contract of the operator registry).  A twisted
+    # scalar mixes each component's re/im planes with a per-spin-block
+    # sign — still pure trace-time constants, zero extra memory traffic.
     h = jnp.float32(hop_coeff)
-    if has_acc:
-        a = jnp.float32(acc_coeff)
-        ac_r, ac_i = _split_spinor_block(_take_plane(acc_ref, batched))
-        out_r = [[h * out_r[s][c] + a * ac_r[s][c] for c in range(NCOL)]
-                 for s in range(NSPIN)]
-        out_i = [[h * out_i[s][c] + a * ac_i[s][c] for c in range(NCOL)]
-                 for s in range(NSPIN)]
-    elif hop_coeff != 1.0:
-        out_r = [[h * e for e in row] for row in out_r]
-        out_i = [[h * e for e in row] for row in out_i]
+    if hop_twist == 0.0 and acc_twist == 0.0:
+        if has_acc:
+            a = jnp.float32(acc_coeff)
+            ac_r, ac_i = _split_spinor_block(_take_plane(acc_ref, batched))
+            out_r = [[h * out_r[s][c] + a * ac_r[s][c] for c in range(NCOL)]
+                     for s in range(NSPIN)]
+            out_i = [[h * out_i[s][c] + a * ac_i[s][c] for c in range(NCOL)]
+                     for s in range(NSPIN)]
+        elif hop_coeff != 1.0:
+            out_r = [[h * e for e in row] for row in out_r]
+            out_i = [[h * e for e in row] for row in out_i]
+    else:
+        if has_acc:
+            a = jnp.float32(acc_coeff)
+            ac_r, ac_i = _split_spinor_block(_take_plane(acc_ref, batched))
+        new_r = [[None] * NCOL for _ in range(NSPIN)]
+        new_i = [[None] * NCOL for _ in range(NSPIN)]
+        for sp in range(NSPIN):
+            g = 1.0 if sp < 2 else -1.0  # γ5 sign of this spin block
+            for c in range(NCOL):
+                nr, ni = h * out_r[sp][c], h * out_i[sp][c]
+                if hop_twist != 0.0:
+                    hg = jnp.float32(hop_twist * g)
+                    nr = nr - hg * out_i[sp][c]
+                    ni = ni + hg * out_r[sp][c]
+                if has_acc:
+                    nr = nr + a * ac_r[sp][c]
+                    ni = ni + a * ac_i[sp][c]
+                    if acc_twist != 0.0:
+                        ag = jnp.float32(acc_twist * g)
+                        nr = nr - ag * ac_i[sp][c]
+                        ni = ni + ag * ac_r[sp][c]
+                new_r[sp][c], new_i[sp][c] = nr, ni
+        out_r, out_i = new_r, new_i
     packed = _repack_spinor_block(out_r, out_i, out_ref.dtype)
     if batched:
         out_ref[:, 0] = packed
@@ -528,7 +574,9 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
                           *, parity: int, bz: int | None,
                           interpret: bool | None, gamma5_in: bool,
                           gamma5_out: bool, psi_acc: jax.Array | None,
-                          acc_coeff: float, hop_coeff: float) -> jax.Array:
+                          acc_coeff: float, hop_coeff: float,
+                          acc_twist: float = 0.0,
+                          hop_twist: float = 0.0) -> jax.Array:
     nd, t, z, y, g, x = u_out.shape
     assert nd == NDIRS and g == GAUGE_G
     assert u_nbr.shape == u_out.shape
@@ -553,6 +601,7 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
     kernel = functools.partial(
         _dslash_parity_kernel, parity=int(parity) % 2,
         hop_coeff=float(hop_coeff), acc_coeff=float(acc_coeff),
+        hop_twist=float(hop_twist), acc_twist=float(acc_twist),
         has_acc=psi_acc is not None, g5in=bool(gamma5_in),
         g5out=bool(gamma5_out), batched=nb is not None)
     return pl.pallas_call(
@@ -569,8 +618,9 @@ def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
                      bz: int | None = None, interpret: bool | None = None,
                      gamma5_in: bool = False, gamma5_out: bool = False,
                      psi_acc: jax.Array | None = None,
-                     acc_coeff: float = 0.0,
-                     hop_coeff: float = 1.0) -> jax.Array:
+                     acc_coeff: float = 0.0, hop_coeff: float = 1.0,
+                     acc_twist: float = 0.0,
+                     hop_twist: float = 0.0) -> jax.Array:
     """D_eo: odd -> even hopping block on packed half fields.
 
     Args:
@@ -584,6 +634,11 @@ def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
         ``out = acc_coeff * psi_acc + hop_coeff * hop`` (psi_acc is an
         EVEN-parity half field, batched iff ``pp_o`` is) — lets the Schur
         complement avoid separate scale/add HBM passes.
+      acc_twist/hop_twist: the site-term hook of the operator registry —
+        each epilogue scalar generalizes to ``coeff + twist·iγ5``
+        (trace-time constants; zero extra passes), which is exactly what
+        a site-diagonal ``i·μ·γ5`` term (twisted mass) needs to fold its
+        Schur blocks into the same two launches as Wilson.
       gamma5_in/gamma5_out: fold γ5 around the hop (tables only, free).
     Returns:
       packed even-parity half field(s), shape/dtype of ``pp_o``.
@@ -591,17 +646,20 @@ def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
     return _dslash_parity_pallas(
         u_e, u_o, pp_o, parity=0, bz=bz, interpret=interpret,
         gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
-        acc_coeff=acc_coeff, hop_coeff=hop_coeff)
+        acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+        acc_twist=acc_twist, hop_twist=hop_twist)
 
 
 def dslash_oe_pallas(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
                      bz: int | None = None, interpret: bool | None = None,
                      gamma5_in: bool = False, gamma5_out: bool = False,
                      psi_acc: jax.Array | None = None,
-                     acc_coeff: float = 0.0,
-                     hop_coeff: float = 1.0) -> jax.Array:
+                     acc_coeff: float = 0.0, hop_coeff: float = 1.0,
+                     acc_twist: float = 0.0,
+                     hop_twist: float = 0.0) -> jax.Array:
     """D_oe: even -> odd hopping block on packed half fields (see above)."""
     return _dslash_parity_pallas(
         u_o, u_e, pp_e, parity=1, bz=bz, interpret=interpret,
         gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
-        acc_coeff=acc_coeff, hop_coeff=hop_coeff)
+        acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+        acc_twist=acc_twist, hop_twist=hop_twist)

@@ -32,6 +32,7 @@ import functools
 
 import jax
 
+from repro.core.operators import apply_igamma5_packed, schur_launch_coeffs
 from repro.core.wilson import apply_gamma5_packed, dslash_packed
 from repro.kernels.wilson_dslash.kernel import (dslash_eo_pallas,
                                                 dslash_oe_pallas,
@@ -40,43 +41,57 @@ from repro.kernels.wilson_dslash.ref import (dslash_eo_ref, dslash_oe_ref,
                                              schur_normal_op_ref,
                                              schur_op_ref)
 
-_STATIC = ("mass", "bz", "interpret", "use_pallas")
+_STATIC = ("mass", "twist", "bz", "interpret", "use_pallas")
 _STATIC_G5 = _STATIC + ("gamma5_in", "gamma5_out")
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC_G5)
 def dslash(up: jax.Array, pp: jax.Array, mass: float, *,
-           bz: int | None = None, interpret: bool | None = None,
-           use_pallas: bool = True, gamma5_in: bool = False,
-           gamma5_out: bool = False) -> jax.Array:
-    """D psi on packed fields; ``pp`` may carry a leading RHS-batch axis."""
+           twist: float = 0.0, bz: int | None = None,
+           interpret: bool | None = None, use_pallas: bool = True,
+           gamma5_in: bool = False, gamma5_out: bool = False) -> jax.Array:
+    """D psi on packed fields; ``pp`` may carry a leading RHS-batch axis.
+
+    ``twist`` is the operator registry's site-term twist: the applied
+    operator is ``D_wilson + i·twist·γ5`` (0 = Wilson, bitwise the
+    historical path).
+    """
     if not use_pallas:
         out = apply_gamma5_packed(pp) if gamma5_in else pp
-        ref = lambda q: dslash_packed(up, q, mass)
+        if twist == 0.0:
+            ref = lambda q: dslash_packed(up, q, mass)
+        else:
+            ref = lambda q: (dslash_packed(up, q, mass)
+                             + twist * apply_igamma5_packed(q)
+                             ).astype(q.dtype)
         out = jax.vmap(ref)(out) if pp.ndim == 6 else ref(out)
         return apply_gamma5_packed(out) if gamma5_out else out
     return dslash_pallas(up, pp, mass, bz=bz, interpret=interpret,
-                         gamma5_in=gamma5_in, gamma5_out=gamma5_out)
+                         twist=twist, gamma5_in=gamma5_in,
+                         gamma5_out=gamma5_out)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
 def dslash_dagger(up: jax.Array, pp: jax.Array, mass: float, *,
-                  bz: int | None = None, interpret: bool | None = None,
+                  twist: float = 0.0, bz: int | None = None,
+                  interpret: bool | None = None,
                   use_pallas: bool = True) -> jax.Array:
-    """D^dag = gamma5 D gamma5, with gamma5 folded into the kernel tables."""
-    return dslash(up, pp, mass, bz=bz, interpret=interpret,
+    """D^dag = gamma5 D(-twist) gamma5, folded into the kernel tables."""
+    return dslash(up, pp, mass, twist=-twist, bz=bz, interpret=interpret,
                   use_pallas=use_pallas, gamma5_in=True, gamma5_out=True)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
 def normal_op(up: jax.Array, pp: jax.Array, mass: float, *,
-              bz: int | None = None, interpret: bool | None = None,
+              twist: float = 0.0, bz: int | None = None,
+              interpret: bool | None = None,
               use_pallas: bool = True) -> jax.Array:
-    """A = D^dag D in exactly two kernel launches: D, then γ5 D γ5 with both
-    γ5 factors folded — no standalone ``apply_gamma5_packed`` pass."""
-    dv = dslash(up, pp, mass, bz=bz, interpret=interpret,
+    """A = D^dag D in exactly two kernel launches: D, then γ5 D(-twist) γ5
+    with both γ5 factors folded — no standalone ``apply_gamma5_packed``
+    pass for any operator family."""
+    dv = dslash(up, pp, mass, twist=twist, bz=bz, interpret=interpret,
                 use_pallas=use_pallas)
-    return dslash(up, dv, mass, bz=bz, interpret=interpret,
+    return dslash(up, dv, mass, twist=-twist, bz=bz, interpret=interpret,
                   use_pallas=use_pallas, gamma5_in=True, gamma5_out=True)
 
 
@@ -119,27 +134,32 @@ def dslash_oe(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
 
 
 _STATIC_HOP = ("which", "bz", "interpret", "use_pallas", "gamma5_in",
-               "gamma5_out", "acc_coeff", "hop_coeff")
+               "gamma5_out", "acc_coeff", "hop_coeff", "acc_twist",
+               "hop_twist")
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC_HOP)
 def hop_block(u_e: jax.Array, u_o: jax.Array, pp: jax.Array, *,
               which: str, gamma5_in: bool = False, gamma5_out: bool = False,
               psi_acc: jax.Array | None = None, acc_coeff: float = 0.0,
-              hop_coeff: float = 1.0, bz: int | None = None,
+              hop_coeff: float = 1.0, acc_twist: float = 0.0,
+              hop_twist: float = 0.0, bz: int | None = None,
               interpret: bool | None = None,
               use_pallas: bool = True) -> jax.Array:
     """One parity hop block with the full fused-epilogue surface exposed:
 
-        out = acc_coeff * psi_acc + hop_coeff * γ5out Hop_which(γ5in ψ)
+        out = (acc_coeff + acc_twist·iγ5) psi_acc
+            + (hop_coeff + hop_twist·iγ5) γ5out Hop_which(γ5in ψ)
 
     This is the shard_map-compatible LOCAL building block of the
     distributed even-odd fast path (:mod:`repro.core.distributed`): called
     on a per-device shard it evaluates the bulk stencil with local periodic
     wrap, and the halo layer corrects only the boundary planes.  ``which``
     is ``"eo"`` (odd in, even out) or ``"oe"`` (even in, odd out); ``pp``
-    may carry a leading RHS-batch axis.  The ``use_pallas=False`` reference
-    composes the same epilogue out of the round-trip oracle blocks.
+    may carry a leading RHS-batch axis.  The twist terms are the operator
+    registry's site-term hook (twisted-mass Schur blocks; 0 for Wilson).
+    The ``use_pallas=False`` reference composes the same epilogue out of
+    the round-trip oracle blocks.
     """
     if which not in ("eo", "oe"):  # must survive `python -O`
         raise ValueError(f"hop_block: which must be 'eo' or 'oe', "
@@ -148,64 +168,90 @@ def hop_block(u_e: jax.Array, u_o: jax.Array, pp: jax.Array, *,
         ref = dslash_eo_ref if which == "eo" else dslash_oe_ref
         hop = ref(u_e, u_o, pp, gamma5_in=gamma5_in, gamma5_out=gamma5_out)
         out = hop if hop_coeff == 1.0 else hop_coeff * hop
+        if hop_twist != 0.0:
+            out = out + hop_twist * apply_igamma5_packed(hop)
         if psi_acc is not None:
-            out = acc_coeff * psi_acc + out
+            acc = acc_coeff * psi_acc
+            if acc_twist != 0.0:
+                acc = acc + acc_twist * apply_igamma5_packed(psi_acc)
+            out = acc + out
         return out.astype(pp.dtype)
     kern = dslash_eo_pallas if which == "eo" else dslash_oe_pallas
     return kern(u_e, u_o, pp, bz=bz, interpret=interpret,
                 gamma5_in=gamma5_in, gamma5_out=gamma5_out,
-                psi_acc=psi_acc, acc_coeff=acc_coeff, hop_coeff=hop_coeff)
+                psi_acc=psi_acc, acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+                acc_twist=acc_twist, hop_twist=hop_twist)
 
 
-_STATIC_SCHUR = ("mass", "bz", "interpret", "use_pallas", "dagger")
+_STATIC_SCHUR = ("mass", "twist", "bz", "interpret", "use_pallas", "dagger")
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC_SCHUR)
 def schur_op(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, mass: float, *,
-             bz: int | None = None, interpret: bool | None = None,
-             use_pallas: bool = True, dagger: bool = False) -> jax.Array:
-    """Schur complement D_hat psi = m psi - D_eo D_oe psi / m  (m = mass+4).
+             twist: float = 0.0, bz: int | None = None,
+             interpret: bool | None = None, use_pallas: bool = True,
+             dagger: bool = False) -> jax.Array:
+    """Schur complement D_hat psi = S psi - D_eo S^-1 D_oe psi, where S is
+    the registry site term ``(mass+4) + i·twist·γ5`` (Wilson: twist = 0).
 
-    Two kernel launches: D_oe streams the even field to a temporary odd
-    field, then D_eo's fused epilogue computes ``m psi - hop / m`` in one
-    pass (``psi_acc``/``acc_coeff``/``hop_coeff``) — no separate scale/add
-    HBM traffic.  ``dagger=True`` gives D_hat^dag = gamma5 D_hat gamma5 by
-    folding γ5 into the first kernel's prologue and the second kernel's hop
-    epilogue (the mass term commutes with γ5).
+    Two kernel launches for EVERY operator family: D_oe streams the even
+    field to a temporary odd field with ``S^-1`` folded into its epilogue
+    (for Wilson the scalar commutes and rides the second launch's
+    ``hop_coeff`` — bitwise the historical path), then D_eo's fused
+    epilogue computes ``S psi - hop`` in one pass via
+    ``acc_coeff``/``acc_twist`` — no separate scale/add/γ5 HBM traffic.
+    ``dagger=True`` gives D_hat(twist)^dag = γ5 D_hat(-twist) γ5 by
+    folding γ5 into the first kernel's prologue and the second kernel's
+    hop epilogue and flipping the twist signs (S commutes with γ5).
     """
     if not use_pallas:
-        return schur_op_ref(u_e, u_o, pp_e, mass, dagger=dagger)
+        return schur_op_ref(u_e, u_o, pp_e, mass, twist=twist,
+                            dagger=dagger)
     m = float(mass) + 4.0
+    if twist == 0.0:
+        tmp_o = dslash_oe_pallas(u_e, u_o, pp_e, bz=bz, interpret=interpret,
+                                 gamma5_in=dagger)
+        return dslash_eo_pallas(u_e, u_o, tmp_o, bz=bz, interpret=interpret,
+                                gamma5_out=dagger, psi_acc=pp_e,
+                                acc_coeff=m, hop_coeff=-1.0 / m)
+    # twisted site term: the two-launch split's sign algebra lives in
+    # repro.core.operators.schur_launch_coeffs (shared with the sharded
+    # halo path) — S(∓tw)^-1 folded into launch 1's hop epilogue,
+    # S(±tw) into launch 2's accumulator.
+    h1c, h1t, acc, acct = schur_launch_coeffs(m, twist, dagger)
     tmp_o = dslash_oe_pallas(u_e, u_o, pp_e, bz=bz, interpret=interpret,
-                             gamma5_in=dagger)
+                             gamma5_in=dagger, hop_coeff=h1c,
+                             hop_twist=h1t)
     return dslash_eo_pallas(u_e, u_o, tmp_o, bz=bz, interpret=interpret,
-                            gamma5_out=dagger, psi_acc=pp_e, acc_coeff=m,
-                            hop_coeff=-1.0 / m)
+                            gamma5_out=dagger, psi_acc=pp_e, acc_coeff=acc,
+                            acc_twist=acct, hop_coeff=-1.0)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
 def schur_dagger(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array,
-                 mass: float, *, bz: int | None = None,
+                 mass: float, *, twist: float = 0.0, bz: int | None = None,
                  interpret: bool | None = None,
                  use_pallas: bool = True) -> jax.Array:
-    """D_hat^dag = gamma5 D_hat gamma5, γ5 folded into the kernels."""
-    return schur_op(u_e, u_o, pp_e, mass, bz=bz, interpret=interpret,
-                    use_pallas=use_pallas, dagger=True)
+    """D_hat^dag = gamma5 D_hat(-twist) gamma5, folded into the kernels."""
+    return schur_op(u_e, u_o, pp_e, mass, twist=twist, bz=bz,
+                    interpret=interpret, use_pallas=use_pallas, dagger=True)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
 def schur_normal_op(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array,
-                    mass: float, *, bz: int | None = None,
-                    interpret: bool | None = None,
+                    mass: float, *, twist: float = 0.0,
+                    bz: int | None = None, interpret: bool | None = None,
                     use_pallas: bool = True) -> jax.Array:
     """A_hat = D_hat^dag D_hat — the even-sublattice CGNR operator.
 
-    Four parity-kernel launches total; every γ5 and every mass-term axpy is
-    folded into a kernel prologue/epilogue, so the whole HPD matvec touches
-    HBM exactly as often as its four hopping stencils demand.
+    Four parity-kernel launches total for EVERY registered operator
+    family; every γ5, every site-term axpy and every twist is folded into
+    a kernel prologue/epilogue, so the whole HPD matvec touches HBM
+    exactly as often as its four hopping stencils demand.
     """
     if not use_pallas:
-        return schur_normal_op_ref(u_e, u_o, pp_e, mass)
-    w = schur_op(u_e, u_o, pp_e, mass, bz=bz, interpret=interpret)
-    return schur_op(u_e, u_o, w, mass, bz=bz, interpret=interpret,
-                    dagger=True)
+        return schur_normal_op_ref(u_e, u_o, pp_e, mass, twist=twist)
+    w = schur_op(u_e, u_o, pp_e, mass, twist=twist, bz=bz,
+                 interpret=interpret)
+    return schur_op(u_e, u_o, w, mass, twist=twist, bz=bz,
+                    interpret=interpret, dagger=True)

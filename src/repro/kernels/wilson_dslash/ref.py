@@ -18,15 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lattice import pack_spinor, unpack_gauge, unpack_spinor
+from repro.core.operators import (schur_dagger_g, schur_normal_op_g,
+                                  schur_op_g)
 from repro.core.wilson import apply_gamma5
 from repro.core.wilson import dslash_eo as _core_dslash_eo
 from repro.core.wilson import dslash_oe as _core_dslash_oe
 from repro.core.wilson import dslash_packed as dslash_ref  # noqa: F401
 from repro.core.wilson import (dslash_dagger_packed as dslash_dagger_ref,  # noqa: F401
                                normal_op_packed as normal_op_ref)  # noqa: F401
-from repro.core.wilson import schur_dagger as _core_schur_dagger
-from repro.core.wilson import schur_normal_op as _core_schur_normal_op
-from repro.core.wilson import schur_op as _core_schur_op
 
 
 def _via_natural(fn, u_e_p: jax.Array, u_o_p: jax.Array, pp: jax.Array,
@@ -61,15 +60,20 @@ def dslash_oe_ref(u_e_p, u_o_p, pp_e, *, gamma5_in=False, gamma5_out=False):
                         gamma5_in, gamma5_out)
 
 
-def schur_op_ref(u_e_p, u_o_p, pp_e, mass, *, dagger=False):
-    """Schur complement D_hat (or D_hat^dag) on packed even half fields."""
-    fn = _core_schur_dagger if dagger else _core_schur_op
-    return _via_natural(lambda ue, uo, v: fn(ue, uo, v, mass),
+def schur_op_ref(u_e_p, u_o_p, pp_e, mass, *, twist=0.0, dagger=False):
+    """Schur complement D_hat (or D_hat^dag) on packed even half fields.
+
+    ``twist`` is the operator registry's site-term twist: the dagger of a
+    twisted operator flips it alongside the γ5 wraps
+    (``schur_dagger_g`` handles the sign internally).
+    """
+    fn = schur_dagger_g if dagger else schur_op_g
+    return _via_natural(lambda ue, uo, v: fn(ue, uo, v, mass, twist=twist),
                         u_e_p, u_o_p, pp_e, False, False)
 
 
-def schur_normal_op_ref(u_e_p, u_o_p, pp_e, mass):
+def schur_normal_op_ref(u_e_p, u_o_p, pp_e, mass, *, twist=0.0):
     """A_hat = D_hat^dag D_hat on packed even half fields."""
-    return _via_natural(lambda ue, uo, v: _core_schur_normal_op(ue, uo, v,
-                                                                mass),
-                        u_e_p, u_o_p, pp_e, False, False)
+    return _via_natural(
+        lambda ue, uo, v: schur_normal_op_g(ue, uo, v, mass, twist=twist),
+        u_e_p, u_o_p, pp_e, False, False)

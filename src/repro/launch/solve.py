@@ -1,18 +1,26 @@
 """Lattice solver launcher — the paper's workload end-to-end, plan-driven.
 
 Every invocation builds ONE :class:`repro.core.plan.SolverPlan` and
-executes it — the CLI axes map 1:1 onto plan fields:
+executes it — the CLI axes map 1:1 onto plan fields, including the
+operator registry (:mod:`repro.core.operators`):
 
     python -m repro.launch.solve --lattice 4x4x4x8 --solver mpcg
-    python -m repro.launch.solve --solver cgnr_eo --backend pallas
+    python -m repro.launch.solve --parity eo --backend pallas
     python -m repro.launch.solve --parity eo --backend pallas --nrhs 8
+    python -m repro.launch.solve --parity eo --operator twisted-mass \
+        --mu 0.25                # second operator, same transport stack
     python -m repro.launch.solve --parity eo --nrhs 4 --mesh debug \
-        --solver pipecg     # sharded batched Schur, 1 psum/iteration
+        --solver pipecg          # sharded batched Schur, 1 psum/iteration
 
 Builds a random SU(3) gauge configuration, solves D x = b (for one RHS or
 an ``--nrhs`` batch) via the planned CG variant, and reports iterations —
 per right-hand side for batched solves — plus residuals and derived FLOP
 rates using the paper's 1320 flop/site dslash convention (§5).
+
+The compound legacy solver names (``cg-pallas``, ``cgnr_eo``, ...) are
+gone: their axes are orthogonal plan fields now (``--parity``,
+``--backend``, ``--nrhs``), so ``--solver`` names ONLY the Krylov loop /
+precision policy.
 """
 
 from __future__ import annotations
@@ -26,36 +34,23 @@ import jax.numpy as jnp
 
 from repro.core import LatticeShape, dslash_flops, random_spinor
 from repro.core import plan as plan_mod
-from repro.core.wilson import dslash
+from repro.core.operators import dslash_g, get_operator, operator_names
 from repro.data import lattice_problem
 from repro.launch.mesh import make_debug_mesh
 
-# legacy/compound solver names -> (Krylov loop, precision, parity default).
-# "--parity"/"--backend" override the inferred parts, so the historical
-# spellings keep working while the plan fields stay orthogonal.
-_SOLVER_ALIASES = {
-    "cg": ("cgnr", "single", "full"),
-    "cgnr": ("cgnr", "single", "full"),
-    "pipecg": ("pipecg", "single", None),
-    "mpcg": ("cgnr", "mixed", "full"),
-    "cg16": ("cgnr", "low", "full"),
-    "cg-pallas": ("cgnr", "single", "full"),
-    "cgnr_eo": ("cgnr", "single", "eo"),
-    "pipecg_eo": ("pipecg", "single", "eo"),
-    "cgnr_eo_mp": ("cgnr", "mixed", "eo"),
+# solver name -> (Krylov loop, precision policy); parity/backend/operator
+# are independent CLI axes
+_SOLVERS = {
+    "cgnr": ("cgnr", "single"),
+    "pipecg": ("pipecg", "single"),
+    "mpcg": ("cgnr", "mixed"),
+    "cg16": ("cgnr", "low"),
 }
 
 
 def build_plan(args) -> plan_mod.SolverPlan:
     """Resolve the CLI axes to a SolverPlan (pure; unit-tested)."""
-    loop, precision, parity = _SOLVER_ALIASES[args.solver]
-    if args.parity is not None:
-        parity = args.parity
-    elif parity is None:
-        parity = "full"
-    backend = args.backend
-    if args.solver == "cg-pallas":
-        backend = "pallas"
+    loop, precision = _SOLVERS[args.solver]
     mesh = None
     if args.mesh == "debug":
         mesh = make_debug_mesh((2, 2), ("data", "model")) \
@@ -65,8 +60,9 @@ def build_plan(args) -> plan_mod.SolverPlan:
                 "[solve] <4 devices; run under "
                 "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     return plan_mod.SolverPlan(
-        operator="eo-schur" if parity == "eo" else "full",
-        backend=backend, solver=loop, precision=precision,
+        operator="eo-schur" if args.parity == "eo" else "full",
+        operator_family=args.operator, mu=args.mu,
+        backend=args.backend, solver=loop, precision=precision,
         nrhs=args.nrhs, mesh=mesh)
 
 
@@ -75,10 +71,17 @@ def main(argv=None):
     p.add_argument("--lattice", default="4x4x4x8",
                    help="TxZxYxX extents")
     p.add_argument("--mass", type=float, default=0.2)
-    p.add_argument("--solver", default="mpcg",
-                   choices=sorted(_SOLVER_ALIASES))
-    p.add_argument("--parity", choices=["full", "eo"], default=None,
-                   help="operator family (default: inferred from --solver)")
+    p.add_argument("--solver", default="mpcg", choices=sorted(_SOLVERS))
+    p.add_argument("--parity", choices=["full", "eo"], default="full",
+                   help="operator shape: full lattice or even-odd Schur")
+    p.add_argument("--operator", default="wilson",
+                   choices=sorted(operator_names()),
+                   help="operator family from the registry: "
+                        + "; ".join(f"{n}: {get_operator(n).description}"
+                                    for n in operator_names()))
+    p.add_argument("--mu", type=float, default=0.0,
+                   help="twisted-mass site parameter (i*mu*gamma5 term; "
+                        "families that declare 'mu' only)")
     p.add_argument("--backend", choices=["reference", "pallas"],
                    default="reference")
     p.add_argument("--nrhs", type=int, default=None,
@@ -105,9 +108,10 @@ def main(argv=None):
     except (ValueError, NotImplementedError) as e:
         print(f"[solve] invalid plan: {e}")
         return 1
-    print(f"[solve] plan: operator={plan.operator} backend={plan.backend} "
-          f"solver={plan.solver} precision={plan.precision} "
-          f"nrhs={plan.nrhs} mesh="
+    print(f"[solve] plan: operator={plan.operator} "
+          f"family={plan.operator_family} mu={plan.mu} "
+          f"backend={plan.backend} solver={plan.solver} "
+          f"precision={plan.precision} nrhs={plan.nrhs} mesh="
           f"{dict(plan.mesh.shape) if plan.mesh is not None else None}")
 
     t0 = time.time()
@@ -123,8 +127,11 @@ def main(argv=None):
     dt = time.time() - t0
     iters = int(st.iterations)
 
+    # true residual against the FAMILY's full operator (registry oracle)
+    twist = plan.twist
+    op = lambda v: dslash_g(u, v, m, twist=twist)
     if plan.nrhs is not None:
-        res = jax.vmap(lambda xx, bb: dslash(u, xx, m) - bb)(xsol, b)
+        res = jax.vmap(lambda xx, bb: op(xx) - bb)(xsol, b)
         rels = (jnp.linalg.norm(res.reshape(plan.nrhs, -1), axis=1)
                 / jnp.linalg.norm(b.reshape(plan.nrhs, -1), axis=1))
         rel = float(jnp.max(rels))
@@ -135,7 +142,7 @@ def main(argv=None):
             f"rhs{i}={float(r):.2e}" for i, r in enumerate(rels)))
         n_systems = plan.nrhs
     else:
-        res = dslash(u, xsol, m) - b
+        res = op(xsol) - b
         rel = float(jnp.linalg.norm(res.ravel())
                     / jnp.linalg.norm(b.ravel()))
         n_systems = 1

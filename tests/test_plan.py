@@ -172,22 +172,37 @@ def test_mesh_plan_combinations_rejected(problem):
 
 
 def _args(**kw):
-    base = dict(solver="mpcg", parity=None, backend="reference",
-                nrhs=None, mesh="none")
+    base = dict(solver="mpcg", parity="full", backend="reference",
+                operator="wilson", mu=0.0, nrhs=None, mesh="none")
     base.update(kw)
     return argparse.Namespace(**base)
 
 
-def test_cli_builds_plans_from_legacy_solver_names():
+def test_cli_builds_plans_from_orthogonal_axes():
+    """The CLI axes map 1:1 onto plan fields — the compound legacy solver
+    names (cg-pallas, cgnr_eo, ...) are gone in favour of --parity /
+    --backend / --operator."""
     from repro.launch.solve import build_plan
-    p = build_plan(_args(solver="cgnr_eo"))
+    p = build_plan(_args(solver="cgnr", parity="eo"))
     assert (p.operator, p.solver, p.precision) == ("eo-schur", "cgnr",
                                                    "single")
     p = build_plan(_args(solver="mpcg"))
     assert (p.operator, p.precision) == ("full", "mixed")
-    p = build_plan(_args(solver="cg-pallas"))
+    p = build_plan(_args(solver="cgnr", backend="pallas"))
     assert (p.operator, p.backend) == ("full", "pallas")
     p = build_plan(_args(solver="pipecg", parity="eo", backend="pallas",
                          nrhs=8))
     assert (p.operator, p.backend, p.solver, p.nrhs) == (
         "eo-schur", "pallas", "pipecg", 8)
+
+
+def test_cli_selects_operator_family_from_registry():
+    from repro.launch.solve import build_plan
+    p = build_plan(_args(solver="cgnr", parity="eo",
+                         operator="twisted-mass", mu=0.25))
+    assert (p.operator_family, p.mu, p.twist) == ("twisted-mass", 0.25,
+                                                  0.25)
+    p = build_plan(_args(solver="cgnr"))
+    assert (p.operator_family, p.twist) == ("wilson", 0.0)
+    with pytest.raises(ValueError, match="twisted-mass"):
+        build_plan(_args(solver="cgnr", mu=0.25))  # wilson takes no mu
