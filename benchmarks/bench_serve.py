@@ -1,0 +1,86 @@
+"""Serving benchmark — open-loop load against the continuous-batching server.
+
+Two entry points:
+
+* ``run()`` — the benchmarks/run.py harness protocol: a SMALL smoke
+  workload, returning ``(name, us_per_call, derived)`` rows (mean latency
+  per request; derived column carries req/s and the batch histogram).
+  Excluded from the default CSV sweep — opt in with ``run.py --with-serve``.
+* ``main(argv)`` — the CI ``serve-smoke`` lane: a configurable workload,
+  ``--verify`` re-solving every response against a direct unbatched
+  ``plan.solve`` (gate: max abs deviation ≤ 1e-5), and the full report
+  written to ``BENCH_serve.json`` (or ``$BENCH_SERVE_JSON``) for the
+  regression guard (check_solver_regression.py --serve) and artifact
+  upload.  Exits nonzero on verify failure or non-convergence.
+
+Latency numbers here include queueing by construction (open-loop
+arrivals), so they are throughput-honest but NOT a kernel benchmark —
+see bench_solvers.py for per-iteration timings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.launch.serve_solver import build_config, make_parser  # noqa: E402
+from repro.serve.loadgen import WorkloadConfig, run_workload  # noqa: E402
+
+OUT_JSON = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+
+# run.py harness smoke: small enough to finish alongside the other CSV
+# modules, large enough that coalescing actually happens.
+SMOKE = WorkloadConfig(requests=40, burst=4, interarrival_s=0.02,
+                       ladder=(1, 4, 8), maxiter=500)
+
+
+def run():
+    """Harness protocol: yield (name, us_per_call, derived) rows."""
+    report = run_workload(SMOKE)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    lat = report["latency_ms"]
+    hist = ";".join(f"{k}x{v}" for k, v in sorted(
+        report["batch_hist"].items(), key=lambda kv: int(kv[0])))
+    yield ("serve_p50", lat["p50"] * 1e3,
+           f"{report['requests_per_s']:.1f}req/s")
+    yield ("serve_p99", lat["p99"] * 1e3, f"batches={hist}")
+    yield ("serve_mean", lat["mean"] * 1e3,
+           f"hit_rate={report['request_cache_hit_rate']:.2f}")
+
+
+def main(argv=None) -> int:
+    parser = make_parser()
+    parser.set_defaults(out=OUT_JSON)
+    args = parser.parse_args(argv)
+    cfg = build_config(args)
+    print(f"[bench_serve] {cfg.requests} requests, "
+          f"{cfg.n_gauge} gauges x {len(cfg.families)} families, "
+          f"ladder={list(cfg.ladder)}, verify={cfg.verify}")
+    report = run_workload(cfg)
+    lat = report["latency_ms"]
+    print(f"[bench_serve] {report['requests_per_s']:.1f} req/s  "
+          f"p50={lat['p50']:.1f}ms p99={lat['p99']:.1f}ms  "
+          f"batches={report['batch_hist']}  "
+          f"hit_rate={report['request_cache_hit_rate']:.3f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[bench_serve] wrote {args.out}")
+    ok = bool(report["all_converged"])
+    if "verify" in report:
+        v = report["verify"]
+        print(f"[bench_serve] verify: max_abs_err={v['max_abs_err']:.2e} "
+              f"({'OK' if v['passed'] else 'FAIL'})")
+        ok = ok and v["passed"]
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,12 +21,16 @@ first mismatch.
 
 Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
         check_solver_regression.py --generate [baseline.json]
+        check_solver_regression.py --serve [BENCH_serve.json] [baseline.json]
 
 ``--generate`` runs the smoke solves itself (no full benchmark harness
-needed) and guards the result — the standalone/dev mode.  CI uses the
-artifact-comparing mode in the smoke-bench job; the BLOCKING guard is
-tests/test_eo.py::test_eo_iteration_count_vs_committed_baseline, which
-checks the same baseline inside the tier-1 suite.
+needed) and guards the result — the BLOCKING ``bench-guard`` CI job and
+the standalone/dev mode.  ``--serve`` guards a serving-lane report
+(benchmarks/bench_serve.py --verify) against the baseline's ``serve``
+section: request volume, direct-solve verification, plan-cache hit rate
+after warmup, that coalescing reached a multi-RHS rung, convergence, and
+the iteration-count ceiling.  The artifact-comparing default mode stays
+in the non-blocking smoke-bench job for timing context.
 Exit 0 on pass, 1 on regression or missing/invalid inputs.
 """
 
@@ -154,9 +158,84 @@ def _check_eo_sharded(table, cur, base):
     table.iters("eo_sharded", "iters", base_s["iters"], cur_s["iters"])
 
 
+def _check_serve(table, cur, base):
+    """Guard a serving-lane report against the baseline ``serve`` section.
+
+    The serving lane's algorithmic signal is the same as the solver
+    smoke's (iteration counts, deterministic seed) plus the serving
+    invariants: every response verified against a direct solve, the
+    compiled-plan cache effective after warmup, and request coalescing
+    actually reaching a multi-RHS ladder rung.  Throughput/latency stay
+    unguarded — wall-clock on shared runners is noise.
+    """
+    base_s = base.get("serve")
+    if not base_s:
+        table.missing("serve", "(baseline section)", "present")
+        return
+    if not _problem_match(table, "serve", cur, base_s, extra=("backend",)):
+        return
+    n = int(cur.get("requests", 0))
+    need = int(base_s.get("min_requests", 0))
+    table.add("serve", "requests", f">={need}", n, need,
+              "OK" if n >= need else "REGRESSION")
+    conv = bool(cur.get("all_converged", False))
+    table.add("serve", "all_converged", True, conv, "-",
+              "OK" if conv else "REGRESSION")
+    v = cur.get("verify")
+    if not v:
+        # the lane must run with --verify; a report without the section
+        # never passed the direct-solve comparison
+        table.missing("serve", "verify", "passed")
+    else:
+        table.add("serve", "verify.max_abs_err", f"<={v.get('tol')}",
+                  v.get("max_abs_err"), v.get("tol"),
+                  "OK" if v.get("passed") else "REGRESSION")
+    rate = float(cur.get("request_cache_hit_rate", 0.0))
+    min_rate = float(base_s.get("min_hit_rate", 0.9))
+    table.add("serve", "request_cache_hit_rate", f">={min_rate}",
+              round(rate, 3), min_rate,
+              "OK" if rate >= min_rate else "REGRESSION")
+    min_rung = int(base_s.get("min_coalesced_rung", 4))
+    rungs = {int(k): int(c) for k, c in cur.get("rung_hist", {}).items()}
+    coalesced = any(r >= min_rung and c > 0 for r, c in rungs.items())
+    table.add("serve", "coalesced_rung", f">={min_rung}",
+              sorted(rungs) if rungs else "-", min_rung,
+              "OK" if coalesced else "REGRESSION")
+    iters_max = cur.get("iters", {}).get("max")
+    if iters_max is None:
+        table.missing("serve", "iters.max", base_s.get("max_iters"))
+    else:
+        table.iters("serve", "iters.max", base_s["max_iters"], iters_max)
+
+
+def _load(path: str, what: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"solver-regression guard: cannot load {what} {path}: {e}")
+        return None
+
+
 def main(argv: list[str]) -> int:
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_solvers_baseline.json")
+    if len(argv) > 1 and argv[1] == "--serve":
+        cur_path = argv[2] if len(argv) > 2 else "BENCH_serve.json"
+        if len(argv) > 3:
+            base_path = argv[3]
+        cur = _load(cur_path, "serve report")
+        base = _load(base_path, "baseline")
+        if cur is None or base is None:
+            return 1
+        table = _Table()
+        _check_serve(table, cur, base)
+        table.print()
+        if table.failed:
+            print("serve guard: FAILED — see the non-OK rows above")
+            return 1
+        print("serve guard: passed")
+        return 0
     if len(argv) > 1 and argv[1] == "--generate":
         if len(argv) > 2:
             base_path = argv[2]

@@ -6,10 +6,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_overlap          — paper Fig. 2 transfer/compute overlap
   bench_solvers          — collectives-per-iteration (pipelined CG)
   roofline               — §Roofline aggregation from the dry-run JSONs
+  bench_serve            — serving-lane latency smoke (``--with-serve``
+                           only; the CI serve-smoke job runs it directly)
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
@@ -27,10 +30,19 @@ MODULES = [("dslash", bench_dslash),
            ("roofline", roofline)]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description="benchmark CSV sweep")
+    parser.add_argument("--with-serve", action="store_true",
+                        help="append the serving-lane smoke (slower; it "
+                             "spins up the batching server)")
+    args = parser.parse_args(argv)
+    modules = list(MODULES)
+    if args.with_serve:
+        from benchmarks import bench_serve
+        modules.append(("serve", bench_serve))
     print("name,us_per_call,derived")
     failed = 0
-    for name, mod in MODULES:
+    for name, mod in modules:
         try:
             for row in mod.run():
                 n, us, derived = row

@@ -156,6 +156,24 @@ class SolverPlan:
     def batched(self) -> bool:
         return self.nrhs is not None
 
+    def cache_key(self) -> tuple:
+        """The plan's hashable identity — every trace-time axis of a solve.
+
+        Two plans with equal keys resolve to the same compiled program
+        (same operator family and ``mu`` epilogues, backend, batch rung,
+        precision policy, mesh layout and kernel knobs), so a compiled
+        solve callable may be shared between them.  This is the cache key
+        of both the sharded-solver cache below and the serving layer's
+        :class:`repro.serve.plan_cache.PlanCache`.  ``axis_map`` may be a
+        plain (unhashable) dict, hence the sorted-tuple normalization;
+        ``mesh`` hashes by device identity.
+        """
+        axis_map = (None if self.axis_map is None
+                    else tuple(sorted(self.axis_map.items())))
+        return (self.operator, self.operator_family, self.mu, self.backend,
+                self.solver, self.precision, str(self.low), self.nrhs,
+                self.mesh, axis_map, self.r, self.bz, self.interpret)
+
     @property
     def low_dtype(self):
         return parse_dtype(self.low)
@@ -555,15 +573,6 @@ def _solve_eo_sharded(plan, u, b, mass, *, tol, maxiter,
     return x, stats
 
 
-def _plan_key(plan: SolverPlan):
-    """Hashable identity of a plan (axis_map may be a plain dict)."""
-    axis_map = (None if plan.axis_map is None
-                else tuple(sorted(plan.axis_map.items())))
-    return (plan.operator, plan.operator_family, plan.mu, plan.backend,
-            plan.solver, plan.precision, str(plan.low), plan.nrhs,
-            plan.mesh, axis_map, plan.r, plan.bz, plan.interpret)
-
-
 # (plan identity, solve params) -> jitted shard_map'd solve.  Reusing the
 # SAME jitted callable across calls is what makes repeated solves (and the
 # benchmark's warm-up) hit the compilation cache instead of re-tracing a
@@ -573,7 +582,7 @@ _SHARDED_EO_CACHE: dict = {}
 
 def _sharded_eo_solver(plan: SolverPlan, mass: float, tol: float,
                        maxiter: int, residual_replacement_every: int):
-    key = (_plan_key(plan), mass, tol, maxiter, residual_replacement_every)
+    key = (plan.cache_key(), mass, tol, maxiter, residual_replacement_every)
     cached = _SHARDED_EO_CACHE.get(key)
     if cached is not None:
         return cached

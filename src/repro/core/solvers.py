@@ -91,6 +91,26 @@ def _batched_defaults(dot, norm2):
 _DEFAULT_NORM2 = (field_norm2, field_norm2_batched)
 
 
+def _stop_limit(tol, bs: Array, batched: bool) -> Array:
+    """The stopping limit ``tol² · ‖b‖²`` (per-RHS when batched).
+
+    ``tol`` may be a scalar or — for batched solves — a per-RHS (N,)
+    vector: each system then stops against ITS OWN tolerance inside one
+    masked loop.  This is what lets a serving layer coalesce requests
+    with different tolerances into a single batch (the tolerance is a
+    runtime argument, not a trace-time constant).  A non-scalar ``tol``
+    on an unbatched solve is rejected loudly.
+    """
+    tol = jnp.asarray(tol)
+    if tol.ndim > (1 if batched else 0):
+        raise ValueError(
+            "tol must be a scalar"
+            + (" or a per-RHS (N,) vector" if batched else "")
+            + f" ({'' if batched else 'batched=False; '}got shape "
+            f"{tol.shape})")
+    return (tol.astype(bs.dtype) ** 2) * bs
+
+
 # ---------------------------------------------------------------------------
 # Conjugate Gradient (HPD operator)
 # ---------------------------------------------------------------------------
@@ -116,7 +136,9 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
 
     ``batched=True``: ``b`` (and ``op``'s in/out) carry a leading RHS-batch
     axis; each system stops against ITS OWN ``tol² ||b_n||²`` through the
-    convergence mask — a converged system's ``alpha`` is masked to 0 (so
+    convergence mask — and ``tol`` itself may be a per-RHS (N,) vector
+    (see ``_stop_limit``), so systems with different target tolerances
+    share one masked loop — a converged system's ``alpha`` is masked to 0 (so
     ``x_n``/``r_n`` freeze bitwise, even inside an injected engine) and
     its direction update is gated off; the loop runs while ANY system is
     active.  Default ``dot``/``norm2`` swap to their per-RHS versions; an
@@ -130,7 +152,7 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     p = r
     rs = _real(norm2(r))
     bs = _real(norm2(b))
-    limit = (tol ** 2) * bs
+    limit = _stop_limit(tol, bs, batched)
 
     def cond(carry):
         k, x, r, p, rs = carry[:5]
@@ -209,7 +231,8 @@ def cg_trace(op: Op, b: Array, *, iters: int,
     r = b
     p = r
     rs = _real(norm2(r))
-    limit = None if tol is None else (tol ** 2) * _real(norm2(b))
+    limit = (None if tol is None
+             else _stop_limit(tol, _real(norm2(b)), batched))
 
     def step(carry, _):
         x, r, p, rs = carry
@@ -387,7 +410,7 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     if to_high is None:
         to_high = lambda v: v.astype(high)
     bs = _real(norm2(b))
-    limit = (tol ** 2) * bs
+    limit = _stop_limit(tol, bs, batched)
 
     def cond(carry):
         outer, inner_total, x, r, rs = carry[:5]
@@ -470,7 +493,7 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
 
     gamma, delta = fused_dots(r, w)
     bs = _real(norm2(b))
-    limit = (tol ** 2) * bs
+    limit = _stop_limit(tol, bs, batched)
 
     zero = jnp.zeros_like(b)
     init = (jnp.asarray(0, jnp.int32), x, r, w, zero, zero, zero,

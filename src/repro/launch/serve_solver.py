@@ -1,0 +1,136 @@
+"""Solver-serving launcher: a continuous-batching solve service under load.
+
+    python -m repro.launch.serve_solver --requests 200 --burst 4
+    python -m repro.launch.serve_solver --lattice 4x4x4x8 --gauges 2 \
+        --ladder 1,4,8,16 --max-wait-ms 250 --verify
+    python -m repro.launch.serve_solver --families wilson \
+        --backend pallas --out BENCH_serve.json
+
+Stands up :class:`repro.serve.SolverServer` (queue → coalesce → pad to the
+batch-shape ladder → masked batched EO-Schur CGNR → per-request return),
+registers ``--gauges`` random hot gauge fields, warms the compiled-plan
+cache, then drives the synthetic OPEN-LOOP load generator: bursts of
+``--burst`` requests every ``--interarrival-ms``, cycling gauge fields,
+operator families and a pool of right-hand sides.  Reports requests/s,
+p50/p99 latency, the batch-size histogram and plan-cache hit rates;
+``--verify`` re-solves every response through a direct unbatched
+``plan.solve`` and fails loudly on deviation > 1e-5 — the same gate the
+CI ``serve-smoke`` lane runs (see benchmarks/bench_serve.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serve.loadgen import WorkloadConfig, run_workload
+
+# family name -> its mu parameter when selected (0 for families without one)
+_FAMILY_MU = {"wilson": 0.0, "twisted-mass": 0.25}
+
+
+def build_config(args) -> WorkloadConfig:
+    """Resolve the CLI axes to a WorkloadConfig (pure; unit-tested)."""
+    lattice = tuple(int(v) for v in args.lattice.split("x"))
+    if len(lattice) != 4:
+        raise ValueError(f"--lattice must be TxZxYxX, got {args.lattice!r}")
+    families = []
+    for name in args.families.split(","):
+        name = name.strip()
+        if name not in _FAMILY_MU:
+            raise ValueError(f"unknown family {name!r}; known: "
+                             f"{sorted(_FAMILY_MU)}")
+        families.append((name, args.mu if name == "twisted-mass"
+                         else _FAMILY_MU[name]))
+    ladder = tuple(int(v) for v in args.ladder.split(","))
+    return WorkloadConfig(
+        lattice=lattice, n_gauge=args.gauges, families=tuple(families),
+        mass=args.mass, tol=args.tol, requests=args.requests,
+        burst=args.burst, interarrival_s=args.interarrival_ms / 1e3,
+        rhs_pool=args.rhs_pool, seed=args.seed, ladder=ladder,
+        max_wait_s=args.max_wait_ms / 1e3, max_batch=args.max_batch,
+        backend=args.backend, maxiter=args.maxiter,
+        warmup=not args.no_warmup, verify=args.verify)
+
+
+def make_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--lattice", default="4x4x4x4", help="TxZxYxX extents")
+    p.add_argument("--gauges", type=int, default=2,
+                   help="number of hot gauge fields")
+    p.add_argument("--families", default="wilson,twisted-mass",
+                   help="comma list of operator families to mix")
+    p.add_argument("--mu", type=float, default=0.25,
+                   help="twisted-mass site parameter")
+    p.add_argument("--mass", type=float, default=0.1)
+    p.add_argument("--tol", type=float, default=1e-6)
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--burst", type=int, default=4,
+                   help="requests fired per arrival instant")
+    p.add_argument("--interarrival-ms", type=float, default=50.0,
+                   help="open-loop spacing between bursts")
+    p.add_argument("--rhs-pool", type=int, default=8,
+                   help="distinct right-hand sides cycled across requests")
+    p.add_argument("--ladder", default="1,4,8",
+                   help="comma list of pre-compiled batch shapes")
+    p.add_argument("--max-wait-ms", type=float, default=250.0,
+                   help="batching deadline from the first queued request")
+    p.add_argument("--max-batch", type=int, default=None,
+                   help="dispatch cap (default: top ladder rung)")
+    p.add_argument("--backend", choices=["reference", "pallas"],
+                   default="reference")
+    p.add_argument("--maxiter", type=int, default=500)
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--no-warmup", action="store_true",
+                   help="skip precompiling the ladder (first batches pay "
+                        "trace/compile)")
+    p.add_argument("--verify", action="store_true",
+                   help="re-solve every response directly and compare")
+    p.add_argument("--out", default=None,
+                   help="write the BENCH_serve.json report here")
+    return p
+
+
+def main(argv=None):
+    args = make_parser().parse_args(argv)
+    try:
+        cfg = build_config(args)
+    except ValueError as e:
+        print(f"[serve_solver] invalid config: {e}")
+        return 1
+    print(f"[serve_solver] lattice={args.lattice} gauges={cfg.n_gauge} "
+          f"families={[f for f, _ in cfg.families]} "
+          f"requests={cfg.requests} burst={cfg.burst} "
+          f"ladder={list(cfg.ladder)} backend={cfg.backend}")
+    report = run_workload(cfg)
+    lat = report["latency_ms"]
+    print(f"[serve_solver] {report['requests']} requests in "
+          f"{report['wall_s']:.2f}s = {report['requests_per_s']:.1f} req/s")
+    print(f"[serve_solver] latency p50={lat['p50']:.1f}ms "
+          f"p99={lat['p99']:.1f}ms mean={lat['mean']:.1f}ms")
+    print(f"[serve_solver] batches={report['batches']} "
+          f"batch_hist={report['batch_hist']} "
+          f"padded_slots={report['padded_slots']}")
+    print(f"[serve_solver] plan cache: {report['plan_cache']} "
+          f"request_hit_rate={report['request_cache_hit_rate']:.3f}")
+    ok = bool(report["all_converged"])
+    if not ok:
+        print("[serve_solver] FAIL: not every request converged")
+    if "verify" in report:
+        v = report["verify"]
+        print(f"[serve_solver] verify: {v['checked']} responses vs "
+              f"{v['direct_solves']} direct solves, "
+              f"max_abs_err={v['max_abs_err']:.2e} "
+              f"({'OK' if v['passed'] else 'FAIL'})")
+        ok = ok and v["passed"]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[serve_solver] wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

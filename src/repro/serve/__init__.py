@@ -1,0 +1,19 @@
+"""Solve-as-a-service: the continuous-batching solver server.
+
+Public surface:
+  server     — SolverServer (async queue → coalesce → pad → batched solve),
+               SolveRequest / SolveResult / RequestStats
+  batching   — the pre-compiled batch-shape ladder + BatchPolicy
+  plan_cache — PlanCache: resolved SolverPlan → jitted solve callable
+  loadgen    — WorkloadConfig / run_workload: synthetic open-loop load
+               generator + direct-solve verification (BENCH_serve.json)
+"""
+
+from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
+                                  pad_tols, rung_for, validate_ladder)
+from repro.serve.loadgen import (WorkloadConfig, build_workload,
+                                 drive_open_loop, run_workload,
+                                 verify_against_direct)
+from repro.serve.plan_cache import PlanCache
+from repro.serve.server import (RequestStats, SolveRequest, SolveResult,
+                                SolverServer)

@@ -1,0 +1,109 @@
+"""Shape-ladder padding and the batch-formation policy for the solver server.
+
+The serving layer coalesces requests that share a gauge field into the
+multi-RHS batched Schur solve (DESIGN.md §6) — but an arbitrary batch size
+per dispatch would retrace/recompile the masked CG loop for every new N.
+Instead, every dispatched batch is padded UP to a small ladder of
+pre-compiled batch shapes (default N ∈ {1, 4, 8, 16}): after each rung has
+compiled once, steady state never pays trace/compile again, whatever the
+instantaneous queue depth.
+
+Padding is bitwise-safe by construction: a pad slot is an all-zero RHS,
+whose convergence limit ``tol² · ‖b‖²`` is exactly 0, so the per-RHS
+convergence mask (repro.core.solvers.cg, ``batched=True``) deactivates it
+at iteration 0 — its masked ``alpha`` is 0 forever, it contributes nothing
+to any other system's ``alpha``/``beta`` (those are per-RHS), and the loop
+trip count is decided by the REAL systems only.  A batch of k padded to
+rung N therefore returns the first k solutions bitwise identical to the
+unpadded k-RHS solve (tested in tests/test_serve.py at every rung).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_LADDER = (1, 4, 8, 16)
+
+
+def validate_ladder(ladder: Sequence[int]) -> tuple[int, ...]:
+    """Normalize a batch-shape ladder: sorted, unique, positive rungs."""
+    rungs = tuple(sorted({int(n) for n in ladder}))
+    if not rungs or rungs[0] < 1:
+        raise ValueError(f"batch ladder needs positive rungs, got {ladder!r}")
+    return rungs
+
+
+def rung_for(n: int, ladder: Sequence[int]) -> int:
+    """The smallest ladder rung that fits an n-request batch."""
+    for rung in ladder:
+        if n <= rung:
+            return rung
+    raise ValueError(
+        f"batch of {n} exceeds the top ladder rung {ladder[-1]}; the "
+        "dispatcher must cap batches at the top rung (BatchPolicy."
+        "resolved_max_batch)")
+
+
+def pad_batch(rhs_list: Sequence[Array], rung: int) -> Array:
+    """Stack k right-hand sides and zero-pad the batch axis up to ``rung``.
+
+    The zero pad slots freeze at iteration 0 under the per-RHS convergence
+    mask (zero RHS ⇒ zero limit ⇒ inactive), so the real systems solve
+    bitwise as if unpadded — see the module docstring.
+    """
+    b = jnp.stack(list(rhs_list))
+    k = b.shape[0]
+    if k > rung:
+        raise ValueError(f"batch of {k} does not fit rung {rung}")
+    if k == rung:
+        return b
+    pad = jnp.zeros((rung - k,) + b.shape[1:], b.dtype)
+    return jnp.concatenate([b, pad])
+
+
+def pad_tols(tols: Sequence[float], rung: int) -> Array:
+    """Per-RHS tolerance vector for a padded batch.
+
+    Pad slots get tol=1.0 — any value works (their limit is 0 regardless,
+    since the padded RHS is zero), 1.0 just keeps the vector unsurprising
+    in logs.
+    """
+    if len(tols) > rung:
+        raise ValueError(f"{len(tols)} tolerances do not fit rung {rung}")
+    vals = [float(t) for t in tols] + [1.0] * (rung - len(tols))
+    return jnp.asarray(vals, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """When a per-gauge-field queue dispatches a batch.
+
+    ``max_wait``: seconds from the FIRST queued request to forced
+    dispatch — the anti-starvation deadline.  A lone request is solved at
+    most ``max_wait`` after arrival even if the batch never fills.
+    ``max_batch``: dispatch immediately once this many requests are
+    queued; ``None`` means the top ladder rung (no padding waste at the
+    top).
+    """
+
+    max_wait: float = 0.05
+    max_batch: int | None = None
+
+    def __post_init__(self):
+        if self.max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {self.max_wait}")
+        if self.max_batch is not None and self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+
+    def resolved_max_batch(self, ladder: Sequence[int]) -> int:
+        """The dispatch cap: never exceed the top ladder rung."""
+        top = ladder[-1]
+        if self.max_batch is None:
+            return top
+        return min(self.max_batch, top)

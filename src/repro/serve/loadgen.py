@@ -1,0 +1,206 @@
+"""Synthetic open-loop load generator for the solver server.
+
+Open-loop means arrival times are fixed by the workload (bursts of
+``burst`` requests every ``interarrival_s`` seconds), NOT by service
+completions — the generator never waits for a response before firing the
+next request, so a slow server accumulates backlog and the latency
+percentiles honestly include queueing.  This is the standard serving-
+benchmark discipline (closed-loop generators hide overload).
+
+The workload models the production shape the ROADMAP names: a small set
+of hot gauge fields (``n_gauge``), several operator families
+(wilson + twisted-mass by default), and a pool of distinct right-hand
+sides cycled deterministically across requests — every (gauge, family)
+pair sees traffic, so the plan cache and every per-gauge queue are
+exercised.
+
+``run_workload`` is the sync entry point: builds the fields, drives the
+server under ``asyncio.run``, and returns the ``BENCH_serve.json`` report
+(requests/s, p50/p99 latency, batch-size histogram, plan-cache counters,
+iteration stats).  With ``verify=True`` every response is re-solved
+through a DIRECT unbatched ``plan.solve`` and compared — the end-to-end
+correctness gate CI runs (max abs deviation ≤ 1e-5).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.serve.batching import BatchPolicy, DEFAULT_LADDER
+from repro.serve.plan_cache import PlanCache
+from repro.serve.server import SolveRequest, SolveResult, SolverServer
+
+VERIFY_TOL = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """A synthetic serving workload, fully determined by its fields."""
+
+    lattice: tuple[int, int, int, int] = (4, 4, 4, 4)
+    n_gauge: int = 2
+    families: tuple[tuple[str, float], ...] = (("wilson", 0.0),
+                                               ("twisted-mass", 0.25))
+    mass: float = 0.1
+    tol: float = 1e-6
+    requests: int = 200
+    burst: int = 4              # requests fired at each arrival instant
+    interarrival_s: float = 0.05  # spacing between bursts
+    rhs_pool: int = 8           # distinct right-hand sides, cycled
+    seed: int = 7
+    # (1, 4, 8): the CI smoke ladder — drop the 16 rung to keep warmup
+    # compile time down; production ladders pass DEFAULT_LADDER
+    ladder: tuple[int, ...] = (1, 4, 8)
+    max_wait_s: float = 0.25
+    max_batch: int | None = None
+    backend: str = "reference"
+    maxiter: int = 500
+    warmup: bool = True
+    verify: bool = False
+
+
+def build_workload(cfg: WorkloadConfig
+                   ) -> tuple[dict[str, jax.Array], list[SolveRequest]]:
+    """Deterministic gauge fields + request list for a workload config."""
+    lat = LatticeShape(*cfg.lattice)
+    key = jax.random.PRNGKey(cfg.seed)
+    ku, kb = jax.random.split(key)
+    gauges = {f"cfg{g}": random_gauge(jax.random.fold_in(ku, g), lat)
+              for g in range(cfg.n_gauge)}
+    pool = [random_spinor(jax.random.fold_in(kb, i), lat)
+            for i in range(cfg.rhs_pool)]
+    gauge_ids = sorted(gauges)
+    requests = []
+    for i in range(cfg.requests):
+        family, mu = cfg.families[i % len(cfg.families)]
+        requests.append(SolveRequest(
+            operator_family=family, mu=mu,
+            gauge_id=gauge_ids[(i // len(cfg.families)) % cfg.n_gauge],
+            rhs=pool[i % cfg.rhs_pool], tol=cfg.tol))
+    return gauges, requests
+
+
+async def drive_open_loop(server: SolverServer,
+                          requests: list[SolveRequest], *, burst: int,
+                          interarrival_s: float
+                          ) -> tuple[list[tuple[float, SolveResult]], float]:
+    """Fire the request schedule; [(latency_s, result)] in request order."""
+
+    async def fire(req: SolveRequest, delay: float):
+        await asyncio.sleep(delay)
+        t0 = time.perf_counter()
+        result = await server.submit(req)
+        return time.perf_counter() - t0, result
+
+    t0 = time.perf_counter()
+    tasks = [asyncio.ensure_future(fire(req, (i // burst) * interarrival_s))
+             for i, req in enumerate(requests)]
+    out = await asyncio.gather(*tasks)
+    return list(out), time.perf_counter() - t0
+
+
+def percentile(sorted_vals: list[float], p: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+def verify_against_direct(gauges: dict, requests: list[SolveRequest],
+                          results: list[tuple[float, SolveResult]],
+                          cfg: WorkloadConfig) -> dict:
+    """Re-solve every request through a direct unbatched plan.solve.
+
+    The masked-freeze contract says a served solution is the iterate its
+    own independent solve would have produced — so the direct solve is
+    the oracle.  Uses a PRIVATE PlanCache (the server's hit-rate metrics
+    stay untouched); distinct (gauge, family, mu, rhs) combinations are
+    memoized since the workload cycles a finite RHS pool.
+    """
+    direct_plans = PlanCache()
+    memo: dict = {}
+    max_err = 0.0
+    for req, (_, res) in zip(requests, results):
+        mass = cfg.mass if req.mass is None else float(req.mass)
+        key = (req.gauge_id, req.operator_family, float(req.mu), mass,
+               float(req.tol), id(req.rhs))
+        x_direct = memo.get(key)
+        if x_direct is None:
+            from repro.core import plan as plan_mod
+            plan = plan_mod.SolverPlan(
+                operator="eo-schur", operator_family=req.operator_family,
+                mu=float(req.mu), backend=cfg.backend)
+            fn, _ = direct_plans.get(plan, mass, cfg.maxiter)
+            x_direct, _ = fn(gauges[req.gauge_id], req.rhs,
+                             jnp.float32(req.tol))
+            memo[key] = x_direct
+        err = float(jnp.max(jnp.abs(res.x - x_direct)))
+        max_err = max(max_err, err)
+    return {"checked": len(results), "direct_solves": len(memo),
+            "max_abs_err": max_err, "tol": VERIFY_TOL,
+            "passed": max_err <= VERIFY_TOL}
+
+
+def run_workload(cfg: WorkloadConfig) -> dict:
+    """Build, serve and summarize one synthetic workload (sync wrapper)."""
+    gauges, requests = build_workload(cfg)
+
+    async def main():
+        server = SolverServer(
+            mass=cfg.mass, backend=cfg.backend, ladder=cfg.ladder,
+            policy=BatchPolicy(max_wait=cfg.max_wait_s,
+                               max_batch=cfg.max_batch),
+            maxiter=cfg.maxiter)
+        for gid, u in gauges.items():
+            server.register_gauge(gid, u)
+        try:
+            warmed = (await server.warmup(families=cfg.families)
+                      if cfg.warmup else 0)
+            results, wall_s = await drive_open_loop(
+                server, requests, burst=cfg.burst,
+                interarrival_s=cfg.interarrival_s)
+            return results, wall_s, warmed, server.metrics()
+        finally:
+            await server.close()
+
+    results, wall_s, warmed, metrics = asyncio.run(main())
+
+    lats_ms = sorted(lat * 1e3 for lat, _ in results)
+    iters = [res.stats.iterations for _, res in results]
+    report = {
+        "schema": 1, "bench": "serve",
+        "generated_by": "repro.serve.loadgen",
+        "lattice": "x".join(str(v) for v in cfg.lattice),
+        "mass": cfg.mass, "tol": cfg.tol, "seed": cfg.seed,
+        "backend": cfg.backend,
+        "n_gauge": cfg.n_gauge,
+        "families": [list(f) for f in cfg.families],
+        "requests": len(results),
+        "burst": cfg.burst, "interarrival_s": cfg.interarrival_s,
+        "ladder": list(cfg.ladder), "max_wait_s": cfg.max_wait_s,
+        "warmup_compiled": warmed,
+        "wall_s": wall_s,
+        "requests_per_s": len(results) / max(wall_s, 1e-9),
+        "latency_ms": {
+            "p50": percentile(lats_ms, 50),
+            "p99": percentile(lats_ms, 99),
+            "mean": sum(lats_ms) / max(len(lats_ms), 1),
+            "max": lats_ms[-1] if lats_ms else float("nan"),
+        },
+        "iters": {"max": max(iters) if iters else 0,
+                  "mean": sum(iters) / max(len(iters), 1)},
+        "all_converged": all(res.stats.converged for _, res in results),
+        **metrics,
+    }
+    if cfg.verify:
+        report["verify"] = verify_against_direct(gauges, requests,
+                                                 results, cfg)
+    return report

@@ -1,0 +1,82 @@
+"""Compiled-plan cache: resolved SolverPlan identity → jitted solve callable.
+
+The serving layer's steady-state latency budget has no room for
+trace/lower/compile — a 4⁴ smoke solve compiles in seconds and runs in
+tens of milliseconds.  This cache keys one jitted solve callable per
+(resolved plan, mass, maxiter):
+
+* the PLAN identity (``SolverPlan.cache_key()``) covers every trace-time
+  axis — operator family, mu (folded into kernel epilogues at trace
+  time), backend, batch rung, precision, kernel knobs;
+* ``mass`` is part of the key because the transport kernels fold the site
+  scale ``mass + 4r`` at trace time;
+* ``maxiter`` bounds the while_loop and is closed over as a Python int;
+* the gauge field, RHS batch and per-RHS tolerance vector are RUNTIME
+  arguments — two gauge fields of the same lattice shape share one
+  compiled callable, and per-request tolerances never force a retrace.
+
+The callable contract is ``fn(u, b, tol) -> (x, SolveStats)`` with ``b``
+shaped to the plan's ``nrhs`` rung and ``tol`` a per-RHS (nrhs,) float32
+vector (scalar for unbatched plans).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import plan as plan_mod
+
+
+class PlanCache:
+    """In-process compiled-plan cache with hit/miss accounting."""
+
+    def __init__(self):
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(plan: plan_mod.SolverPlan, mass: float, maxiter: int):
+        """The hashable cache identity of a (plan, mass, maxiter) solve."""
+        return (plan.cache_key(), float(mass), int(maxiter))
+
+    def get(self, plan: plan_mod.SolverPlan, mass: float,
+            maxiter: int) -> tuple[Callable, bool]:
+        """The jitted solve callable for a plan; (callable, was_cached).
+
+        A miss builds ``jax.jit(lambda u, b, tol: solve(plan, u, b, mass,
+        tol=tol, maxiter=maxiter))`` — compilation itself happens lazily
+        on the first call, per operand shape, inside jax's own cache.
+        """
+        k = self.key(plan, mass, maxiter)
+        fn = self._fns.get(k)
+        if fn is not None:
+            self.hits += 1
+            return fn, True
+        self.misses += 1
+        mass_f, maxiter_i = float(mass), int(maxiter)
+
+        def solve_fn(u, b, tol, _plan=plan):
+            return plan_mod.solve(_plan, u, b, mass_f, tol=tol,
+                                  maxiter=maxiter_i)
+
+        fn = jax.jit(solve_fn)
+        self._fns[k] = fn
+        return fn, False
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __contains__(self, key) -> bool:
+        return key in self._fns
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self), "hits": self.hits,
+                "misses": self.misses, "hit_rate": self.hit_rate}

@@ -1,0 +1,331 @@
+"""Continuous-batching solver server: solve-as-a-service over SolverPlan.
+
+The production shape of "many applications on one optimized CG core"
+(PAPER.md; the heterogeneous follow-up arXiv:2111.14958) is a REQUEST
+STREAM: many independent clients firing right-hand sides at a small set
+of hot gauge fields.  :class:`SolverServer` is that shape as code:
+
+    queue → coalesce → pad to ladder rung → masked batched solve → return
+
+* Requests (:class:`SolveRequest`) name ``(operator_family, mu, gauge_id,
+  rhs, tol)``; gauge fields are registered once and referenced by id.
+* Requests sharing a COALESCE KEY ``(gauge_id, family, mu, mass)`` land
+  in one queue and are dispatched together into the gauge-amortized
+  multi-RHS batched EO-Schur CGNR path (DESIGN.md §6): one compiled solve
+  reads each gauge plane once for the whole batch.
+* Batch formation follows :class:`repro.serve.batching.BatchPolicy`:
+  dispatch when ``max_batch`` requests are queued or ``max_wait`` seconds
+  after the first one, whichever comes first — a lone request is never
+  starved.
+* Dispatched batches are padded to a fixed ladder of batch shapes and
+  solved through the compiled-plan cache
+  (:class:`repro.serve.plan_cache.PlanCache`), so steady state never pays
+  trace/compile.
+* Per-request tolerances ride a per-RHS tolerance VECTOR (a runtime
+  argument of the compiled solve), so mixed-tolerance requests coalesce
+  into one batch instead of fragmenting the queue.
+* Each request completes with the masked-freeze guarantee of PR 3: its
+  returned solution is bitwise the iterate an independent solve would
+  have produced at ITS OWN convergence point — the batch running on for
+  slower systems never perturbs it — and its :class:`RequestStats` report
+  the freeze iteration (``SolveStats.rhs_iterations``), queue time, batch
+  size and plan-cache hit.
+
+Single-accelerator model: one worker thread executes solves in dispatch
+order (the asyncio loop keeps ingesting and batching while a solve runs —
+continuous batching, not stop-and-wait).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import NamedTuple
+
+import jax
+
+from repro.core import plan as plan_mod
+from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
+                                  pad_tols, rung_for, validate_ladder)
+from repro.serve.plan_cache import PlanCache
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One client solve: which operator, which gauge field, which RHS.
+
+    ``rhs`` is a natural-layout (T, Z, Y, X, 4, 3) spinor field.  ``mass``
+    defaults to the server's configured mass; like ``mu`` it is a
+    trace-time constant of the kernels, so it is part of the coalesce key
+    (requests with different masses cannot share a batch).  ``tol`` is a
+    RUNTIME per-RHS argument and never fragments batching.
+    """
+
+    operator_family: str
+    gauge_id: str
+    rhs: Array
+    tol: float = 1e-6
+    mu: float = 0.0
+    mass: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-request serving telemetry."""
+
+    queue_s: float          # submit -> batch dispatch
+    solve_s: float          # the batch solve's wall time (shared)
+    batch_size: int         # real requests in the dispatched batch
+    padded_to: int          # ladder rung the batch was padded to
+    iterations: int         # this request's convergence-mask freeze step
+    converged: bool
+    residual_norm2: float   # final per-RHS ||r||² of the masked CG
+    plan_cache_hit: bool    # was the compiled plan already cached
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    x: Array
+    stats: RequestStats
+
+
+class _Pending(NamedTuple):
+    request: SolveRequest
+    future: asyncio.Future
+    t_enqueue: float
+
+
+class SolverServer:
+    """Async continuous-batching front end over the SolverPlan stack."""
+
+    def __init__(self, *, mass: float = 0.1, backend: str = "reference",
+                 ladder=DEFAULT_LADDER, policy: BatchPolicy | None = None,
+                 maxiter: int = 1000, interpret: bool | None = None,
+                 plan_cache: PlanCache | None = None):
+        self.mass = float(mass)
+        self.backend = backend
+        self.ladder = validate_ladder(ladder)
+        self.policy = policy or BatchPolicy()
+        self.maxiter = int(maxiter)
+        self.interpret = interpret
+        self.plans = plan_cache or PlanCache()
+        self._gauges: dict[str, Array] = {}
+        self._queues: dict[tuple, asyncio.Queue] = {}
+        self._dispatchers: dict[tuple, asyncio.Task] = {}
+        # one worker thread = one accelerator: solves execute in dispatch
+        # order while the event loop keeps forming the next batches
+        self._exec = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="solve")
+        self._closed = False
+        # serving counters (metrics())
+        self._n_requests = 0
+        self._n_batches = 0
+        self._batch_hist: dict[int, int] = {}
+        self._rung_hist: dict[int, int] = {}
+        self._padded_slots = 0
+        self._served = 0
+        self._served_cache_hits = 0
+
+    # -- gauge registry ----------------------------------------------------
+
+    def register_gauge(self, gauge_id: str, u: Array) -> None:
+        """Register a hot gauge field clients may reference by id."""
+        self._gauges[str(gauge_id)] = u
+
+    def gauge_ids(self) -> tuple[str, ...]:
+        return tuple(self._gauges)
+
+    async def warmup(self, families=(("wilson", 0.0),),
+                     rungs=None, masses=None) -> int:
+        """Precompile the batch-shape ladder for the expected traffic.
+
+        Runs one ZERO-RHS solve per (family, mu) × ladder rung × mass
+        against each distinct registered gauge-field shape.  A zero RHS
+        converges at iteration 0 under the per-RHS mask (zero limit), so
+        each warmup call costs exactly one trace+compile and no Krylov
+        iterations — after this, steady-state requests never pay compile
+        (``RequestStats.plan_cache_hit`` is True for every batch whose
+        rung was warmed).  Returns the number of programs compiled.
+        """
+        import jax.numpy as jnp
+
+        loop = asyncio.get_running_loop()
+        rungs = tuple(rungs) if rungs is not None else self.ladder
+        masses = tuple(masses) if masses is not None else (self.mass,)
+        by_shape = {}
+        for u in self._gauges.values():
+            by_shape.setdefault(tuple(u.shape), u)
+        compiled = 0
+        for u in by_shape.values():
+            # gauge (4, T, Z, Y, X, 3, 3) -> spinor (T, Z, Y, X, 4, 3)
+            sshape = tuple(u.shape[1:5]) + (4, 3)
+            for family, mu in families:
+                for rung in rungs:
+                    for mass in masses:
+                        plan = plan_mod.SolverPlan(
+                            operator="eo-schur", operator_family=family,
+                            mu=float(mu), backend=self.backend, nrhs=rung,
+                            interpret=self.interpret)
+                        fn, hit = self.plans.get(plan, float(mass),
+                                                 self.maxiter)
+                        if hit:
+                            continue
+                        b = jnp.zeros((rung,) + sshape, jnp.complex64)
+                        tol = jnp.ones((rung,), jnp.float32)
+
+                        def run(fn=fn, u=u, b=b, tol=tol):
+                            jax.block_until_ready(fn(u, b, tol)[0])
+
+                        await loop.run_in_executor(self._exec, run)
+                        compiled += 1
+        return compiled
+
+    # -- request path ------------------------------------------------------
+
+    def _plan_for(self, request: SolveRequest, nrhs: int | None
+                  ) -> plan_mod.SolverPlan:
+        return plan_mod.SolverPlan(
+            operator="eo-schur", operator_family=request.operator_family,
+            mu=float(request.mu), backend=self.backend, nrhs=nrhs,
+            interpret=self.interpret)
+
+    def _coalesce_key(self, request: SolveRequest) -> tuple:
+        mass = self.mass if request.mass is None else float(request.mass)
+        return (str(request.gauge_id), request.operator_family,
+                float(request.mu), mass)
+
+    async def submit(self, request: SolveRequest) -> SolveResult:
+        """Enqueue one request; resolves when its solution is ready."""
+        if self._closed:
+            raise RuntimeError("SolverServer is closed")
+        if str(request.gauge_id) not in self._gauges:
+            raise KeyError(
+                f"unknown gauge_id {request.gauge_id!r}; registered: "
+                f"{sorted(self._gauges)}")
+        self._plan_for(request, None)  # validate family/mu NOW, not in batch
+        loop = asyncio.get_running_loop()
+        key = self._coalesce_key(request)
+        queue = self._queues.get(key)
+        if queue is None:
+            queue = asyncio.Queue()
+            self._queues[key] = queue
+            self._dispatchers[key] = loop.create_task(
+                self._dispatch_loop(key, queue))
+        future: asyncio.Future = loop.create_future()
+        self._n_requests += 1
+        queue.put_nowait(_Pending(request, future, loop.time()))
+        return await future
+
+    async def _dispatch_loop(self, key: tuple, queue: asyncio.Queue):
+        """Form batches: dispatch at max_batch or max_wait after the first."""
+        loop = asyncio.get_running_loop()
+        max_batch = self.policy.resolved_max_batch(self.ladder)
+        while True:
+            first = await queue.get()
+            batch = [first]
+            deadline = loop.time() + self.policy.max_wait
+            while len(batch) < max_batch:
+                # drain whatever is already queued before sleeping on the
+                # deadline — a backlog dispatches as full batches at once
+                while not queue.empty() and len(batch) < max_batch:
+                    batch.append(queue.get_nowait())
+                if len(batch) >= max_batch:
+                    break
+                timeout = deadline - loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    batch.append(await asyncio.wait_for(queue.get(), timeout))
+                except asyncio.TimeoutError:
+                    break
+            await self._solve_batch(batch)
+
+    async def _solve_batch(self, batch: list[_Pending]):
+        loop = asyncio.get_running_loop()
+        t_dispatch = loop.time()
+        requests = [p.request for p in batch]
+        first = requests[0]
+        rung = rung_for(len(batch), self.ladder)
+        mass = self.mass if first.mass is None else float(first.mass)
+        try:
+            plan = self._plan_for(first, rung)
+            fn, cache_hit = self.plans.get(plan, mass, self.maxiter)
+            u = self._gauges[str(first.gauge_id)]
+            b = pad_batch([r.rhs for r in requests], rung)
+            tol = pad_tols([r.tol for r in requests], rung)
+
+            def run():
+                x, stats = fn(u, b, tol)
+                jax.block_until_ready(x)
+                return x, stats
+
+            x, stats = await loop.run_in_executor(self._exec, run)
+        except Exception as e:  # surface to every caller in the batch
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_exception(
+                        RuntimeError(f"batched solve failed: {e!r}"))
+            return
+        solve_s = loop.time() - t_dispatch
+        self._n_batches += 1
+        self._batch_hist[len(batch)] = self._batch_hist.get(len(batch), 0) + 1
+        self._rung_hist[rung] = self._rung_hist.get(rung, 0) + 1
+        self._padded_slots += rung - len(batch)
+        self._served += len(batch)
+        if cache_hit:
+            self._served_cache_hits += len(batch)
+        rhs_iters = jax.device_get(stats.rhs_iterations)
+        converged = jax.device_get(stats.converged)
+        res2 = jax.device_get(stats.residual_norm2)
+        for i, p in enumerate(batch):
+            st = RequestStats(
+                queue_s=t_dispatch - p.t_enqueue, solve_s=solve_s,
+                batch_size=len(batch), padded_to=rung,
+                iterations=int(rhs_iters[i]), converged=bool(converged[i]),
+                residual_norm2=float(res2[i]), plan_cache_hit=cache_hit)
+            if not p.future.done():
+                p.future.set_result(SolveResult(x=x[i], stats=st))
+
+    # -- lifecycle / telemetry --------------------------------------------
+
+    def metrics(self) -> dict:
+        """Serving counters: requests, batches, histograms, plan cache."""
+        return {
+            "requests": self._n_requests,
+            "batches": self._n_batches,
+            "batch_hist": {str(k): v for k, v
+                           in sorted(self._batch_hist.items())},
+            "rung_hist": {str(k): v for k, v
+                          in sorted(self._rung_hist.items())},
+            "padded_slots": self._padded_slots,
+            # request-level cache experience: the fraction of SERVED
+            # requests whose batch ran through an already-compiled plan
+            # (after warmup this is 1.0 in steady state)
+            "request_cache_hit_rate": (self._served_cache_hits
+                                       / self._served if self._served
+                                       else 0.0),
+            "plan_cache": self.plans.stats(),
+        }
+
+    async def close(self):
+        """Cancel dispatchers and release the worker thread."""
+        self._closed = True
+        for task in self._dispatchers.values():
+            task.cancel()
+        for task in self._dispatchers.values():
+            try:
+                await task
+            except asyncio.CancelledError:
+                pass
+        self._dispatchers.clear()
+        self._queues.clear()
+        self._exec.shutdown(wait=True)
+
+    async def __aenter__(self):
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.close()

@@ -1,0 +1,278 @@
+"""Serving stack: plan cache keying, pad-and-mask, batching policy, server.
+
+The server tests run real (small-lattice) solves through the compiled-plan
+cache; a module-scoped PlanCache is shared across them so each distinct
+(plan, mass, maxiter) program compiles at most once per test session.
+asyncio is driven with ``asyncio.run`` directly — no plugin needed.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.core.plan import SolverPlan
+from repro.serve import (BatchPolicy, PlanCache, SolveRequest, SolverServer,
+                         pad_batch, pad_tols, rung_for, validate_ladder)
+
+MASS = 0.1
+TOL = 1e-6
+MAXITER = 500
+LAT = LatticeShape(4, 4, 4, 4)
+
+
+@pytest.fixture(scope="module")
+def fields():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    gauges = {f"cfg{g}": random_gauge(jax.random.fold_in(ku, g), LAT)
+              for g in range(2)}
+    pool = [random_spinor(jax.random.fold_in(kb, i), LAT) for i in range(8)]
+    return gauges, pool
+
+
+@pytest.fixture(scope="module")
+def plans():
+    # shared across every test in this module: compiles amortize
+    return PlanCache()
+
+
+def _wilson(nrhs):
+    return SolverPlan(operator="eo-schur", operator_family="wilson",
+                      nrhs=nrhs)
+
+
+def _twisted(nrhs, mu=0.25):
+    return SolverPlan(operator="eo-schur", operator_family="twisted-mass",
+                      mu=mu, nrhs=nrhs)
+
+
+# -- plan-cache keying -------------------------------------------------------
+
+def test_plan_cache_same_plan_shares_compiled_callable():
+    cache = PlanCache()
+    fn1, hit1 = cache.get(_wilson(4), MASS, MAXITER)
+    fn2, hit2 = cache.get(_wilson(4), MASS, MAXITER)
+    assert (hit1, hit2) == (False, True)
+    assert fn1 is fn2
+    assert len(cache) == 1
+    assert cache.stats() == {"size": 1, "hits": 1, "misses": 1,
+                             "hit_rate": 0.5}
+
+
+def test_plan_cache_distinguishes_family_mu_nrhs_mass_maxiter():
+    cache = PlanCache()
+    base = (_wilson(4), MASS, MAXITER)
+    cache.get(*base)
+    variants = [
+        (_twisted(4), MASS, MAXITER),          # family (+ mu)
+        (_twisted(4, mu=0.5), MASS, MAXITER),  # mu within a family
+        (_wilson(8), MASS, MAXITER),           # batch rung
+        (_wilson(4), 0.2, MAXITER),            # mass is trace-time
+        (_wilson(4), MASS, 100),               # iteration cap is static
+    ]
+    for i, variant in enumerate(variants):
+        _, hit = cache.get(*variant)
+        assert not hit, f"variant {i} aliased the base plan"
+    assert len(cache) == 1 + len(variants)
+
+
+def test_solver_plan_cache_key_is_stable_and_hashable():
+    a = _wilson(4).cache_key()
+    b = _wilson(4).cache_key()
+    assert a == b and hash(a) == hash(b)
+    assert _wilson(8).cache_key() != a
+    assert _twisted(4).cache_key() != a
+
+
+# -- ladder / padding helpers ------------------------------------------------
+
+def test_rung_for_picks_smallest_sufficient_rung():
+    ladder = validate_ladder((1, 4, 8))
+    assert [rung_for(n, ladder) for n in (1, 2, 4, 5, 8)] == [1, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        rung_for(9, ladder)
+    with pytest.raises(ValueError):
+        validate_ladder(())
+
+
+def test_pad_batch_zero_fills_and_pad_tols_are_inert(fields):
+    _, pool = fields
+    b = pad_batch(pool[:3], 4)
+    assert b.shape == (4,) + pool[0].shape
+    assert np.array_equal(np.asarray(b[2]), np.asarray(pool[2]))
+    assert not np.any(np.asarray(b[3]))
+    tols = pad_tols([1e-6, 1e-8, 1e-6], 4)
+    assert tols.shape == (4,) and float(tols[3]) == 1.0
+
+
+# -- pad-and-mask correctness at every ladder rung ---------------------------
+
+@pytest.mark.parametrize("k,rung", [(1, 1), (3, 4), (5, 8)])
+def test_padded_batch_is_bitwise_the_unpadded_solve(fields, plans, k, rung):
+    """A batch of k padded to a rung returns bitwise the unpadded k-RHS
+    solve: zero-RHS pad slots have a zero stopping limit, so they are
+    inactive from iteration 0 and the masked update never perturbs the
+    real systems."""
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    assert rung_for(k, (1, 4, 8)) == rung
+    b = pad_batch(pool[:k], rung)
+    tol = pad_tols([TOL] * k, rung)
+    fn_pad, _ = plans.get(_wilson(rung), MASS, MAXITER)
+    x_pad, stats = fn_pad(u, b, tol)
+    fn_ref, _ = plans.get(_wilson(k), MASS, MAXITER)
+    x_ref, _ = fn_ref(u, jnp.stack(pool[:k]),
+                      jnp.full((k,), TOL, jnp.float32))
+    assert np.array_equal(np.asarray(x_pad[:k]), np.asarray(x_ref))
+    conv = np.asarray(stats.converged)
+    assert conv[:k].all()
+    # pad slots converge trivially at iteration 0
+    assert np.asarray(stats.rhs_iterations)[k:].max(initial=0) == 0
+
+
+# -- server behaviour --------------------------------------------------------
+
+def _make_server(gauges, plans, **kw):
+    kw.setdefault("mass", MASS)
+    kw.setdefault("maxiter", MAXITER)
+    kw.setdefault("ladder", (1, 4))
+    server = SolverServer(plan_cache=plans, **kw)
+    for gid, u in gauges.items():
+        server.register_gauge(gid, u)
+    return server
+
+
+def _direct(plans, u, rhs, family="wilson", mu=0.0):
+    plan = SolverPlan(operator="eo-schur", operator_family=family, mu=mu)
+    fn, _ = plans.get(plan, MASS, MAXITER)
+    x, _ = fn(u, rhs, jnp.float32(TOL))
+    return x
+
+
+def test_lone_request_dispatches_at_deadline_not_starved(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(gauges, plans,
+                                policy=BatchPolicy(max_wait=0.05)) as server:
+            req = SolveRequest(operator_family="wilson", gauge_id="cfg0",
+                               rhs=pool[0], tol=TOL)
+            # generous timeout: a cold cache pays one compile here, but the
+            # 0.05 s batching deadline must still fire for a batch of ONE
+            result = await asyncio.wait_for(server.submit(req), timeout=120)
+            return result, server.metrics()
+
+    result, metrics = asyncio.run(main())
+    assert result.stats.batch_size == 1
+    assert result.stats.padded_to == 1
+    assert result.stats.converged
+    assert metrics["batch_hist"] == {"1": 1}
+
+
+def test_concurrent_requests_coalesce_into_one_padded_batch(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(
+                gauges, plans,
+                policy=BatchPolicy(max_wait=0.5)) as server:
+            reqs = [SolveRequest(operator_family="wilson", gauge_id="cfg0",
+                                 rhs=pool[i], tol=TOL) for i in range(3)]
+            results = await asyncio.gather(*(server.submit(r) for r in reqs))
+            return results, server.metrics()
+
+    results, metrics = asyncio.run(main())
+    assert metrics["batches"] == 1
+    assert metrics["batch_hist"] == {"3": 1}
+    assert metrics["rung_hist"] == {"4": 1}
+    assert metrics["padded_slots"] == 1
+    gauges_, pool_ = fields
+    for i, res in enumerate(results):
+        assert res.stats.batch_size == 3 and res.stats.padded_to == 4
+        x_direct = _direct(plans, gauges_["cfg0"], pool_[i])
+        assert float(jnp.max(jnp.abs(res.x - x_direct))) <= 1e-5
+
+
+def test_mixed_gauges_and_families_do_not_share_batches(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(
+                gauges, plans,
+                policy=BatchPolicy(max_wait=0.5)) as server:
+            reqs = []
+            for gid in ("cfg0", "cfg1"):
+                for family, mu in (("wilson", 0.0), ("twisted-mass", 0.25)):
+                    for j in range(2):
+                        reqs.append(SolveRequest(
+                            operator_family=family, mu=mu, gauge_id=gid,
+                            rhs=pool[j], tol=TOL))
+            results = await asyncio.gather(*(server.submit(r) for r in reqs))
+            return reqs, results, server.metrics()
+
+    reqs, results, metrics = asyncio.run(main())
+    # 4 coalesce keys (2 gauges x 2 families) x 2 requests each
+    assert metrics["requests"] == 8
+    assert metrics["batches"] == 4
+    assert metrics["batch_hist"] == {"2": 4}
+    for req, res in zip(reqs, results):
+        assert res.stats.converged
+        x_direct = _direct(plans, gauges[req.gauge_id], req.rhs,
+                           family=req.operator_family, mu=req.mu)
+        assert float(jnp.max(jnp.abs(res.x - x_direct))) <= 1e-5
+
+
+def test_warmup_precompiles_ladder_and_requests_hit_cache(fields):
+    gauges, pool = fields
+
+    async def main():
+        # private cache: this test asserts cold-vs-warm behaviour
+        async with _make_server(gauges, PlanCache(), ladder=(1, 2),
+                                policy=BatchPolicy(max_wait=0.2)) as server:
+            warmed = await server.warmup(families=(("wilson", 0.0),))
+            warmed_again = await server.warmup(families=(("wilson", 0.0),))
+            req = SolveRequest(operator_family="wilson", gauge_id="cfg0",
+                               rhs=pool[0], tol=TOL)
+            result = await server.submit(req)
+            return warmed, warmed_again, result, server.metrics()
+
+    warmed, warmed_again, result, metrics = asyncio.run(main())
+    assert warmed == 2          # one program per ladder rung
+    assert warmed_again == 0    # idempotent: everything already cached
+    assert result.stats.plan_cache_hit
+    assert metrics["request_cache_hit_rate"] == 1.0
+
+
+def test_unknown_gauge_id_and_bad_family_fail_fast(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(gauges, plans) as server:
+            with pytest.raises(KeyError, match="unknown gauge_id"):
+                await server.submit(SolveRequest(
+                    operator_family="wilson", gauge_id="nope", rhs=pool[0]))
+            with pytest.raises(Exception):
+                await server.submit(SolveRequest(
+                    operator_family="no-such-family", gauge_id="cfg0",
+                    rhs=pool[0]))
+            return server.metrics()
+
+    metrics = asyncio.run(main())
+    assert metrics["requests"] == 0  # rejected before entering a queue
+
+
+def test_submit_after_close_is_rejected(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        server = _make_server(gauges, plans)
+        await server.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            await server.submit(SolveRequest(
+                operator_family="wilson", gauge_id="cfg0", rhs=pool[0]))
+
+    asyncio.run(main())

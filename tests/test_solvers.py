@@ -156,3 +156,33 @@ def test_solver_respects_maxiter(problem):
     _, st_ = cg(op, rhs, tol=1e-30, maxiter=5)
     assert int(st_.iterations) == 5
     assert not bool(st_.converged)
+
+
+def test_cg_per_rhs_tol_vector_freezes_loose_system_earlier(problem):
+    """tol may be a per-RHS (N,) vector on batched solves (the serving
+    layer coalesces mixed-tolerance requests into one batch): the
+    loose-tol system hits its own limit and freezes before the tight one,
+    and a uniform vector is bitwise the scalar tol."""
+    u, b = problem
+    b2 = random_spinor(jax.random.PRNGKey(3), LAT)
+    op = jax.vmap(lambda v: normal_op(u, v, MASS))
+    rhs = jnp.stack([dslash_dagger(u, b, MASS), dslash_dagger(u, b2, MASS)])
+    x, st_ = cg(op, rhs, tol=jnp.array([1e-6, 1e-2], jnp.float32),
+                maxiter=500, batched=True)
+    assert np.asarray(st_.converged).all()
+    iters = np.asarray(st_.rhs_iterations)
+    assert iters[1] < iters[0]
+    x_vec, s_vec = cg(op, rhs, tol=jnp.full((2,), 1e-6, jnp.float32),
+                      maxiter=500, batched=True)
+    x_scal, s_scal = cg(op, rhs, tol=1e-6, maxiter=500, batched=True)
+    assert np.array_equal(np.asarray(x_vec), np.asarray(x_scal))
+    assert np.array_equal(np.asarray(s_vec.rhs_iterations),
+                          np.asarray(s_scal.rhs_iterations))
+
+
+def test_cg_rejects_tol_vector_on_unbatched_solve(problem):
+    u, b = problem
+    rhs = dslash_dagger(u, b, MASS)
+    with pytest.raises(ValueError, match="tol"):
+        cg(lambda v: normal_op(u, v, MASS), rhs,
+           tol=jnp.array([1e-6, 1e-5], jnp.float32), maxiter=10)
