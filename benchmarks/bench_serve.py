@@ -74,6 +74,15 @@ def main(argv=None) -> int:
             f.write("\n")
         print(f"[bench_serve] wrote {args.out}")
     ok = bool(report["all_converged"])
+    if "chaos" in report:
+        c = report["chaos"]
+        print(f"[bench_serve] chaos: poisoned {c['poisoned_failed']}/"
+              f"{c['poisoned']} failed-classified, healthy "
+              f"{c['healthy_ok']}/{c['healthy']} ok "
+              f"(rescued={c['healthy_rescued_by_retry']}), "
+              f"goodput={c['goodput_rps']:.1f} req/s, "
+              f"containment={'OK' if c['containment_ok'] else 'FAIL'}")
+        ok = ok and c["containment_ok"]
     if "verify" in report:
         v = report["verify"]
         print(f"[bench_serve] verify: max_abs_err={v['max_abs_err']:.2e} "

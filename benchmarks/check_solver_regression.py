@@ -22,6 +22,7 @@ first mismatch.
 Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
         check_solver_regression.py --generate [baseline.json]
         check_solver_regression.py --serve [BENCH_serve.json] [baseline.json]
+        check_solver_regression.py --chaos [BENCH_serve.json] [baseline.json]
 
 ``--generate`` runs the smoke solves itself (no full benchmark harness
 needed) and guards the result — the BLOCKING ``bench-guard`` CI job and
@@ -29,8 +30,12 @@ the standalone/dev mode.  ``--serve`` guards a serving-lane report
 (benchmarks/bench_serve.py --verify) against the baseline's ``serve``
 section: request volume, direct-solve verification, plan-cache hit rate
 after warmup, that coalescing reached a multi-RHS rung, convergence, and
-the iteration-count ceiling.  The artifact-comparing default mode stays
-in the non-blocking smoke-bench job for timing context.
+the iteration-count ceiling.  ``--chaos`` guards a fault-injection report
+(bench_serve.py --chaos) against the baseline's ``chaos`` section: every
+poisoned request failed classified, zero healthy casualties (blast radius
+exactly 1), and both fault surfaces actually exercised.  The
+artifact-comparing default mode stays in the non-blocking smoke-bench job
+for timing context.
 Exit 0 on pass, 1 on regression or missing/invalid inputs.
 """
 
@@ -208,6 +213,62 @@ def _check_serve(table, cur, base):
         table.iters("serve", "iters.max", base_s["max_iters"], iters_max)
 
 
+def _check_chaos(table, cur, base):
+    """Guard a chaos-lane report against the baseline ``chaos`` section.
+
+    The chaos lane (bench_serve.py --chaos --chaos-fault-every N) poisons
+    a fraction of the RHS stream and injects transient gauge faults into
+    primary batch dispatches.  The containment contract (DESIGN.md §10):
+
+    * every poisoned request fails WITH A CLASSIFIED VERDICT — none is
+      silently served;
+    * blast radius is exactly 1: zero healthy requests fail or come back
+      unverified, however many shared a batch with a poison or a fault;
+    * the lane actually exercised both fault surfaces (min_poisoned
+      poisons admitted to the stream, transient injection enabled).
+    """
+    base_c = base.get("chaos")
+    if not base_c:
+        table.missing("chaos", "(baseline section)", "present")
+        return
+    c = cur.get("chaos")
+    if not c:
+        # the report was not produced with --chaos: nothing was injected,
+        # so the containment properties were never exercised
+        table.missing("chaos", "(report section)", "present")
+        return
+    poisoned = int(c.get("poisoned", 0))
+    need_poison = int(base_c.get("min_poisoned", 1))
+    table.add("chaos", "poisoned", f">={need_poison}", poisoned, need_poison,
+              "OK" if poisoned >= need_poison else "REGRESSION")
+    failed = int(c.get("poisoned_failed", 0))
+    table.add("chaos", "poisoned_failed", poisoned, failed, poisoned,
+              "OK" if failed == poisoned else "REGRESSION")
+    served = int(c.get("poisoned_served", -1))
+    table.add("chaos", "poisoned_served", 0, served, 0,
+              "OK" if served == 0 else "REGRESSION")
+    for metric in ("healthy_failed", "healthy_unverified"):
+        got = int(c.get(metric, -1))
+        table.add("chaos", metric, 0, got, 0,
+                  "OK" if got == 0 else "REGRESSION")
+    fault_every = int(c.get("fault_every", 0))
+    need_fault = bool(base_c.get("require_fault_injection", True))
+    if need_fault:
+        table.add("chaos", "fault_every", ">=1", fault_every, 1,
+                  "OK" if fault_every >= 1 else "REGRESSION")
+    ok = bool(c.get("containment_ok", False))
+    table.add("chaos", "containment_ok", True, ok, "-",
+              "OK" if ok else "REGRESSION")
+    v = cur.get("verify")
+    if v is not None:
+        # when the chaos lane also re-solves served responses directly,
+        # the comparison must still pass — containment may not trade
+        # correctness of the healthy stream for isolation
+        table.add("chaos", "verify.max_abs_err", f"<={v.get('tol')}",
+                  v.get("max_abs_err"), v.get("tol"),
+                  "OK" if v.get("passed") else "REGRESSION")
+
+
 def _load(path: str, what: str) -> dict | None:
     try:
         with open(path) as f:
@@ -220,21 +281,25 @@ def _load(path: str, what: str) -> dict | None:
 def main(argv: list[str]) -> int:
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_solvers_baseline.json")
-    if len(argv) > 1 and argv[1] == "--serve":
+    if len(argv) > 1 and argv[1] in ("--serve", "--chaos"):
+        mode = argv[1].lstrip("-")
         cur_path = argv[2] if len(argv) > 2 else "BENCH_serve.json"
         if len(argv) > 3:
             base_path = argv[3]
-        cur = _load(cur_path, "serve report")
+        cur = _load(cur_path, f"{mode} report")
         base = _load(base_path, "baseline")
         if cur is None or base is None:
             return 1
         table = _Table()
-        _check_serve(table, cur, base)
+        if mode == "serve":
+            _check_serve(table, cur, base)
+        else:
+            _check_chaos(table, cur, base)
         table.print()
         if table.failed:
-            print("serve guard: FAILED — see the non-OK rows above")
+            print(f"{mode} guard: FAILED — see the non-OK rows above")
             return 1
-        print("serve guard: passed")
+        print(f"{mode} guard: passed")
         return 0
     if len(argv) > 1 and argv[1] == "--generate":
         if len(argv) > 2:

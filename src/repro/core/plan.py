@@ -60,11 +60,12 @@ from repro import compat
 from repro.core import distributed as dist
 from repro.core import solvers
 from repro.core.eo import EOContext, eo_context
-from repro.core.lattice import (complex_to_real_pair, field_dot, field_norm2,
-                                merge_eo, pack_gauge, pack_spinor,
+from repro.core.lattice import (complex_to_real_pair, field_dot,
+                                field_norm2, field_norm2_batched, merge_eo,
+                                pack_gauge, pack_spinor,
                                 real_pair_to_complex, split_eo,
                                 split_eo_gauge, unpack_spinor)
-from repro.core.operators import (SiteTerm, get_operator,
+from repro.core.operators import (SiteTerm, dslash_g, get_operator,
                                   schur_normal_op_g, unknown_name)
 from repro.core.precision import parse_dtype
 
@@ -238,12 +239,64 @@ def resolve(plan: SolverPlan, u: Array, mass, *,
                       interpret=plan.interpret, out_dtype=out_dtype)
 
 
+# Post-solve verification gate: the recomputed TRUE residual must satisfy
+# ‖b - D x‖ ≤ VERIFY_FACTOR · tol · ‖b‖.  The slack absorbs the gap
+# between the CGNR stopping rule (residual of the NORMAL equations) and
+# the original system's residual; a solve that misses even this relaxed
+# gate cannot be trusted regardless of what the solver's own recurrence
+# claimed (see DESIGN.md §10).
+VERIFY_FACTOR = 10.0
+
+
+def _attach_verification(plan: SolverPlan, u: Array, b: Array, mass,
+                         x: Array, stats: solvers.SolveStats, tol,
+                         layout: str = "natural") -> solvers.SolveStats:
+    """One extra matvec: recompute the true residual of ``D x = b``.
+
+    The oracle is the operator REGISTRY's natural-layout ``dslash_g``
+    (packed solves verify through the packed transport's ``dslash``, the
+    same operator on the wire format) — deliberately independent of the
+    Schur/normal-equation transforms the solver iterated on, so a broken
+    transport cannot vouch for itself.  Fills ``true_residual_norm2`` and
+    ``verified`` on the stats and upgrades the verdict to NONFINITE when
+    the true residual is not finite.  Runs entirely on device — inside a
+    jitted plan callable it adds zero host syncs and exactly one operator
+    application after the iteration loop.
+    """
+    site = _family_site(plan, mass)
+    if layout == "packed":
+        # u/b/x are packed real fields here; wops.dslash takes a leading
+        # RHS-batch axis natively
+        from repro.kernels.wilson_dslash import ops as wops
+        ax = wops.dslash(u, x, float(mass), twist=site.twist, bz=plan.bz,
+                         interpret=plan.interpret,
+                         use_pallas=plan.backend == "pallas")
+    else:
+        apply_d = lambda v: dslash_g(u, v, mass, r=plan.r, twist=site.twist)
+        ax = jax.vmap(apply_d)(x) if plan.batched else apply_d(x)
+    r_true = b - ax.astype(b.dtype)
+    norm2_fn = field_norm2_batched if plan.batched else field_norm2
+    rs_true = jnp.real(norm2_fn(r_true))
+    bs = jnp.real(norm2_fn(b))
+    tol_a = jnp.asarray(tol).astype(rs_true.dtype)
+    gate = (VERIFY_FACTOR * tol_a) ** 2 * bs
+    finite = jnp.isfinite(rs_true)
+    verified = jnp.logical_and(rs_true <= gate, finite)
+    verdict = stats.verdict
+    if verdict is not None:
+        verdict = jnp.where(finite, verdict,
+                            jnp.asarray(solvers.NONFINITE, verdict.dtype))
+    return stats._replace(true_residual_norm2=rs_true, verified=verified,
+                          verdict=verdict)
+
+
 def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
           tol: float = 1e-8, maxiter: int = 1000,
           inner_tol: float = 5e-2, inner_maxiter: int = 200,
           max_outer: int = 50, residual_replacement_every: int = 25,
           dot=field_dot, norm2=field_norm2,
-          layout: str = "natural") -> tuple[Array, solvers.SolveStats]:
+          layout: str = "natural",
+          verify: bool = True) -> tuple[Array, solvers.SolveStats]:
     """Execute a :class:`SolverPlan`: the single entry point of the stack.
 
     Args:
@@ -257,6 +310,12 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
       residual_replacement_every: pipecg drift control.
       dot/norm2: injectable reductions (single-device plans; mesh plans
         build their own psum-fused reductions).
+      verify: attach the post-solve true-residual verification matvec
+        (one extra operator application AFTER the iteration loop; the
+        default).  ``False`` is for callers that verify the solution
+        themselves (e.g. the retry ladder, which checks the accumulated
+        iterate against the original system) — they must not treat the
+        returned x as trusted.
     Returns:
       (x, SolveStats) — solution in the input layout; per-RHS stats
       fields (residual_norm2/converged/rhs_iterations) when batched.
@@ -278,21 +337,29 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
                 raise NotImplementedError(
                     "sharded eo-schur supports precision='single' (the "
                     "mixed-precision Schur solve is single-device for now)")
-            return _solve_eo_sharded(plan, u, b, mass, **kw)
-        if plan.batched:
-            raise NotImplementedError(
-                "sharded full-operator solves are single-RHS; use "
-                "operator='eo-schur' for the sharded batched fast path")
-        return _solve_full_sharded(plan, u, b, mass, layout=layout, **kw)
-    if plan.operator == "eo-schur":
+            x, stats = _solve_eo_sharded(plan, u, b, mass, **kw)
+        else:
+            if plan.batched:
+                raise NotImplementedError(
+                    "sharded full-operator solves are single-RHS; use "
+                    "operator='eo-schur' for the sharded batched fast path")
+            x, stats = _solve_full_sharded(plan, u, b, mass, layout=layout,
+                                           **kw)
+    elif plan.operator == "eo-schur":
         if plan.precision == "mixed":
             if plan.batched:
                 raise NotImplementedError(
                     "batched mixed-precision eo-schur is not wired yet; "
                     "drop nrhs or precision")
-            return _solve_eo_mp(plan, u, b, mass, **kw)
-        return _solve_eo(plan, u, b, mass, **kw)
-    return _solve_full(plan, u, b, mass, layout=layout, **kw)
+            x, stats = _solve_eo_mp(plan, u, b, mass, **kw)
+        else:
+            x, stats = _solve_eo(plan, u, b, mass, **kw)
+    else:
+        x, stats = _solve_full(plan, u, b, mass, layout=layout, **kw)
+    if verify:
+        stats = _attach_verification(plan, u, b, mass, x, stats, tol,
+                                     layout=layout)
+    return x, stats
 
 
 def _check_batch_shape(plan: SolverPlan, b: Array, layout: str):
@@ -505,7 +572,7 @@ def _solve_full_sharded(plan, u, b, mass, *, tol, maxiter, inner_tol,
         return solvers.cg(lambda v: op(up_l, v), rhs, tol=tol,
                           maxiter=maxiter, dot=pdot, norm2=pnorm2)
 
-    stats_spec = solvers.SolveStats(P(), P(), P(), P(), None)
+    stats_spec = solvers.SolveStats(P(), P(), P(), P(), None, verdict=P())
     shmapped = compat.shard_map(
         local_solve, mesh=mesh,
         in_specs=(gauge_spec, psi_spec),
@@ -620,7 +687,8 @@ def _sharded_eo_solver(plan: SolverPlan, mass: float, tol: float,
         return x_e, x_o, st
 
     stats_spec = solvers.SolveStats(P(), P(), P(), P(),
-                                    P() if batched else None)
+                                    P() if batched else None,
+                                    verdict=P())
     solver = jax.jit(compat.shard_map(
         local_solve, mesh=mesh,
         in_specs=(gauge_spec, gauge_spec, bspec, bspec),

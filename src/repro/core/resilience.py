@@ -1,0 +1,206 @@
+"""Retry/escalation for defended solves (DESIGN.md §10).
+
+A verdict from :mod:`repro.core.solvers` classifies WHY a solve exited;
+this module decides WHAT TO DO about it.  :func:`defended_solve` walks a
+:class:`RetryPolicy` ladder:
+
+1. **Restart** — re-enter the same plan as a defect-correction step: the
+   TRUE residual ``r = b - D x`` of the current (finite) iterate is
+   recomputed and the solver is asked for the correction ``D d = r``,
+   rescaled to the remaining relative tolerance.  Krylov information is
+   discarded but accumulated progress is kept — exactly the paper's
+   reliable-update idea applied across solve attempts instead of across
+   precisions.  A non-finite iterate cannot seed a restart; those
+   attempts start over from zero.
+2. **Escalate precision** — a ``precision="mixed"``/``"low"`` plan that
+   failed re-runs with ``precision="single"``: reliable-update drift and
+   low-precision stagnation disappear when every iteration is wide.
+3. **Fall back to the reference backend** — a ``backend="pallas"`` plan
+   that still fails re-runs on the jnp reference transport, removing the
+   optimized kernels from the trust chain entirely.
+
+Attempts are capped; exhaustion raises a structured :class:`SolveFailure`
+carrying the per-attempt history, so a caller (the serving layer, a CLI)
+can log exactly what was tried and why each rung failed.  Success at any
+rung returns stats whose ``verified`` gate passed — ``defended_solve``
+never returns an unverified solution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.core.lattice import field_norm2, field_norm2_batched
+from repro.core.operators import dslash_g
+from repro.core.solvers import verdict_name
+
+__all__ = ["AttemptRecord", "RetryPolicy", "SolveFailure", "defended_solve"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttemptRecord:
+    """One rung of the ladder, as it actually ran."""
+
+    attempt: int               # 0-based
+    plan_desc: str             # "eo-schur/pallas/mixed" style summary
+    restarted: bool            # seeded from the previous finite iterate
+    iterations: int
+    verdict: str               # VERDICTS name
+    verified: bool
+    residual_norm2: float      # solver's own final ‖r‖² (recurrence)
+    true_residual_norm2: float  # verification matvec's ‖b - D x‖²
+
+
+class SolveFailure(RuntimeError):
+    """Raised when the retry ladder is exhausted without a verified solve.
+
+    Carries the classified verdict of the LAST attempt plus the full
+    attempt history — loud and structured, never a silent bad x.
+    """
+
+    def __init__(self, message: str, *, verdict: str,
+                 attempts: tuple[AttemptRecord, ...]):
+        super().__init__(message)
+        self.verdict = verdict
+        self.attempts = attempts
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """The escalation ladder for :func:`defended_solve`.
+
+    ``max_attempts`` counts total solve attempts (the first try
+    included).  Escalations apply in order — precision first (cheap to
+    keep the fast transport), backend second — and each stays in effect
+    for the remaining attempts.
+    """
+
+    max_attempts: int = 3
+    escalate_precision: bool = True
+    fallback_backend: bool = True
+    restart_from_iterate: bool = True
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"RetryPolicy.max_attempts must be >= 1, got "
+                f"{self.max_attempts}")
+
+    def ladder(self, plan: plan_mod.SolverPlan
+               ) -> tuple[plan_mod.SolverPlan, ...]:
+        """The distinct plans the policy is willing to run, in order."""
+        rungs = [plan]
+        if self.escalate_precision and plan.precision != "single":
+            rungs.append(dataclasses.replace(plan, precision="single"))
+        if self.fallback_backend:
+            for rung in list(rungs):
+                if rung.backend == "pallas":
+                    fallback = dataclasses.replace(rung, backend="reference")
+                    if fallback not in rungs:
+                        rungs.append(fallback)
+        return tuple(rungs)
+
+
+def _plan_desc(plan: plan_mod.SolverPlan) -> str:
+    return (f"{plan.operator}/{plan.operator_family}/{plan.backend}/"
+            f"{plan.precision}")
+
+
+def _scalar(v) -> float:
+    return float(np.asarray(v))
+
+
+def _all(v) -> bool:
+    return bool(np.asarray(v).all())
+
+
+def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
+                   tol: float = 1e-8, maxiter: int = 1000,
+                   policy: RetryPolicy | None = None,
+                   **solve_kw):
+    """Run ``plan.solve`` under a retry/escalation ladder.
+
+    Returns ``(x, stats, attempts)`` where every returned solve has
+    ``stats.verified`` True for all right-hand sides.  Raises
+    :class:`SolveFailure` when ``policy.max_attempts`` attempts across
+    the ladder all fail verification.
+
+    Restart semantics: when the previous attempt left a FINITE iterate,
+    the next attempt solves the defect system ``D d = r`` with
+    ``r = b - D x`` recomputed fresh (one matvec through the registry
+    oracle) and a tolerance rescaled by ``‖b‖/‖r‖``, then accumulates
+    ``x + d``.  Breakdown/NaN iterates restart from zero instead.
+    """
+    policy = RetryPolicy() if policy is None else policy
+    ladder = policy.ladder(plan)
+    site = plan.site_term(float(mass))
+
+    def true_residual(x):
+        apply_d = lambda v: dslash_g(u, v, mass, r=plan.r, twist=site.twist)
+        if plan.batched:
+            return b - jax.vmap(apply_d)(x).astype(b.dtype)
+        return b - apply_d(x).astype(b.dtype)
+
+    norm2 = field_norm2_batched if plan.batched else field_norm2
+    bs = jnp.real(norm2(b))
+    attempts: list[AttemptRecord] = []
+    x_acc = None          # accumulated finite iterate (None: start from 0)
+    last_verdict = "nonfinite"
+    for attempt in range(policy.max_attempts):
+        rung = ladder[min(attempt, len(ladder) - 1)]
+        restarted = False
+        rhs, rhs_tol = b, tol
+        if x_acc is not None and policy.restart_from_iterate:
+            r = true_residual(x_acc)
+            rs = jnp.real(norm2(r))
+            if _all(jnp.isfinite(rs)):
+                # defect correction: solve D d = r to the REMAINING
+                # relative tolerance tol·‖b‖ / ‖r‖ (capped: the restart
+                # must still tighten the iterate)
+                scale = jnp.sqrt(bs / jnp.where(rs == 0, 1.0, rs))
+                rhs_tol = jnp.minimum(
+                    jnp.asarray(tol, jnp.float32) * scale.astype(jnp.float32),
+                    jnp.float32(0.1))
+                rhs = r
+                restarted = True
+            else:
+                x_acc = None  # poisoned iterate: restart from scratch
+        x, stats = plan_mod.solve(rung, u, rhs, mass, tol=rhs_tol,
+                                  maxiter=maxiter, **solve_kw)
+        x_try = x if not restarted else x_acc + x
+        # verify the ACCUMULATED iterate against the original system (the
+        # per-attempt stats verified the defect system only)
+        r_fin = true_residual(x_try)
+        rs_fin = jnp.real(norm2(r_fin))
+        gate = (plan_mod.VERIFY_FACTOR * jnp.asarray(tol, rs_fin.dtype)) ** 2 * bs
+        ok = jnp.logical_and(rs_fin <= gate, jnp.isfinite(rs_fin))
+        verdict_code = (stats.verdict if stats.verdict is not None
+                        else jnp.where(stats.converged, 0, 1))
+        worst = int(np.asarray(verdict_code).max())
+        last_verdict = verdict_name(worst) if not _all(ok) else "converged"
+        attempts.append(AttemptRecord(
+            attempt=attempt, plan_desc=_plan_desc(rung), restarted=restarted,
+            iterations=int(np.asarray(stats.iterations)),
+            verdict=verdict_name(worst),
+            verified=_all(ok),
+            residual_norm2=_scalar(np.asarray(stats.residual_norm2).max()),
+            true_residual_norm2=_scalar(np.asarray(rs_fin).max())))
+        if _all(ok):
+            stats = stats._replace(
+                true_residual_norm2=rs_fin,
+                verified=jnp.broadcast_to(jnp.asarray(True), ok.shape),
+                verdict=jnp.zeros_like(jnp.asarray(verdict_code)),
+                converged=jnp.broadcast_to(jnp.asarray(True), ok.shape))
+            return x_try, stats, tuple(attempts)
+        # keep a finite iterate as the next restart seed
+        x_acc = x_try if _all(jnp.isfinite(rs_fin)) else None
+    raise SolveFailure(
+        f"defended_solve: {policy.max_attempts} attempt(s) exhausted "
+        f"without a verified solution (last verdict: {last_verdict}; "
+        f"ladder: {[_plan_desc(p) for p in ladder]})",
+        verdict=last_verdict, attempts=tuple(attempts))

@@ -67,6 +67,59 @@ class SolveStats(NamedTuple):
     # unbatched solves, so the pytree structure of legacy stats (and the
     # shard_map out_specs built from them) is unchanged.
     rhs_iterations: Array | None = None
+    # failure-taxonomy verdict code (int32; per-RHS (N,) for batched
+    # solves): an index into ``VERDICTS``.  Computed from loop-exit state
+    # only — no host syncs and no extra device work inside the iteration
+    # body.  ``converged`` stays the raw ``rs <= limit`` bool; ``verdict``
+    # is the classified WHY when it is False.
+    verdict: Array | None = None
+    # filled by plan.solve's post-solve verification matvec (None straight
+    # out of a raw solver): the squared TRUE residual ``‖b - A x‖²``
+    # recomputed through the operator registry, and whether it meets the
+    # verification gate.  See plan._attach_verification.
+    true_residual_norm2: Array | None = None
+    verified: Array | None = None
+
+
+# ---------------------------------------------------------------------------
+# Failure taxonomy
+# ---------------------------------------------------------------------------
+#
+# Every solver classifies its exit into one of these verdicts, carried on
+# ``SolveStats.verdict`` as an int32 code (per-RHS for batched solves).
+# Classification reads only loop-exit carries — breakdown/stagnation flags
+# are accumulated as cheap scalar lanes inside the while-loop carry, so the
+# hot iteration body gains zero host syncs and zero extra field passes.
+
+CONVERGED, MAXITER_EXHAUSTED, BREAKDOWN, STAGNATION, NONFINITE = range(5)
+VERDICTS = ("converged", "maxiter_exhausted", "breakdown", "stagnation",
+            "nonfinite")
+
+# a solve is "stagnant" when ‖r‖² fails to shrink by STAGNATION_FACTOR over
+# the last STAGNATION_WINDOW iterations (healthy CG on these operators
+# contracts far faster; see DESIGN.md §10)
+STAGNATION_WINDOW = 25
+STAGNATION_FACTOR = 0.5
+
+
+def verdict_name(code) -> str:
+    """Host-side: map a verdict code (python int / 0-d array) to its name."""
+    return VERDICTS[int(code)]
+
+
+def classify(rs: Array, limit: Array, broken=False, stalled=False) -> Array:
+    """Classify a solver exit from its final ``‖r‖²`` and failure flags.
+
+    Precedence (most → least specific): converged, breakdown, nonfinite,
+    stagnation, maxiter_exhausted.  NaN comparisons are False, so a
+    non-finite residual never classifies as converged.
+    """
+    rs = jnp.asarray(rs)
+    v = jnp.where(jnp.asarray(stalled), STAGNATION, MAXITER_EXHAUSTED)
+    v = jnp.where(~jnp.isfinite(rs), NONFINITE, v)
+    v = jnp.where(jnp.asarray(broken), BREAKDOWN, v)
+    v = jnp.where(rs <= limit, CONVERGED, v)
+    return jnp.broadcast_to(v, rs.shape).astype(jnp.int32)
 
 
 def _real(x):
@@ -155,22 +208,43 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     limit = _stop_limit(tol, bs, batched)
 
     def cond(carry):
-        k, x, r, p, rs = carry[:5]
-        return jnp.logical_and(k < maxiter, jnp.any(rs > limit))
+        k, rs = carry[0], carry[4]
+        broken = carry[6] if batched else carry[5]
+        # a broken-down system cannot progress: drop it from the loop's
+        # liveness test so one poisoned RHS never burns maxiter for the
+        # batch (classified BREAKDOWN at exit).  NaN rs compares False, so
+        # non-finite systems go inactive here with no extra checks.
+        alive = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+        return jnp.logical_and(k < maxiter, jnp.any(alive))
 
     def body(carry):
         k, x, r, p, rs = carry[:5]
+        if batched:
+            it, broken, rs_mark = carry[5:8]
+        else:
+            broken, rs_mark = carry[5:7]
+        # stagnation watermark: snapshot ‖r‖² every STAGNATION_WINDOW
+        # iterations; exit-time classification compares against it
+        rs_mark = jnp.where(k % STAGNATION_WINDOW == 0, rs, rs_mark)
         ap = op(p)
         pap = _real(dot(p, ap))
         if batched:
-            active = rs > limit
-            # alpha = 0 both for frozen systems AND on p·Ap breakdown (the
-            # unbatched path fails visibly as inf/NaN; a masked batch must
-            # skip the update, matching cg_trace's convention)
+            active = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+            # alpha = 0 both for frozen systems AND on p·Ap breakdown: a
+            # masked batch must skip the update (matching cg_trace's
+            # convention), and the breakdown flag both stops the loop for
+            # that system and classifies its exit
             safe = jnp.logical_and(active, pap != 0)
+            broken = jnp.logical_or(broken,
+                                    jnp.logical_and(active, pap == 0))
             alpha = jnp.where(safe, rs / jnp.where(pap == 0, 1.0, pap), 0.0)
         else:
-            alpha = rs / pap
+            # guarded division: on p·Ap breakdown the iterate stays finite
+            # and the loop exits with verdict=BREAKDOWN instead of flooding
+            # x with inf/NaN (bitwise rs/pap whenever pap != 0)
+            safe = pap != 0
+            broken = jnp.logical_or(broken, pap == 0)
+            alpha = jnp.where(safe, rs / jnp.where(safe, pap, 1.0), 0.0)
         if update is None:
             a = (_bcast(alpha, b) if batched else alpha).astype(b.dtype)
             x = x + a * p
@@ -184,23 +258,30 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
         if xpay is None:
             bb = (_bcast(beta, b) if batched else beta).astype(b.dtype)
             p_new = r + bb * p
-            p = jnp.where(_bcast(active, b), p_new, p) if batched else p_new
+            p = jnp.where(_bcast(safe, b), p_new, p) if batched else p_new
         else:
-            p = xpay(beta, r, p, active) if batched else xpay(beta, r, p)
+            p = xpay(beta, r, p, safe) if batched else xpay(beta, r, p)
         if batched:
             # per-RHS trip counts: a system still active this step ran it
-            it = jnp.where(active, k + 1, carry[5])
-            return (k + 1, x, r, p, rs_new, it)
-        return (k + 1, x, r, p, rs_new)
+            it = jnp.where(active, k + 1, it)
+            return (k + 1, x, r, p, rs_new, it, broken, rs_mark)
+        return (k + 1, x, r, p, rs_new, broken, rs_mark)
 
     init = (jnp.asarray(0, jnp.int32), x, r, p, rs)
     if batched:
         init = init + (jnp.zeros_like(rs, jnp.int32),)
+    init = init + (jnp.zeros(rs.shape, bool), rs)
     out = jax.lax.while_loop(cond, body, init)
     k, x, r, p, rs = out[:5]
+    broken, rs_mark = out[-2:]
+    # exit-time stagnation test: ran past a full window yet ‖r‖² failed to
+    # contract by STAGNATION_FACTOR since the last watermark
+    stalled = jnp.logical_and(k >= STAGNATION_WINDOW,
+                              rs > STAGNATION_FACTOR * rs_mark)
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
                        residual_norm2=rs, converged=rs <= limit,
-                       rhs_iterations=out[5] if batched else None)
+                       rhs_iterations=out[5] if batched else None,
+                       verdict=classify(rs, limit, broken, stalled))
     return x, stats
 
 
@@ -413,11 +494,19 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     limit = _stop_limit(tol, bs, batched)
 
     def cond(carry):
-        outer, inner_total, x, r, rs = carry[:5]
-        return jnp.logical_and(outer < max_outer, jnp.any(rs > limit))
+        outer, rs = carry[0], carry[4]
+        broken = carry[-2]
+        # drop broken-down systems from the liveness test (see cg.cond);
+        # a non-finite reliable-update rs compares False and goes inactive
+        # here — this IS the "non-finite detection at reliable-update
+        # boundaries" point: no checks inside the inner iteration body
+        alive = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+        return jnp.logical_and(outer < max_outer, jnp.any(alive))
 
     def body(carry):
         outer, inner_total, x, r, rs = carry[:5]
+        broken, rs_mark = carry[-2:]
+        rs_mark = rs  # previous outer cycle's true ‖r‖², for stagnation
         rhs = r
         if batched:  # freeze converged systems: zero RHS -> inactive inner CG
             rhs = jnp.where(_bcast(rs > limit, r), r, jnp.zeros_like(r))
@@ -425,23 +514,31 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
         d, st = cg(op_low, r_low, tol=inner_tol, maxiter=inner_maxiter,
                    dot=dot, norm2=norm2, update=update, xpay=xpay,
                    batched=batched)
+        broken = jnp.logical_or(broken, st.verdict == BREAKDOWN)
         x = x + to_high(d)
         r = b - op_high(x)                     # reliable update (true residual)
         rs = _real(norm2(r))
         out = (outer + 1, inner_total + st.iterations, x, r, rs)
         if batched:  # per-RHS inner-iteration totals across outer cycles
             out = out + (carry[5] + st.rhs_iterations,)
-        return out
+        return out + (broken, rs_mark)
 
     init = (jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
             jnp.zeros_like(b), b, bs)
     if batched:
         init = init + (jnp.zeros_like(bs, jnp.int32),)
+    init = init + (jnp.zeros(bs.shape, bool), bs)
     out = jax.lax.while_loop(cond, body, init)
     outer, inner_total, x, r, rs = out[:5]
+    broken, rs_mark = out[-2:]
+    # outer-cycle stagnation: a reliable update that failed to contract the
+    # true residual by STAGNATION_FACTOR over the last cycle
+    stalled = jnp.logical_and(outer >= 2,
+                              rs > STAGNATION_FACTOR * rs_mark)
     stats = SolveStats(iterations=inner_total, outer_iterations=outer,
                        residual_norm2=rs, converged=rs <= limit,
-                       rhs_iterations=out[5] if batched else None)
+                       rhs_iterations=out[5] if batched else None,
+                       verdict=classify(rs, limit, broken, stalled))
     return x, stats
 
 
@@ -501,14 +598,17 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
             jnp.zeros_like(gamma), jnp.asarray(True))
     if batched:
         init = init + (jnp.zeros_like(gamma, jnp.int32),)
+    init = init + (jnp.zeros(gamma.shape, bool),)
 
     def cond(c):
-        k, gamma = c[0], c[7]
-        return jnp.logical_and(k < maxiter, jnp.any(gamma > limit))
+        k, gamma, broken = c[0], c[7], c[-1]
+        alive = jnp.logical_and(gamma > limit, jnp.logical_not(broken))
+        return jnp.logical_and(k < maxiter, jnp.any(alive))
 
     def body(c):
         (k, x, r, w, z, q, p, gamma, delta, alpha_prev, gamma_prev,
          restarted) = c[:12]
+        broken = c[-1]
         m = op(w)  # ← overlaps the (gamma, delta) reduction
         beta = jnp.where(restarted, 0.0,
                          gamma / jnp.where(gamma_prev == 0, 1.0, gamma_prev))
@@ -516,7 +616,9 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
                                                  alpha_prev)
         alpha = gamma / jnp.where(denom == 0, 1.0, denom)
         if batched:
-            active = gamma > limit
+            active = jnp.logical_and(gamma > limit, jnp.logical_not(broken))
+            broken = jnp.logical_or(broken,
+                                    jnp.logical_and(active, denom == 0))
             alpha = jnp.where(active, alpha, 0.0)  # freeze x/r/w bitwise
             bb, aa = _bcast(beta, b).astype(dt), _bcast(alpha, b).astype(dt)
             gate = _bcast(active, b)
@@ -528,6 +630,7 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
             p = jnp.where(gate, r + bb * p, p)
         else:
             bb = aa = None
+            broken = jnp.logical_or(broken, denom == 0)
             z = m + beta.astype(dt) * z
             q = w + beta.astype(dt) * q
             p = r + beta.astype(dt) * p
@@ -551,13 +654,14 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
                do_replace)
         if batched:
             out = out + (jnp.where(active, k + 1, c[12]),)
-        return out
+        return out + (broken,)
 
     out = jax.lax.while_loop(cond, body, init)
-    k, x, gamma = out[0], out[1], out[7]
+    k, x, gamma, broken = out[0], out[1], out[7], out[-1]
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
                        residual_norm2=gamma, converged=gamma <= limit,
-                       rhs_iterations=out[12] if batched else None)
+                       rhs_iterations=out[12] if batched else None,
+                       verdict=classify(gamma, limit, broken))
     return x, stats
 
 
@@ -567,7 +671,16 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
 
 def bicgstab(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
              dot=field_dot, norm2=field_norm2) -> tuple[Array, SolveStats]:
-    """BiCGStab for general (non-Hermitian) operators such as D itself."""
+    """BiCGStab for general (non-Hermitian) operators such as D itself.
+
+    ``tol`` goes through :func:`_stop_limit` like every other solver, so a
+    per-RHS tolerance VECTOR raises the same loud ``ValueError`` here
+    (bicgstab has no batched mode to give it meaning).  The method's
+    classic breakdowns — ``(rhat, r) = 0``, ``(rhat, v) = 0`` and a zero
+    stabilizer norm ``‖t‖² = 0`` — set the breakdown flag and exit with
+    ``verdict=BREAKDOWN`` instead of silently iterating on a guarded-away
+    division.
+    """
     x = jnp.zeros_like(b)
     r = b
     rhat = r
@@ -575,34 +688,42 @@ def bicgstab(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
     # scalar carries take the dtype of the injected dot (complex for complex b)
     one = dot(b, b) * 0 + 1
     bs = _real(norm2(b))
-    limit = (tol ** 2) * bs
+    limit = _stop_limit(tol, bs, False)
 
     init = (jnp.asarray(0, jnp.int32), x, r, jnp.zeros_like(b),
-            jnp.zeros_like(b), one, one, one, _real(norm2(r)))
+            jnp.zeros_like(b), one, one, one, _real(norm2(r)),
+            jnp.asarray(False))
 
     def cond(c):
-        k, x, r, p, v, rho, alpha, omega, rs = c
-        return jnp.logical_and(k < maxiter, rs > limit)
+        k, rs, broken = c[0], c[8], c[9]
+        return jnp.logical_and(
+            k < maxiter,
+            jnp.logical_and(rs > limit, jnp.logical_not(broken)))
 
     def body(c):
-        k, x, r, p, v, rho, alpha, omega, rs = c
+        k, x, r, p, v, rho, alpha, omega, rs, broken = c
         rho_new = dot(rhat, r)
+        broken = jnp.logical_or(broken, rho_new == 0)
         beta = (rho_new / jnp.where(rho == 0, 1.0, rho)) * \
                (alpha / jnp.where(omega == 0, 1.0, omega))
         p = r + beta.astype(dt) * (p - omega.astype(dt) * v)
         v = op(p)
         denom = dot(rhat, v)
+        broken = jnp.logical_or(broken, denom == 0)
         alpha_new = rho_new / jnp.where(denom == 0, 1.0, denom)
         s = r - alpha_new.astype(dt) * v
         t = op(s)
         tn = _real(norm2(t))
+        broken = jnp.logical_or(broken, tn == 0)
         omega_new = dot(t, s) / jnp.where(tn == 0, 1.0, tn)
         x = x + alpha_new.astype(dt) * p + omega_new.astype(dt) * s
         r = s - omega_new.astype(dt) * t
         return (k + 1, x, r, p, v, rho_new, alpha_new, omega_new,
-                _real(norm2(r)))
+                _real(norm2(r)), broken)
 
-    k, x, r, p, v, rho, alpha, omega, rs = jax.lax.while_loop(cond, body, init)
+    out = jax.lax.while_loop(cond, body, init)
+    k, x, rs, broken = out[0], out[1], out[8], out[9]
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
-                       residual_norm2=rs, converged=rs <= limit)
+                       residual_norm2=rs, converged=rs <= limit,
+                       verdict=classify(rs, limit, broken))
     return x, stats

@@ -51,7 +51,11 @@ def build_config(args) -> WorkloadConfig:
         rhs_pool=args.rhs_pool, seed=args.seed, ladder=ladder,
         max_wait_s=args.max_wait_ms / 1e3, max_batch=args.max_batch,
         backend=args.backend, maxiter=args.maxiter,
-        warmup=not args.no_warmup, verify=args.verify)
+        warmup=not args.no_warmup, verify=args.verify,
+        deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        chaos=args.chaos, chaos_poison_fraction=args.chaos_poison_fraction,
+        chaos_fault_every=args.chaos_fault_every,
+        chaos_fault_mode=args.chaos_fault_mode)
 
 
 def make_parser() -> argparse.ArgumentParser:
@@ -87,6 +91,23 @@ def make_parser() -> argparse.ArgumentParser:
                         "trace/compile)")
     p.add_argument("--verify", action="store_true",
                    help="re-solve every response directly and compare")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request deadline; expired requests fail with "
+                        "SolveTimeout without consuming a batch slot")
+    p.add_argument("--chaos", action="store_true",
+                   help="poison a fraction of the RHS stream and (with "
+                        "--chaos-fault-every) inject transient faults; "
+                        "report goodput + containment counters")
+    p.add_argument("--chaos-poison-fraction", type=float, default=0.1,
+                   help="fraction of requests given a corrupted RHS "
+                        "(alternating NaN and overflow poisons)")
+    p.add_argument("--chaos-fault-every", type=int, default=0,
+                   help="fire a transient fault on every N-th primary "
+                        "batch dispatch (0 = off)")
+    p.add_argument("--chaos-fault-mode", default="gauge_nan_plane",
+                   choices=["gauge_nan_plane", "gauge_bitflip", "stall",
+                            "raise"],
+                   help="transient fault model for --chaos-fault-every")
     p.add_argument("--out", default=None,
                    help="write the BENCH_serve.json report here")
     return p
@@ -116,7 +137,20 @@ def main(argv=None):
           f"request_hit_rate={report['request_cache_hit_rate']:.3f}")
     ok = bool(report["all_converged"])
     if not ok:
-        print("[serve_solver] FAIL: not every request converged")
+        print("[serve_solver] FAIL: not every served request converged "
+              "and verified")
+    if "chaos" in report:
+        c = report["chaos"]
+        print(f"[serve_solver] chaos: poisoned={c['poisoned']} "
+              f"(failed={c['poisoned_failed']} "
+              f"served={c['poisoned_served']}) healthy={c['healthy']} "
+              f"(ok={c['healthy_ok']} failed={c['healthy_failed']} "
+              f"unverified={c['healthy_unverified']} "
+              f"rescued={c['healthy_rescued_by_retry']})")
+        print(f"[serve_solver] chaos: goodput={c['goodput_rps']:.1f} req/s "
+              f"failure_verdicts={c['failure_verdicts']} "
+              f"containment={'OK' if c['containment_ok'] else 'FAIL'}")
+        ok = ok and c["containment_ok"]
     if "verify" in report:
         v = report["verify"]
         print(f"[serve_solver] verify: {v['checked']} responses vs "

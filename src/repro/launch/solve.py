@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import LatticeShape, dslash_flops, random_spinor
 from repro.core import plan as plan_mod
+from repro.core import solvers
 from repro.core.operators import dslash_g, get_operator, operator_names
 from repro.data import lattice_problem
 from repro.launch.mesh import make_debug_mesh
@@ -130,6 +131,8 @@ def main(argv=None):
     # true residual against the FAMILY's full operator (registry oracle)
     twist = plan.twist
     op = lambda v: dslash_g(u, v, m, twist=twist)
+    verdicts = jnp.atleast_1d(st.verdict) if st.verdict is not None else None
+    verified = jnp.atleast_1d(st.verified) if st.verified is not None else None
     if plan.nrhs is not None:
         res = jax.vmap(lambda xx, bb: op(xx) - bb)(xsol, b)
         rels = (jnp.linalg.norm(res.reshape(plan.nrhs, -1), axis=1)
@@ -140,12 +143,33 @@ def main(argv=None):
             f"rhs{i}={n}" for i, n in enumerate(per_rhs)))
         print("[solve] per-RHS rel_res:   " + " ".join(
             f"rhs{i}={float(r):.2e}" for i, r in enumerate(rels)))
+        if verdicts is not None:
+            print("[solve] per-RHS verdict:   " + " ".join(
+                f"rhs{i}={solvers.verdict_name(v)}"
+                + ("" if bool(verified[i]) else "(UNVERIFIED)")
+                for i, v in enumerate(verdicts)))
         n_systems = plan.nrhs
     else:
         res = op(xsol) - b
         rel = float(jnp.linalg.norm(res.ravel())
                     / jnp.linalg.norm(b.ravel()))
+        if verdicts is not None:
+            print(f"[solve] verdict: {solvers.verdict_name(verdicts[0])} "
+                  f"verified={bool(verified[0])}")
         n_systems = 1
+
+    # a solve SUCCEEDS only when every RHS both converged by the taxonomy
+    # and passed the true-residual verification matvec (DESIGN.md §10)
+    ok = rel < 10 * args.tol
+    if verdicts is not None:
+        ok = ok and all(
+            int(v) == solvers.CONVERGED and bool(verified[i])
+            for i, v in enumerate(verdicts))
+        if not ok:
+            bad = [(i, solvers.verdict_name(v)) for i, v in enumerate(verdicts)
+                   if int(v) != solvers.CONVERGED or not bool(verified[i])]
+            print("[solve] FAIL: " + " ".join(
+                f"rhs{i}:{name}" for i, name in bad))
 
     # each CGNR iteration applies D and D^dag (2 dslash) + vector algebra;
     # the even-odd Schur matvec does the same work on half-size fields.
@@ -154,7 +178,7 @@ def main(argv=None):
     print(f"[solve] lattice={shape} solver={args.solver} iters={iters} "
           f"max_rel_res={rel:.2e} time={dt:.2f}s "
           f"~{flops/dt/1e9:.2f} GFLOP/s (CPU, interpret-mode kernels)")
-    return 0 if rel < 10 * args.tol else 1
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

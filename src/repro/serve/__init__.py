@@ -1,8 +1,15 @@
 """Solve-as-a-service: the continuous-batching solver server.
 
 Public surface:
-  server     — SolverServer (async queue → coalesce → pad → batched solve),
+  server     — SolverServer (async admit → queue → coalesce → pad →
+               batched solve → verify → contain),
                SolveRequest / SolveResult / RequestStats
+  errors     — the structured failure types (RequestRejected,
+               ServerOverloaded, SolveTimeout, RequestFailed,
+               ServerClosed)
+  chaos      — deterministic fault injectors (BatchFaultInjector,
+               poisoned-RHS helpers) driving the containment tests and
+               the loadgen --chaos lane
   batching   — the pre-compiled batch-shape ladder + BatchPolicy
   plan_cache — PlanCache: resolved SolverPlan → jitted solve callable
   loadgen    — WorkloadConfig / run_workload: synthetic open-loop load
@@ -11,6 +18,10 @@ Public surface:
 
 from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
                                   pad_tols, rung_for, validate_ladder)
+from repro.serve.chaos import (BatchFaultInjector, InjectedFault, bit_flip,
+                               nan_plane, poison_nan, poison_overflow)
+from repro.serve.errors import (RequestFailed, RequestRejected, ServerClosed,
+                                ServerOverloaded, SolveTimeout)
 from repro.serve.loadgen import (WorkloadConfig, build_workload,
                                  drive_open_loop, run_workload,
                                  verify_against_direct)

@@ -1,0 +1,135 @@
+"""Deterministic fault injection for the defended serving stack.
+
+Chaos harness for DESIGN.md §10: every injector is DETERMINISTIC (fires
+on a fixed call schedule, corrupts fixed coordinates) so the containment
+tests and the ``loadgen --chaos`` CI lane are exactly reproducible.
+
+Two fault surfaces:
+
+* **Poisoned inputs** — :func:`poison_nan` / :func:`poison_overflow`
+  corrupt a right-hand side the way a broken producer would.  A NaN RHS
+  is caught at ADMISSION; an overflow RHS (finite entries whose norm²
+  overflows float32) passes admission and must be caught by the in-solve
+  taxonomy + verification — the defense-in-depth case.
+* **Transient faults** — :class:`BatchFaultInjector` wraps the server
+  worker's view of ``(gauge, rhs)`` (``SolverServer(fault_injector=...)``)
+  and corrupts every N-th SOLVE CALL: a NaN plane or an exponent bit-flip
+  in the gauge field (the accelerator-memory fault model of the FPGA
+  deployment lineage), a worker stall (the hung-device model, driving
+  deadline expiry), or a raised :class:`InjectedFault` (the hard-crash
+  model, driving batch bisection).  Faults are transient: the injector
+  fires once per schedule slot, so the server's clean individual re-solve
+  of an affected batch rescues every healthy member — which is precisely
+  the containment property the chaos gate asserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+__all__ = ["InjectedFault", "BatchFaultInjector", "poison_nan",
+           "poison_overflow", "nan_plane", "bit_flip"]
+
+_MODES = ("gauge_nan_plane", "gauge_bitflip", "stall", "raise")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``mode="raise"`` injector: the hard-crash fault model."""
+
+
+# -- poisoned-input helpers (host-side, numpy: requests are built on host) --
+
+
+def poison_nan(rhs: Array, site: int = 0) -> Array:
+    """A NaN-poisoned RHS: what a broken producer hands the server.
+    Caught at admission when validation is on; classified ``nonfinite``
+    by the solve taxonomy when it is off (defense in depth)."""
+    flat = np.asarray(rhs).copy().reshape(-1)
+    flat[site] = np.nan
+    return jnp.asarray(flat.reshape(np.asarray(rhs).shape))
+
+
+def poison_overflow(rhs: Array, scale: float = 1e25) -> Array:
+    """An overflow-poisoned RHS: every entry FINITE, but ‖b‖² overflows
+    float32 — passes the admission finiteness check by construction, so
+    only the in-solve nonfinite taxonomy (and the verification matvec)
+    can catch it.  The masked batched CG keeps such a lane inactive from
+    iteration 0 (its stopping limit is inf/NaN), which is what bounds its
+    blast radius to itself."""
+    return (jnp.asarray(rhs) * scale).astype(jnp.asarray(rhs).dtype)
+
+
+# -- transient gauge-field corruptors ---------------------------------------
+
+
+def nan_plane(u: Array, t: int = 0) -> Array:
+    """NaN out one time-plane of the gauge field (axis 1 of the natural
+    (4, T, Z, Y, X, 3, 3) layout): the lost-memory-page fault model."""
+    return jnp.asarray(u).at[:, t].set(jnp.nan)
+
+
+def bit_flip(u: Array, site: int = 0) -> Array:
+    """Flip the top exponent bit of one float32 word of the gauge field —
+    a single-event upset.  The value jumps by a factor ~2^128, so the
+    solve's residual recurrence is violently perturbed and verification
+    (or the nonfinite taxonomy, once norms overflow) must catch it."""
+    host = np.asarray(u).copy()
+    words = host.view(np.float32).reshape(-1)
+    bits = words[site:site + 1].view(np.uint32)
+    bits ^= np.uint32(1 << 30)
+    return jnp.asarray(host)
+
+
+@dataclasses.dataclass
+class BatchFaultInjector:
+    """Deterministic transient-fault injector for ``SolverServer``.
+
+    Wraps the worker's ``(u, b)`` just before the compiled solve runs.
+    Fires when ``calls % every == at`` (0-based call counter), so a
+    test or the loadgen chaos lane can schedule exactly which solves are
+    hit.  All faults are TRANSIENT: the next call sees clean fields.
+
+    Modes:
+      gauge_nan_plane:  NaN one gauge time-plane (→ nonfinite verdicts)
+      gauge_bitflip:    exponent bit-flip in one gauge word
+      stall:            sleep ``stall_s`` in the worker thread (deadline
+                        and backpressure fault model); fields untouched
+      raise:            raise :class:`InjectedFault` (batch bisection)
+    """
+
+    mode: str = "gauge_nan_plane"
+    every: int = 4
+    at: int = 0
+    stall_s: float = 0.5
+    calls: int = 0
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown chaos mode {self.mode!r}; pick one of {_MODES}")
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+
+    def __call__(self, u: Array, b: Array) -> tuple[Array, Array]:
+        fire = self.calls % self.every == self.at % self.every
+        self.calls += 1
+        if not fire:
+            return u, b
+        self.fired += 1
+        if self.mode == "raise":
+            raise InjectedFault(
+                f"injected crash (call {self.calls - 1})")
+        if self.mode == "stall":
+            time.sleep(self.stall_s)
+            return u, b
+        if self.mode == "gauge_nan_plane":
+            return nan_plane(u), b
+        return bit_flip(u), b

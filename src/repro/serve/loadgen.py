@@ -63,11 +63,35 @@ class WorkloadConfig:
     maxiter: int = 500
     warmup: bool = True
     verify: bool = False
+    # optional per-request deadline (seconds in queue before SolveTimeout)
+    deadline_s: float | None = None
+    # -- chaos mode (DESIGN.md §10): deterministic fault injection ---------
+    chaos: bool = False
+    # fraction of the stream poisoned; every round(1/f)-th request gets a
+    # corrupted RHS, alternating NaN (admission-ring test) and overflow
+    # (finite entries, overflowing norm — the defense-in-depth test that
+    # must be caught by the solve taxonomy + verification instead)
+    chaos_poison_fraction: float = 0.1
+    # fire a transient gauge fault on every N-th primary batch dispatch
+    # (0 = off); the server's individual clean re-solve must rescue every
+    # healthy member of an affected batch
+    chaos_fault_every: int = 0
+    chaos_fault_mode: str = "gauge_nan_plane"
+
+
+def poisoned_indices(cfg: WorkloadConfig) -> frozenset[int]:
+    """Which request indices the chaos mode poisons (deterministic)."""
+    if not cfg.chaos or cfg.chaos_poison_fraction <= 0:
+        return frozenset()
+    stride = max(1, round(1.0 / cfg.chaos_poison_fraction))
+    return frozenset(range(0, cfg.requests, stride))
 
 
 def build_workload(cfg: WorkloadConfig
                    ) -> tuple[dict[str, jax.Array], list[SolveRequest]]:
     """Deterministic gauge fields + request list for a workload config."""
+    from repro.serve.chaos import poison_nan, poison_overflow
+
     lat = LatticeShape(*cfg.lattice)
     key = jax.random.PRNGKey(cfg.seed)
     ku, kb = jax.random.split(key)
@@ -76,26 +100,44 @@ def build_workload(cfg: WorkloadConfig
     pool = [random_spinor(jax.random.fold_in(kb, i), lat)
             for i in range(cfg.rhs_pool)]
     gauge_ids = sorted(gauges)
+    poison = poisoned_indices(cfg)
     requests = []
     for i in range(cfg.requests):
         family, mu = cfg.families[i % len(cfg.families)]
+        rhs = pool[i % cfg.rhs_pool]
+        if i in poison:
+            # alternate the two poison classes: NaN exercises the
+            # admission ring, overflow (finite entries) must sail through
+            # admission and be caught by taxonomy + verification
+            rhs = (poison_nan(rhs) if (i // max(1, round(
+                1.0 / cfg.chaos_poison_fraction))) % 2 == 0
+                else poison_overflow(rhs))
         requests.append(SolveRequest(
             operator_family=family, mu=mu,
             gauge_id=gauge_ids[(i // len(cfg.families)) % cfg.n_gauge],
-            rhs=pool[i % cfg.rhs_pool], tol=cfg.tol))
+            rhs=rhs, tol=cfg.tol, deadline_s=cfg.deadline_s))
     return gauges, requests
 
 
 async def drive_open_loop(server: SolverServer,
                           requests: list[SolveRequest], *, burst: int,
                           interarrival_s: float
-                          ) -> tuple[list[tuple[float, SolveResult]], float]:
-    """Fire the request schedule; [(latency_s, result)] in request order."""
+                          ) -> tuple[list[tuple[float, object]], float]:
+    """Fire the request schedule; [(latency_s, outcome)] in request order.
+
+    An outcome is a :class:`SolveResult` OR the structured exception the
+    server failed the request with — an open-loop generator must keep
+    firing through failures (that is the point of the chaos lane), so
+    failures are data here, not aborts.
+    """
 
     async def fire(req: SolveRequest, delay: float):
         await asyncio.sleep(delay)
         t0 = time.perf_counter()
-        result = await server.submit(req)
+        try:
+            result = await server.submit(req)
+        except Exception as e:  # containment failures are outcomes
+            return time.perf_counter() - t0, e
         return time.perf_counter() - t0, result
 
     t0 = time.perf_counter()
@@ -128,7 +170,11 @@ def verify_against_direct(gauges: dict, requests: list[SolveRequest],
     direct_plans = PlanCache()
     memo: dict = {}
     max_err = 0.0
+    checked = 0
     for req, (_, res) in zip(requests, results):
+        if not isinstance(res, SolveResult):
+            continue  # failed outcomes carry no x to verify
+        checked += 1
         mass = cfg.mass if req.mass is None else float(req.mass)
         key = (req.gauge_id, req.operator_family, float(req.mu), mass,
                float(req.tol), id(req.rhs))
@@ -144,21 +190,80 @@ def verify_against_direct(gauges: dict, requests: list[SolveRequest],
             memo[key] = x_direct
         err = float(jnp.max(jnp.abs(res.x - x_direct)))
         max_err = max(max_err, err)
-    return {"checked": len(results), "direct_solves": len(memo),
+    return {"checked": checked, "direct_solves": len(memo),
             "max_abs_err": max_err, "tol": VERIFY_TOL,
             "passed": max_err <= VERIFY_TOL}
+
+
+def summarize_chaos(cfg: WorkloadConfig,
+                    results: list[tuple[float, object]],
+                    wall_s: float) -> dict:
+    """Containment scorecard: goodput + blast-radius accounting.
+
+    The chaos gate (DESIGN.md §10): every HEALTHY request must return a
+    verified solution, every POISONED request must fail with a classified
+    verdict, and nothing else may fail — blast radius exactly 1 per
+    poisoned request.
+    """
+    poison = poisoned_indices(cfg)
+    healthy_ok = healthy_failed = healthy_unverified = 0
+    poisoned_failed = poisoned_served = 0
+    rescued = 0
+    verdict_hist: dict[str, int] = {}
+    for i, (_, res) in enumerate(results):
+        if isinstance(res, SolveResult):
+            if i in poison:
+                poisoned_served += 1  # containment HOLE: must stay 0
+            elif not (res.stats.converged and res.stats.verified):
+                healthy_unverified += 1  # server must never deliver this
+            else:
+                healthy_ok += 1
+                if res.stats.retried:
+                    rescued += 1
+        else:
+            verdict = getattr(res, "verdict",
+                              getattr(res, "reason", type(res).__name__))
+            verdict_hist[verdict] = verdict_hist.get(verdict, 0) + 1
+            if i in poison:
+                poisoned_failed += 1
+            else:
+                healthy_failed += 1
+    return {
+        "poisoned": len(poison),
+        "poisoned_failed": poisoned_failed,
+        "poisoned_served": poisoned_served,
+        "healthy": len(results) - len(poison),
+        "healthy_ok": healthy_ok,
+        "healthy_failed": healthy_failed,
+        "healthy_unverified": healthy_unverified,
+        "healthy_rescued_by_retry": rescued,
+        "failure_verdicts": dict(sorted(verdict_hist.items())),
+        "goodput_rps": healthy_ok / max(wall_s, 1e-9),
+        "fault_every": cfg.chaos_fault_every,
+        "poison_fraction": cfg.chaos_poison_fraction,
+        # the acceptance criterion as one bool: blast radius == 1 per
+        # poisoned request and zero healthy casualties
+        "containment_ok": (healthy_failed == 0 and healthy_unverified == 0
+                           and poisoned_served == 0
+                           and poisoned_failed == len(poison)),
+    }
 
 
 def run_workload(cfg: WorkloadConfig) -> dict:
     """Build, serve and summarize one synthetic workload (sync wrapper)."""
     gauges, requests = build_workload(cfg)
+    injector = None
+    if cfg.chaos and cfg.chaos_fault_every > 0:
+        from repro.serve.chaos import BatchFaultInjector
+        injector = BatchFaultInjector(mode=cfg.chaos_fault_mode,
+                                      every=cfg.chaos_fault_every)
 
     async def main():
         server = SolverServer(
             mass=cfg.mass, backend=cfg.backend, ladder=cfg.ladder,
             policy=BatchPolicy(max_wait=cfg.max_wait_s,
                                max_batch=cfg.max_batch),
-            maxiter=cfg.maxiter)
+            maxiter=cfg.maxiter, fault_injector=injector)
         for gid, u in gauges.items():
             server.register_gauge(gid, u)
         try:
@@ -173,8 +278,10 @@ def run_workload(cfg: WorkloadConfig) -> dict:
 
     results, wall_s, warmed, metrics = asyncio.run(main())
 
-    lats_ms = sorted(lat * 1e3 for lat, _ in results)
-    iters = [res.stats.iterations for _, res in results]
+    served = [(lat, res) for lat, res in results
+              if isinstance(res, SolveResult)]
+    lats_ms = sorted(lat * 1e3 for lat, _ in served)
+    iters = [res.stats.iterations for _, res in served]
     report = {
         "schema": 1, "bench": "serve",
         "generated_by": "repro.serve.loadgen",
@@ -184,11 +291,13 @@ def run_workload(cfg: WorkloadConfig) -> dict:
         "n_gauge": cfg.n_gauge,
         "families": [list(f) for f in cfg.families],
         "requests": len(results),
+        "served": len(served),
+        "failed": len(results) - len(served),
         "burst": cfg.burst, "interarrival_s": cfg.interarrival_s,
         "ladder": list(cfg.ladder), "max_wait_s": cfg.max_wait_s,
         "warmup_compiled": warmed,
         "wall_s": wall_s,
-        "requests_per_s": len(results) / max(wall_s, 1e-9),
+        "requests_per_s": len(served) / max(wall_s, 1e-9),
         "latency_ms": {
             "p50": percentile(lats_ms, 50),
             "p99": percentile(lats_ms, 99),
@@ -197,9 +306,17 @@ def run_workload(cfg: WorkloadConfig) -> dict:
         },
         "iters": {"max": max(iters) if iters else 0,
                   "mean": sum(iters) / max(len(iters), 1)},
-        "all_converged": all(res.stats.converged for _, res in results),
-        **metrics,
+        # every SERVED request must be converged AND verified — failures
+        # surface as structured exceptions, never as a bad x
+        "all_converged": all(res.stats.converged and res.stats.verified
+                             for _, res in served),
+        # server metrics count ADMITTED requests; the report's "requests"
+        # above counts all outcomes including admission rejections
+        **{("admitted" if k == "requests" else k): v
+           for k, v in metrics.items()},
     }
+    if cfg.chaos:
+        report["chaos"] = summarize_chaos(cfg, results, wall_s)
     if cfg.verify:
         report["verify"] = verify_against_direct(gauges, requests,
                                                  results, cfg)

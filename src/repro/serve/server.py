@@ -5,7 +5,8 @@ The production shape of "many applications on one optimized CG core"
 STREAM: many independent clients firing right-hand sides at a small set
 of hot gauge fields.  :class:`SolverServer` is that shape as code:
 
-    queue → coalesce → pad to ladder rung → masked batched solve → return
+    admit → queue → coalesce → pad to ladder rung → masked batched solve
+          → verify → contain → return
 
 * Requests (:class:`SolveRequest`) name ``(operator_family, mu, gauge_id,
   rhs, tol)``; gauge fields are registered once and referenced by id.
@@ -31,6 +32,33 @@ of hot gauge fields.  :class:`SolverServer` is that shape as code:
   the freeze iteration (``SolveStats.rhs_iterations``), queue time, batch
   size and plan-cache hit.
 
+Defense layer (DESIGN.md §10):
+
+* **Admission**: non-finite RHS / tolerance / parameters are rejected at
+  ``submit`` with :class:`~repro.serve.errors.RequestRejected` before
+  ever touching a queue.
+* **Deadlines**: ``SolveRequest.deadline_s`` seconds after submission an
+  undispatched request fails with
+  :class:`~repro.serve.errors.SolveTimeout` and its batch slot is freed.
+* **Backpressure**: each coalesce-key queue is bounded
+  (``max_queue_depth``); an arrival over the bound fails immediately
+  with :class:`~repro.serve.errors.ServerOverloaded`.
+* **Verification + blast-radius containment**: every solved lane must
+  pass the plan's true-residual verification (``converged`` AND
+  ``verified``).  A failing lane in a multi-request batch is re-solved
+  INDIVIDUALLY once (rescuing victims of a transient fault or of a
+  poisoned neighbour); a batch whose solve RAISES is bisected the same
+  way.  A lane that still fails gets a classified
+  :class:`~repro.serve.errors.RequestFailed` — so the blast radius of
+  one poisoned RHS is exactly that one request.
+* **Drain on close**: ``close()`` completes queued and in-flight work
+  before shutting down; ``close(drain=False)`` aborts, failing every
+  pending request with :class:`~repro.serve.errors.ServerClosed` instead
+  of hanging its awaiter.
+* **Fault injection**: ``fault_injector`` (see :mod:`repro.serve.chaos`)
+  wraps the worker's view of ``(gauge, rhs)`` — the chaos harness that
+  drives the containment tests and the ``loadgen --chaos`` lane.
+
 Single-accelerator model: one worker thread executes solves in dispatch
 order (the asyncio loop keeps ingesting and batching while a solve runs —
 continuous batching, not stop-and-wait).
@@ -40,17 +68,26 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import math
 from concurrent.futures import ThreadPoolExecutor
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import plan as plan_mod
+from repro.core.solvers import verdict_name
 from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
                                   pad_tols, rung_for, validate_ladder)
+from repro.serve.errors import (RequestFailed, RequestRejected, ServerClosed,
+                                ServerOverloaded, SolveTimeout)
 from repro.serve.plan_cache import PlanCache
 
 Array = jax.Array
+
+# drain sentinel: close() pushes one through each coalesce queue so the
+# dispatcher finishes everything queued ahead of it, then exits cleanly
+_CLOSE = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +99,11 @@ class SolveRequest:
     trace-time constant of the kernels, so it is part of the coalesce key
     (requests with different masses cannot share a batch).  ``tol`` is a
     RUNTIME per-RHS argument and never fragments batching.
+
+    ``deadline_s`` (seconds from submission, None = no deadline) bounds
+    the time the request may sit in the batching queue: a request still
+    undispatched at its deadline fails with :class:`SolveTimeout` and
+    does NOT consume a slot in the batch it would have joined.
     """
 
     operator_family: str
@@ -70,6 +112,7 @@ class SolveRequest:
     tol: float = 1e-6
     mu: float = 0.0
     mass: float | None = None
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +127,10 @@ class RequestStats:
     converged: bool
     residual_norm2: float   # final per-RHS ||r||² of the masked CG
     plan_cache_hit: bool    # was the compiled plan already cached
+    verdict: str = "converged"        # classified exit (VERDICTS name)
+    verified: bool = True             # true-residual verification gate
+    true_residual_norm2: float = 0.0  # ‖b - D x‖² from the verify matvec
+    retried: bool = False   # served by the individual containment re-solve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +143,7 @@ class _Pending(NamedTuple):
     request: SolveRequest
     future: asyncio.Future
     t_enqueue: float
+    t_deadline: float | None
 
 
 class SolverServer:
@@ -104,7 +152,10 @@ class SolverServer:
     def __init__(self, *, mass: float = 0.1, backend: str = "reference",
                  ladder=DEFAULT_LADDER, policy: BatchPolicy | None = None,
                  maxiter: int = 1000, interpret: bool | None = None,
-                 plan_cache: PlanCache | None = None):
+                 plan_cache: PlanCache | None = None,
+                 admission_validation: bool = True,
+                 max_queue_depth: int = 256,
+                 fault_injector: Callable | None = None):
         self.mass = float(mass)
         self.backend = backend
         self.ladder = validate_ladder(ladder)
@@ -112,6 +163,13 @@ class SolverServer:
         self.maxiter = int(maxiter)
         self.interpret = interpret
         self.plans = plan_cache or PlanCache()
+        self.admission_validation = bool(admission_validation)
+        if max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {max_queue_depth}")
+        self.max_queue_depth = int(max_queue_depth)
+        # test hook (serve/chaos.py): rewrites the worker's (u, b) view
+        self.fault_injector = fault_injector
         self._gauges: dict[str, Array] = {}
         self._queues: dict[tuple, asyncio.Queue] = {}
         self._dispatchers: dict[tuple, asyncio.Task] = {}
@@ -128,6 +186,15 @@ class SolverServer:
         self._padded_slots = 0
         self._served = 0
         self._served_cache_hits = 0
+        # containment counters (metrics()["containment"])
+        self._admission_rejected = 0
+        self._overload_rejected = 0
+        self._deadline_expired = 0
+        self._batch_failures = 0
+        self._lane_retries = 0
+        self._lane_retries_rescued = 0
+        self._failed_requests = 0
+        self._verdict_hist: dict[str, int] = {}
 
     # -- gauge registry ----------------------------------------------------
 
@@ -150,8 +217,6 @@ class SolverServer:
         (``RequestStats.plan_cache_hit`` is True for every batch whose
         rung was warmed).  Returns the number of programs compiled.
         """
-        import jax.numpy as jnp
-
         loop = asyncio.get_running_loop()
         rungs = tuple(rungs) if rungs is not None else self.ladder
         masses = tuple(masses) if masses is not None else (self.mass,)
@@ -197,6 +262,29 @@ class SolverServer:
         return (str(request.gauge_id), request.operator_family,
                 float(request.mu), mass)
 
+    def _admit(self, request: SolveRequest) -> None:
+        """Admission-time validation: reject a poisoned request before it
+        can touch a queue (first containment ring; see module docstring).
+        One host-synced all-finite reduction per request — admission cost,
+        never solve-loop cost."""
+        tol = float(request.tol) if jnp.ndim(request.tol) == 0 else None
+        if tol is None or not math.isfinite(tol) or tol <= 0:
+            self._admission_rejected += 1
+            raise RequestRejected(
+                f"tol must be a finite positive scalar, got {request.tol!r}",
+                reason="bad_tol")
+        for name, value in (("mu", request.mu), ("mass", request.mass),
+                            ("deadline_s", request.deadline_s)):
+            if value is not None and not math.isfinite(float(value)):
+                self._admission_rejected += 1
+                raise RequestRejected(
+                    f"{name} must be finite, got {value!r}",
+                    reason=f"bad_{name}")
+        if not bool(jnp.all(jnp.isfinite(request.rhs))):
+            self._admission_rejected += 1
+            raise RequestRejected(
+                "rhs contains non-finite entries", reason="nonfinite_rhs")
+
     async def submit(self, request: SolveRequest) -> SolveResult:
         """Enqueue one request; resolves when its solution is ready."""
         if self._closed:
@@ -206,6 +294,8 @@ class SolverServer:
                 f"unknown gauge_id {request.gauge_id!r}; registered: "
                 f"{sorted(self._gauges)}")
         self._plan_for(request, None)  # validate family/mu NOW, not in batch
+        if self.admission_validation:
+            self._admit(request)
         loop = asyncio.get_running_loop()
         key = self._coalesce_key(request)
         queue = self._queues.get(key)
@@ -214,9 +304,18 @@ class SolverServer:
             self._queues[key] = queue
             self._dispatchers[key] = loop.create_task(
                 self._dispatch_loop(key, queue))
+        if queue.qsize() >= self.max_queue_depth:
+            self._overload_rejected += 1
+            raise ServerOverloaded(
+                f"queue for coalesce key {key} is at its bound "
+                f"({self.max_queue_depth}); back off and retry",
+                queue_depth=queue.qsize())
         future: asyncio.Future = loop.create_future()
         self._n_requests += 1
-        queue.put_nowait(_Pending(request, future, loop.time()))
+        now = loop.time()
+        deadline = (None if request.deadline_s is None
+                    else now + float(request.deadline_s))
+        queue.put_nowait(_Pending(request, future, now, deadline))
         return await future
 
     async def _dispatch_loop(self, key: tuple, queue: asyncio.Queue):
@@ -225,27 +324,67 @@ class SolverServer:
         max_batch = self.policy.resolved_max_batch(self.ladder)
         while True:
             first = await queue.get()
+            if first is _CLOSE:
+                return
             batch = [first]
+            draining = False
             deadline = loop.time() + self.policy.max_wait
-            while len(batch) < max_batch:
+            while len(batch) < max_batch and not draining:
                 # drain whatever is already queued before sleeping on the
                 # deadline — a backlog dispatches as full batches at once
                 while not queue.empty() and len(batch) < max_batch:
-                    batch.append(queue.get_nowait())
-                if len(batch) >= max_batch:
+                    item = queue.get_nowait()
+                    if item is _CLOSE:
+                        draining = True
+                        break
+                    batch.append(item)
+                if draining or len(batch) >= max_batch:
                     break
                 timeout = deadline - loop.time()
                 if timeout <= 0:
                     break
                 try:
-                    batch.append(await asyncio.wait_for(queue.get(), timeout))
+                    item = await asyncio.wait_for(queue.get(), timeout)
                 except asyncio.TimeoutError:
                     break
+                if item is _CLOSE:
+                    draining = True
+                    break
+                batch.append(item)
             await self._solve_batch(batch)
+            if draining:
+                return
 
-    async def _solve_batch(self, batch: list[_Pending]):
+    def _fail(self, p: _Pending, exc: Exception, verdict: str | None = None):
+        self._failed_requests += 1
+        if verdict is not None:
+            self._verdict_hist[verdict] = (
+                self._verdict_hist.get(verdict, 0) + 1)
+        if not p.future.done():
+            p.future.set_exception(exc)
+
+    def _drop_expired(self, batch: list[_Pending],
+                      now: float) -> list[_Pending]:
+        """Deadline containment: an expired request fails with
+        SolveTimeout and frees its slot BEFORE the batch is shaped."""
+        live = []
+        for p in batch:
+            if p.t_deadline is not None and now > p.t_deadline:
+                self._deadline_expired += 1
+                self._fail(p, SolveTimeout(
+                    f"deadline_s={p.request.deadline_s} expired after "
+                    f"{now - p.t_enqueue:.3f}s in queue"))
+            else:
+                live.append(p)
+        return live
+
+    async def _solve_batch(self, batch: list[_Pending], *,
+                           retried: bool = False):
         loop = asyncio.get_running_loop()
         t_dispatch = loop.time()
+        batch = self._drop_expired(batch, t_dispatch)
+        if not batch:
+            return
         requests = [p.request for p in batch]
         first = requests[0]
         rung = rung_for(len(batch), self.ladder)
@@ -256,18 +395,40 @@ class SolverServer:
             u = self._gauges[str(first.gauge_id)]
             b = pad_batch([r.rhs for r in requests], rung)
             tol = pad_tols([r.tol for r in requests], rung)
+            # the containment re-solve IS the clean retry of the transient
+            # fault model: the injector only sees primary dispatches
+            injector = None if retried else self.fault_injector
 
             def run():
-                x, stats = fn(u, b, tol)
+                uu, bb = (u, b) if injector is None else injector(u, b)
+                x, stats = fn(uu, bb, tol)
                 jax.block_until_ready(x)
                 return x, stats
 
             x, stats = await loop.run_in_executor(self._exec, run)
-        except Exception as e:  # surface to every caller in the batch
+        except asyncio.CancelledError:
+            # abort-path close() cancelled the dispatcher mid-solve: never
+            # leave awaiters hanging on futures nobody will complete
             for p in batch:
                 if not p.future.done():
                     p.future.set_exception(
-                        RuntimeError(f"batched solve failed: {e!r}"))
+                        ServerClosed("server closed while solving"))
+            raise
+        except Exception as e:
+            # batch-failure bisection: re-solve members individually so
+            # one poisoned request cannot take its neighbours down.  A
+            # singleton gets the same single clean re-solve — a transient
+            # fault must not kill a lone healthy request either.
+            if not retried:
+                self._batch_failures += 1
+                for p in batch:
+                    self._lane_retries += 1
+                    await self._solve_batch([p], retried=True)
+                return
+            for p in batch:
+                self._fail(p, RequestFailed(
+                    f"solve failed: {e!r}", verdict="error",
+                    retried=retried), verdict="error")
             return
         solve_s = loop.time() - t_dispatch
         self._n_batches += 1
@@ -280,19 +441,46 @@ class SolverServer:
         rhs_iters = jax.device_get(stats.rhs_iterations)
         converged = jax.device_get(stats.converged)
         res2 = jax.device_get(stats.residual_norm2)
+        verdicts = jax.device_get(stats.verdict)
+        verified = jax.device_get(stats.verified)
+        true_res2 = jax.device_get(stats.true_residual_norm2)
+        retry: list[_Pending] = []
         for i, p in enumerate(batch):
-            st = RequestStats(
-                queue_s=t_dispatch - p.t_enqueue, solve_s=solve_s,
-                batch_size=len(batch), padded_to=rung,
-                iterations=int(rhs_iters[i]), converged=bool(converged[i]),
-                residual_norm2=float(res2[i]), plan_cache_hit=cache_hit)
-            if not p.future.done():
-                p.future.set_result(SolveResult(x=x[i], stats=st))
+            verdict = verdict_name(verdicts[i])
+            ok = bool(converged[i]) and bool(verified[i])
+            if not ok:
+                if not retried:
+                    # containment: one clean INDIVIDUAL re-solve — rescues
+                    # a healthy lane hit by a transient fault or by batch
+                    # effects of a poisoned neighbour; a genuinely poisoned
+                    # request fails the retry too (classified, terminal)
+                    retry.append(p)
+                else:
+                    self._fail(p, RequestFailed(
+                        f"request failed verification (verdict={verdict}, "
+                        f"true ‖r‖²={float(true_res2[i]):.3e})",
+                        verdict=verdict, retried=retried), verdict=verdict)
+            else:
+                if retried:
+                    self._lane_retries_rescued += 1
+                st = RequestStats(
+                    queue_s=t_dispatch - p.t_enqueue, solve_s=solve_s,
+                    batch_size=len(batch), padded_to=rung,
+                    iterations=int(rhs_iters[i]),
+                    converged=bool(converged[i]),
+                    residual_norm2=float(res2[i]), plan_cache_hit=cache_hit,
+                    verdict=verdict, verified=bool(verified[i]),
+                    true_residual_norm2=float(true_res2[i]), retried=retried)
+                if not p.future.done():
+                    p.future.set_result(SolveResult(x=x[i], stats=st))
+        for p in retry:
+            self._lane_retries += 1
+            await self._solve_batch([p], retried=True)
 
     # -- lifecycle / telemetry --------------------------------------------
 
     def metrics(self) -> dict:
-        """Serving counters: requests, batches, histograms, plan cache."""
+        """Serving counters: requests, batches, histograms, containment."""
         return {
             "requests": self._n_requests,
             "batches": self._n_batches,
@@ -308,18 +496,52 @@ class SolverServer:
                                        / self._served if self._served
                                        else 0.0),
             "plan_cache": self.plans.stats(),
+            "containment": {
+                "admission_rejected": self._admission_rejected,
+                "overload_rejected": self._overload_rejected,
+                "deadline_expired": self._deadline_expired,
+                "batch_failures": self._batch_failures,
+                "lane_retries": self._lane_retries,
+                "lane_retries_rescued": self._lane_retries_rescued,
+                "failed_requests": self._failed_requests,
+                "verdict_hist": dict(sorted(self._verdict_hist.items())),
+            },
         }
 
-    async def close(self):
-        """Cancel dispatchers and release the worker thread."""
+    async def close(self, drain: bool = True):
+        """Shut down; by default DRAIN (complete queued + in-flight work).
+
+        ``drain=True``: reject new submissions, push a close sentinel
+        through every coalesce queue, and wait for the dispatchers to
+        finish everything queued ahead of it — every outstanding future
+        completes (with a result or a structured failure) before the
+        worker thread is released.  ``drain=False``: abort — cancel
+        dispatchers and fail everything still pending with
+        :class:`ServerClosed` so no awaiter ever hangs.
+        """
         self._closed = True
-        for task in self._dispatchers.values():
-            task.cancel()
-        for task in self._dispatchers.values():
-            try:
+        if drain:
+            for queue in self._queues.values():
+                queue.put_nowait(_CLOSE)
+            for task in self._dispatchers.values():
                 await task
-            except asyncio.CancelledError:
-                pass
+        else:
+            for task in self._dispatchers.values():
+                task.cancel()
+            for task in self._dispatchers.values():
+                try:
+                    await task
+                except asyncio.CancelledError:
+                    pass
+            # anything still sitting in a queue never reached a dispatcher
+            for queue in self._queues.values():
+                while not queue.empty():
+                    item = queue.get_nowait()
+                    if item is _CLOSE:
+                        continue
+                    if not item.future.done():
+                        item.future.set_exception(
+                            ServerClosed("server closed before dispatch"))
         self._dispatchers.clear()
         self._queues.clear()
         self._exec.shutdown(wait=True)

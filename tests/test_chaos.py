@@ -1,0 +1,313 @@
+"""Fault injection vs the server's containment rings (DESIGN.md §10).
+
+Each test corrupts exactly one thing — a request, a gauge field, the
+worker — and asserts the blast radius: the poisoned request fails with a
+classified verdict, every other request is served and verified.  All
+injection is deterministic (fixed schedules, fixed coordinates), so these
+are containment proofs, not flaky chaos monkeys.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.serve import (BatchFaultInjector, BatchPolicy, InjectedFault,
+                         PlanCache, RequestFailed, RequestRejected,
+                         ServerOverloaded, SolveRequest, SolveTimeout,
+                         SolverServer, bit_flip, nan_plane, poison_nan,
+                         poison_overflow)
+
+MASS = 0.1
+TOL = 1e-6
+MAXITER = 500
+LAT = LatticeShape(4, 4, 4, 4)
+
+
+@pytest.fixture(scope="module")
+def fields():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    gauges = {f"cfg{g}": random_gauge(jax.random.fold_in(ku, g), LAT)
+              for g in range(2)}
+    pool = [random_spinor(jax.random.fold_in(kb, i), LAT) for i in range(8)]
+    return gauges, pool
+
+
+@pytest.fixture(scope="module")
+def plans():
+    return PlanCache()
+
+
+def _make_server(gauges, plans, **kw):
+    kw.setdefault("mass", MASS)
+    kw.setdefault("maxiter", MAXITER)
+    kw.setdefault("ladder", (1, 4))
+    server = SolverServer(plan_cache=plans, **kw)
+    for gid, u in gauges.items():
+        server.register_gauge(gid, u)
+    return server
+
+
+def _req(pool, i=0, **kw):
+    kw.setdefault("operator_family", "wilson")
+    kw.setdefault("gauge_id", "cfg0")
+    kw.setdefault("tol", TOL)
+    return SolveRequest(rhs=pool[i], **kw)
+
+
+# -- the injectors themselves are deterministic and well-formed -------------
+
+
+def test_poison_overflow_is_finite_but_norm_overflows(fields):
+    _, pool = fields
+    bad = poison_overflow(pool[0])
+    assert bool(jnp.all(jnp.isfinite(bad)))
+    assert not bool(jnp.isfinite(jnp.sum(jnp.abs(bad) ** 2)))
+
+
+def test_poison_nan_corrupts_one_entry(fields):
+    _, pool = fields
+    bad = poison_nan(pool[0], site=3)
+    flat = np.asarray(bad).reshape(-1)
+    assert np.isnan(flat[3])
+    assert np.isfinite(np.delete(flat, 3)).all()
+
+
+def test_nan_plane_hits_exactly_one_time_slice(fields):
+    gauges, _ = fields
+    u = nan_plane(gauges["cfg0"], t=1)
+    host = np.asarray(u)
+    assert np.isnan(host[:, 1]).all()
+    assert np.isfinite(np.delete(host, 1, axis=1)).all()
+
+
+def test_bit_flip_changes_exactly_one_word(fields):
+    gauges, _ = fields
+    before = np.asarray(gauges["cfg0"]).view(np.float32).reshape(-1)
+    after = np.asarray(bit_flip(gauges["cfg0"], site=5)
+                       ).view(np.float32).reshape(-1)
+    assert (before != after).sum() == 1
+    assert before[5] != after[5]
+
+
+def test_injector_schedule_is_deterministic():
+    inj = BatchFaultInjector(mode="stall", every=3, at=1, stall_s=0.0)
+    u = jnp.zeros((2,))
+    fired = []
+    for _ in range(9):
+        inj(u, u)
+        fired.append(inj.fired)
+    assert fired == [0, 1, 1, 1, 2, 2, 2, 3, 3]
+
+
+def test_injector_rejects_bad_config():
+    with pytest.raises(ValueError, match="mode"):
+        BatchFaultInjector(mode="meteor")
+    with pytest.raises(ValueError, match="every"):
+        BatchFaultInjector(every=0)
+
+
+# -- ring 1: admission ------------------------------------------------------
+
+
+def test_nan_rhs_rejected_at_admission(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(gauges, plans) as server:
+            with pytest.raises(RequestRejected) as exc:
+                await server.submit(_req([poison_nan(pool[0])]))
+            return exc.value.reason, server.metrics()
+
+    reason, metrics = asyncio.run(main())
+    assert reason == "nonfinite_rhs"
+    assert metrics["containment"]["admission_rejected"] == 1
+    # rejection happened before any queue/batch work
+    assert metrics["batches"] == 0
+
+
+def test_bad_tol_rejected_at_admission(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(gauges, plans) as server:
+            for tol in (float("nan"), float("inf"), 0.0, -1e-6):
+                with pytest.raises(RequestRejected, match="tol"):
+                    await server.submit(_req(pool, tol=tol))
+            with pytest.raises(RequestRejected, match="deadline"):
+                await server.submit(_req(pool, deadline_s=float("nan")))
+
+    asyncio.run(main())
+
+
+def test_backpressure_bounds_queue_depth(fields, plans):
+    gauges, pool = fields
+
+    async def main():
+        # long max_wait: everything queues behind the first dispatch
+        async with _make_server(
+                gauges, plans, max_queue_depth=2, ladder=(1,),
+                policy=BatchPolicy(max_wait=0.02, max_batch=1)) as server:
+            tasks = [asyncio.create_task(server.submit(_req(pool, i % 8)))
+                     for i in range(6)]
+            out = await asyncio.gather(*tasks, return_exceptions=True)
+            return out, server.metrics()
+
+    out, metrics = asyncio.run(main())
+    overloaded = [r for r in out if isinstance(r, ServerOverloaded)]
+    served = [r for r in out if not isinstance(r, Exception)]
+    assert len(overloaded) >= 1
+    assert metrics["containment"]["overload_rejected"] == len(overloaded)
+    # everyone who was admitted got served
+    assert len(served) == 6 - len(overloaded)
+
+
+# -- ring 2: taxonomy + verification (defense in depth) ---------------------
+
+
+def test_nan_rhs_classified_when_admission_is_off(fields, plans):
+    """With the admission ring disabled the poison reaches the solver:
+    the taxonomy classifies it nonfinite and the request fails loudly —
+    never a silent wrong answer."""
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(gauges, plans,
+                                admission_validation=False) as server:
+            with pytest.raises(RequestFailed) as exc:
+                await server.submit(_req([poison_nan(pool[0])]))
+            return exc.value.verdict, server.metrics()
+
+    verdict, metrics = asyncio.run(main())
+    assert verdict == "nonfinite"
+    assert metrics["containment"]["verdict_hist"] == {"nonfinite": 1}
+
+
+def test_overflow_poison_blast_radius_is_one(fields, plans):
+    """The overflow poison passes admission by construction (finite
+    entries) and must be caught downstream WITHOUT hurting its batch:
+    3 healthy batchmates are served and verified."""
+    gauges, pool = fields
+
+    async def main():
+        async with _make_server(
+                gauges, plans,
+                policy=BatchPolicy(max_wait=0.25)) as server:
+            reqs = [_req(pool, 0), _req(pool, 1),
+                    _req([poison_overflow(pool[2])]), _req(pool, 3)]
+            tasks = [asyncio.create_task(server.submit(r)) for r in reqs]
+            out = await asyncio.gather(*tasks, return_exceptions=True)
+            return out, server.metrics()
+
+    out, metrics = asyncio.run(main())
+    assert isinstance(out[2], RequestFailed)
+    assert out[2].verdict == "nonfinite"
+    healthy = [out[0], out[1], out[3]]
+    assert all(not isinstance(r, Exception) for r in healthy)
+    assert all(r.stats.verified for r in healthy)
+    assert metrics["containment"]["failed_requests"] == 1
+
+
+# -- ring 3: transient faults are rescued by the clean re-solve -------------
+
+
+def test_transient_gauge_fault_rescues_every_healthy_member(fields, plans):
+    """A NaN plane hits the gauge field of the PRIMARY dispatch: every
+    lane fails verification, and the per-lane clean re-solve (the
+    injector never sees retries) rescues all of them."""
+    gauges, pool = fields
+    inj = BatchFaultInjector(mode="gauge_nan_plane", every=1)
+
+    async def main():
+        async with _make_server(
+                gauges, plans, fault_injector=inj,
+                policy=BatchPolicy(max_wait=0.25)) as server:
+            tasks = [asyncio.create_task(server.submit(_req(pool, i)))
+                     for i in range(4)]
+            out = await asyncio.gather(*tasks, return_exceptions=True)
+            return out, server.metrics()
+
+    out, metrics = asyncio.run(main())
+    assert inj.fired >= 1
+    assert all(not isinstance(r, Exception) for r in out)
+    assert all(r.stats.verified and r.stats.retried for r in out)
+    c = metrics["containment"]
+    assert c["lane_retries_rescued"] == len(out)
+    assert c["failed_requests"] == 0
+
+
+def test_injected_crash_triggers_bisection_and_rescue(fields, plans):
+    """mode='raise' crashes the whole primary batch solve; bisection
+    re-solves each member individually and every request succeeds."""
+    gauges, pool = fields
+    inj = BatchFaultInjector(mode="raise", every=1)
+
+    async def main():
+        async with _make_server(
+                gauges, plans, fault_injector=inj,
+                policy=BatchPolicy(max_wait=0.25)) as server:
+            tasks = [asyncio.create_task(server.submit(_req(pool, i)))
+                     for i in range(3)]
+            out = await asyncio.gather(*tasks, return_exceptions=True)
+            return out, server.metrics()
+
+    out, metrics = asyncio.run(main())
+    assert all(not isinstance(r, Exception) for r in out)
+    c = metrics["containment"]
+    assert c["batch_failures"] >= 1
+    assert c["lane_retries"] >= len(out)
+    assert c["failed_requests"] == 0
+
+
+def test_transient_fault_on_lone_request_is_rescued(fields, plans):
+    """Containment must hold for a singleton batch too: a lone healthy
+    request hit by a transient fault gets the same clean re-solve."""
+    gauges, pool = fields
+    inj = BatchFaultInjector(mode="gauge_nan_plane", every=1)
+
+    async def main():
+        async with _make_server(gauges, plans,
+                                fault_injector=inj) as server:
+            return await server.submit(_req(pool, 0)), server.metrics()
+
+    result, metrics = asyncio.run(main())
+    assert result.stats.verified and result.stats.retried
+    assert metrics["containment"]["failed_requests"] == 0
+
+
+def test_stall_fault_expires_deadline_without_burning_a_slot(fields, plans):
+    """A stalled worker delays dispatch; a request whose deadline passed
+    while it waited fails with SolveTimeout BEFORE batch shaping — it
+    never consumes a solve slot — while undeadlined requests survive."""
+    gauges, pool = fields
+    inj = BatchFaultInjector(mode="stall", every=1, stall_s=0.3)
+
+    async def main():
+        async with _make_server(
+                gauges, plans, fault_injector=inj, ladder=(1,),
+                policy=BatchPolicy(max_wait=0.01, max_batch=1)) as server:
+            # first request occupies the worker (and takes the stall);
+            # the second's deadline expires while it queues behind it
+            t1 = asyncio.create_task(server.submit(_req(pool, 0)))
+            await asyncio.sleep(0.05)
+            t2 = asyncio.create_task(
+                server.submit(_req(pool, 1, deadline_s=0.05)))
+            out = await asyncio.gather(t1, t2, return_exceptions=True)
+            return out, server.metrics()
+
+    out, metrics = asyncio.run(main())
+    assert not isinstance(out[0], Exception)
+    assert isinstance(out[1], SolveTimeout)
+    c = metrics["containment"]
+    assert c["deadline_expired"] == 1
+    # the expired request must not appear in any batch histogram slot
+    assert sum(metrics["batch_hist"].values()) == metrics["batches"]
+
+
+def test_injected_fault_is_an_exception_type():
+    with pytest.raises(InjectedFault):
+        BatchFaultInjector(mode="raise", every=1)(None, None)

@@ -8,6 +8,7 @@ import pytest
 from repro.core import (LatticeShape, bicgstab, cg, cg_trace, cgnr, dslash,
                         dslash_dagger, mpcg, normal_op, pack_gauge,
                         pack_spinor, pipecg, random_gauge, random_spinor)
+from repro.core import solvers
 from repro.core.wilson import (dslash_dagger_packed, dslash_packed,
                                normal_op_packed)
 from repro.kernels.cg_fused import fused_engine
@@ -186,3 +187,101 @@ def test_cg_rejects_tol_vector_on_unbatched_solve(problem):
     with pytest.raises(ValueError, match="tol"):
         cg(lambda v: normal_op(u, v, MASS), rhs,
            tol=jnp.array([1e-6, 1e-5], jnp.float32), maxiter=10)
+
+
+# -- failure taxonomy (DESIGN.md §10): every solver exit is classified ------
+
+
+def test_cg_breakdown_guard_keeps_iterate_finite():
+    """p·Ap == 0 (singular operator): the guard must flag BREAKDOWN at the
+    first iteration and keep x finite instead of flooding it with inf."""
+    rhs = jnp.ones((24,), jnp.float32)
+    x, st_ = cg(lambda v: 0.0 * v, rhs, tol=1e-8, maxiter=50)
+    assert int(st_.verdict) == solvers.BREAKDOWN
+    assert not bool(st_.converged)
+    # the broken lane leaves the loop immediately — it must not burn maxiter
+    assert int(st_.iterations) <= 2
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_cg_batched_breakdown_blast_radius_is_one():
+    """One singular lane in a batch breaks down alone; its batchmate
+    converges in exactly the iterations a solo solve takes."""
+    key = jax.random.PRNGKey(0)
+    bmat = jax.random.normal(key, (16, 16), jnp.float32) / 4
+    amat = bmat @ bmat.T + jnp.eye(16)
+    op = lambda v: jnp.stack([amat @ v[0], 0.0 * v[1]])
+    rhs = jnp.stack([jnp.ones((16,), jnp.float32)] * 2)
+    x, st_ = cg(op, rhs, tol=1e-6, maxiter=100, batched=True)
+    verdicts = np.asarray(st_.verdict)
+    assert verdicts[0] == solvers.CONVERGED
+    assert verdicts[1] == solvers.BREAKDOWN
+    assert bool(jnp.all(jnp.isfinite(x)))
+    _, solo = cg(lambda v: amat @ v, rhs[0], tol=1e-6, maxiter=100)
+    assert int(np.asarray(st_.rhs_iterations)[0]) == int(solo.iterations)
+
+
+def test_cg_nonfinite_rhs_classified_without_iterating():
+    """A NaN RHS makes ‖r‖² NaN: the lane is inactive from iteration 0
+    (NaN comparisons are False) and the exit classifies NONFINITE."""
+    rhs = jnp.ones((24,), jnp.float32).at[0].set(jnp.nan)
+    _, st_ = cg(lambda v: v, rhs, tol=1e-8, maxiter=50)
+    assert int(st_.verdict) == solvers.NONFINITE
+    assert int(st_.iterations) == 0
+    assert not bool(st_.converged)
+
+
+def test_cg_stagnation_detected_on_float32_plateau():
+    """An ill-conditioned SPD system with an unreachable tol plateaus at
+    float32 accuracy: the watermark stops shrinking and the exit says
+    STAGNATION, not plain maxiter exhaustion."""
+    d = jnp.logspace(0, 8, 32).astype(jnp.float32)
+    rhs = jnp.ones((32,), jnp.float32)
+    _, st_ = cg(lambda v: d * v, rhs, tol=1e-30, maxiter=200)
+    assert int(st_.verdict) == solvers.STAGNATION
+    assert int(st_.iterations) == 200
+
+
+def test_cg_maxiter_exhaustion_verdict(problem):
+    u, b = problem
+    op = lambda v: normal_op(u, v, MASS)
+    rhs = dslash_dagger(u, b, MASS)
+    _, st_ = cg(op, rhs, tol=1e-30, maxiter=5)
+    # exhausted well before the stagnation window: plain MAXITER_EXHAUSTED
+    assert int(st_.verdict) == solvers.MAXITER_EXHAUSTED
+
+
+def test_bicgstab_respects_stop_limit_contract(problem):
+    """bicgstab goes through the shared ``_stop_limit`` stopping contract:
+    a tol vector is rejected on its unbatched loop, and a breakdown-free
+    healthy solve classifies CONVERGED."""
+    u, b = problem
+    with pytest.raises(ValueError, match="tol"):
+        bicgstab(lambda v: dslash(u, v, MASS), b,
+                 tol=jnp.array([1e-6, 1e-5], jnp.float32), maxiter=10)
+    _, st_ = bicgstab(lambda v: dslash(u, v, MASS), b, tol=1e-6, maxiter=500)
+    assert int(st_.verdict) == solvers.CONVERGED
+
+
+def test_pipecg_breakdown_guard():
+    rhs = jnp.ones((24,), jnp.float32)
+    _, st_ = pipecg(lambda v: 0.0 * v, rhs, tol=1e-8, maxiter=50)
+    assert int(st_.verdict) == solvers.BREAKDOWN
+    assert not bool(st_.converged)
+
+
+def test_mpcg_propagates_inner_verdict(problem):
+    u, b = problem
+    up, bp = pack_gauge(u), pack_spinor(b)
+    op_hi = lambda v: normal_op_packed(up, v, MASS)
+    up_lo = up.astype(jnp.bfloat16)
+    op_lo = lambda v: normal_op_packed(up_lo, v, MASS)
+    rhs = dslash_dagger_packed(up, bp, MASS)
+    # bf16 cannot reach tol=1e-30: the outer loop exhausts and the exit
+    # classifies the plateau (stagnation once the true residual stops
+    # contracting between reliable updates, else maxiter exhaustion)
+    _, st_ = mpcg(op_lo, op_hi, rhs, tol=1e-30, inner_tol=5e-2,
+                  inner_maxiter=20, max_outer=4)
+    assert int(st_.verdict) in (solvers.MAXITER_EXHAUSTED,
+                                solvers.STAGNATION)
+    assert not bool(st_.converged)
