@@ -1,0 +1,260 @@
+#!/usr/bin/env python
+"""Crash-resume lane: SIGKILL real processes, then prove nothing was lost.
+
+Three experiments, each against a REAL subprocess (not an in-process
+simulation — the point is surviving a kill the victim cannot observe):
+
+* **solver** — a checkpointed ``repro.launch.solve`` run is SIGKILLed the
+  moment its first snapshot lands; a second invocation with ``--resume``
+  must restore the newest valid checkpoint, defect-correct, verify the
+  accumulated solution against the true residual and exit 0.
+* **elastic** — a solve checkpointed on a 2x2x2 mesh (8 fake host
+  devices) is SIGKILLed mid-run; the resume runs WITHOUT the mesh
+  (single device) — checkpoints store unsharded host arrays, so losing
+  hardware costs a segment of work, not the run.
+* **journal** — a journaled ``repro.launch.serve_solver`` run is
+  SIGKILLed mid-stream; ``SolverServer.recover`` on a fresh server over
+  the same journal directory must replay every admitted-but-incomplete
+  request to completion.
+
+Writes **BENCH_resume.json**; ``check_solver_regression.py --resume``
+gates it in the blocking ``crash-resume`` CI lane.  Each kill is retried
+a few times (a fast child can finish before the trigger fires on a slow
+runner) — the report records the attempt count.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import re
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+KILL_RETRIES = 3
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _steps_in(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_dir, n, "manifest.json")))
+
+
+def _kill_when_steps(ckpt_dir: str, n: int):
+    return lambda _out="": len(_steps_in(ckpt_dir)) >= n
+
+
+def _admit_lines(journal_dir: str) -> int:
+    path = os.path.join(journal_dir, "journal.jsonl")
+    if not os.path.exists(path):
+        return 0
+    with open(path, encoding="utf-8") as f:
+        return sum(1 for line in f if '"admit"' in line)
+
+
+def _run_solver_lane(workdir: str) -> dict:
+    """Kill a checkpointing solve mid-segment, resume it, gate on exit 0."""
+    from repro.serve.chaos import run_and_sigkill
+
+    out: dict = {"lane": "solver"}
+    base_args = [sys.executable, "-m", "repro.launch.solve",
+                 "--lattice", "4x4x4x8", "--parity", "eo",
+                 "--solver", "cgnr", "--tol", "1e-7", "--maxiter", "2000"]
+    killed = False
+    for attempt in range(1, KILL_RETRIES + 1):
+        ck = os.path.join(workdir, f"solver_ck_{attempt}")
+        crash = run_and_sigkill(
+            base_args + ["--checkpoint-dir", ck, "--checkpoint-every", "2"],
+            kill_when=_kill_when_steps(ck, 1), env=_env(), poll_s=0.01,
+            timeout_s=420)
+        out["kill_attempts"] = attempt
+        if crash.killed:
+            killed = True
+            break
+    out["killed"] = killed
+    out["steps_at_kill"] = _steps_in(ck)
+    if not killed:
+        return out
+    import subprocess
+    r = subprocess.run(
+        base_args + ["--checkpoint-dir", ck, "--resume"],
+        env=_env(), capture_output=True, text=True, timeout=420)
+    out["resume_exit"] = r.returncode
+    m = re.search(r"resumed from step (\d+)", r.stdout)
+    out["resumed_from_step"] = int(m.group(1)) if m else None
+    out["resume_ok"] = (r.returncode == 0 and m is not None)
+    if not out["resume_ok"]:
+        out["resume_tail"] = r.stdout[-1500:] + r.stderr[-500:]
+    return out
+
+
+_ELASTIC_SOLVE = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.experimental.mesh_utils import create_device_mesh
+from jax.sharding import Mesh
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.core import plan as plan_mod
+
+d = sys.argv[1]
+lat = LatticeShape(4, 4, 4, 8)
+key = jax.random.PRNGKey(11)
+ku, kb = jax.random.split(key)
+u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+mesh = Mesh(create_device_mesh((2, 2, 2)), ("pod", "data", "model"))
+plan = plan_mod.SolverPlan(operator="eo-schur", solver="cgnr", mesh=mesh)
+plan_mod.solve(plan, u, b, 0.1, tol=1e-7, maxiter=2000,
+               checkpoint=plan_mod.CheckpointPolicy(dir=d, every_iters=2))
+print("SHARDED_SOLVE_DONE")
+"""
+
+_ELASTIC_RESUME = r"""
+import sys
+import jax, numpy as np
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.core import plan as plan_mod
+from repro.core.resilience import resume_solve
+
+d = sys.argv[1]
+lat = LatticeShape(4, 4, 4, 8)
+key = jax.random.PRNGKey(11)
+ku, kb = jax.random.split(key)
+u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+plan = plan_mod.SolverPlan(operator="eo-schur", solver="cgnr")
+x, st, rec = resume_solve(plan, u, b, 0.1, checkpoint_dir=d, tol=1e-7,
+                          maxiter=2000)
+assert bool(np.asarray(st.verified).all()), st
+print(f"RESUMED_FROM={rec.resumed_from_step}")
+"""
+
+
+def _run_elastic_lane(workdir: str) -> dict:
+    """Kill a 2x2x2-mesh checkpointed solve, resume it on one device."""
+    import subprocess
+
+    from repro.serve.chaos import run_and_sigkill
+
+    out: dict = {"lane": "elastic", "mesh": "2x2x2"}
+    killed = False
+    for attempt in range(1, KILL_RETRIES + 1):
+        ck = os.path.join(workdir, f"elastic_ck_{attempt}")
+        crash = run_and_sigkill(
+            [sys.executable, "-c", _ELASTIC_SOLVE, ck],
+            kill_when=_kill_when_steps(ck, 1), env=_env(), poll_s=0.01,
+            timeout_s=420)
+        out["kill_attempts"] = attempt
+        if crash.killed:
+            killed = True
+            break
+    out["killed"] = killed
+    out["steps_at_kill"] = _steps_in(ck)
+    if not killed:
+        return out
+    r = subprocess.run([sys.executable, "-c", _ELASTIC_RESUME, ck],
+                       env=_env(), capture_output=True, text=True,
+                       timeout=420)
+    out["resume_exit"] = r.returncode
+    m = re.search(r"RESUMED_FROM=(\d+)", r.stdout)
+    out["resumed_from_step"] = int(m.group(1)) if m else None
+    out["resume_ok"] = (r.returncode == 0 and m is not None)
+    if not out["resume_ok"]:
+        out["resume_tail"] = r.stdout[-1500:] + r.stderr[-1500:]
+    return out
+
+
+def _run_journal_lane(workdir: str) -> dict:
+    """Kill a journaled server mid-stream, recover, gate on zero leftover."""
+    from repro.serve import journal as jm
+    from repro.serve.chaos import run_and_sigkill
+    from repro.serve.loadgen import WorkloadConfig, build_workload
+    from repro.serve.server import SolverServer
+
+    out: dict = {"lane": "journal"}
+    args = [sys.executable, "-m", "repro.launch.serve_solver",
+            "--lattice", "4x4x4x4", "--requests", "40", "--burst", "4",
+            "--interarrival-ms", "20", "--ladder", "1,4"]
+    killed = False
+    for attempt in range(1, KILL_RETRIES + 1):
+        jd = os.path.join(workdir, f"journal_{attempt}")
+        crash = run_and_sigkill(
+            args + ["--journal-dir", jd],
+            kill_when=lambda _out="", d=jd: _admit_lines(d) >= 8,
+            env=_env(), poll_s=0.01, timeout_s=420)
+        out["kill_attempts"] = attempt
+        if crash.killed:
+            killed = True
+            break
+    out["killed"] = killed
+    out["admits_at_kill"] = _admit_lines(jd)
+    if not killed:
+        return out
+    incomplete = jm.incomplete_requests(jd)
+    out["incomplete_found"] = len(incomplete)
+    # same WorkloadConfig the CLI resolved -> same deterministic gauges
+    cfg = WorkloadConfig(requests=40, burst=4, interarrival_s=0.02,
+                         ladder=(1, 4))
+    gauges, _ = build_workload(cfg)
+
+    async def recover():
+        server = SolverServer(mass=cfg.mass, ladder=cfg.ladder,
+                              maxiter=cfg.maxiter, journal_dir=jd)
+        for gid, u in gauges.items():
+            server.register_gauge(gid, u)
+        summary = await server.recover()
+        await server.close()
+        return summary
+
+    summary = asyncio.run(recover())
+    out["recovered"] = int(summary["completed"]) + int(summary["failed"]) \
+        + int(summary["skipped_unknown_gauge"])
+    out["recovery"] = {k: v for k, v in summary.items() if k != "results"}
+    out["incomplete_after_recovery"] = len(jm.incomplete_requests(jd))
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+    import tempfile
+
+    sys.path.insert(0, SRC)
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default=os.environ.get("BENCH_RESUME_JSON",
+                                                   "BENCH_resume.json"))
+    p.add_argument("--workdir", default=None,
+                   help="scratch directory for checkpoints/journals "
+                        "(default: a fresh temp dir)")
+    args = p.parse_args(argv)
+    workdir = args.workdir or tempfile.mkdtemp(prefix="bench_resume_")
+
+    report = {"schema": 1, "bench": "resume",
+              "generated_by": "benchmarks/bench_resume.py"}
+    for name, lane in (("solver", _run_solver_lane),
+                       ("elastic", _run_elastic_lane),
+                       ("journal", _run_journal_lane)):
+        try:
+            report[name] = lane(workdir)
+        except Exception as e:
+            report[name] = {"lane": name, "error": f"{e!r:.300}"}
+        print(f"[bench_resume] {name}: "
+              + json.dumps(report[name], default=str))
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"[bench_resume] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

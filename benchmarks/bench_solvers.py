@@ -381,6 +381,53 @@ def _run_eo_sharded() -> dict:
     return json.loads(line[len("RESULT"):])
 
 
+def _run_ckpt_overhead() -> dict:
+    """Segmented (checkpointed) vs one-shot smoke solve (DESIGN.md §11).
+
+    The guarded signal is algorithmic, like every other row: the
+    segmented solve must run the SAME number of iterations and produce a
+    BITWISE-identical iterate — segmenting only augments the while-loop's
+    stopping condition, never its body.  The wall-clock cost per snapshot
+    (host sync + npz write + prune) is recorded for trend context but not
+    gated; CI runner I/O is noise.
+    """
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.core import LatticeShape, random_gauge, random_spinor
+    from repro.core import plan as plan_mod
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+    plan = plan_mod.SolverPlan(operator="eo-schur")
+    every = 5
+
+    (x_ref, st_ref), _, us_ref = _timed(lambda: plan_mod.solve(
+        plan, u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000))
+    with tempfile.TemporaryDirectory() as d:
+        policy = plan_mod.CheckpointPolicy(dir=d, every_iters=every)
+        (x_seg, st_seg), _, us_seg = _timed(lambda: plan_mod.solve(
+            plan, u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
+            checkpoint=policy))
+    iters = int(st_ref.iterations)
+    segments = -(-iters // every)
+    return {
+        "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
+        "seed": SMOKE_SEED, "every_iters": every,
+        "iters": iters,
+        "iters_checkpointed": int(st_seg.iterations),
+        "bitwise_equal": bool(np.array_equal(np.asarray(x_seg),
+                                             np.asarray(x_ref))),
+        "segments": segments,
+        "us_oneshot": us_ref, "us_checkpointed": us_seg,
+        "overhead_us_per_snapshot": (max(us_seg - us_ref, 0.0)
+                                     / max(segments, 1)),
+    }
+
+
 def _fused_engine_shape() -> dict:
     """Per-iteration kernel count and HBM traffic shape of the fused CG.
 
@@ -486,6 +533,17 @@ def run() -> list[tuple[str, float, str]]:
                      f"sites_rhs_per_s={sh['sites_rhs_per_s']:.0f}"))
     except Exception as e:
         rows.append(("eo_sharded", -1.0, f"FAILED:{e!r:.200}"))
+    try:
+        ck = _run_ckpt_overhead()
+        report["ckpt_overhead"] = ck
+        rows.append(("cgnr_eo_checkpointed_4x4x4x4", ck["us_checkpointed"],
+                     f"iters={ck['iters_checkpointed']};"
+                     f"bitwise_equal={ck['bitwise_equal']};"
+                     f"segments={ck['segments']};"
+                     f"us_per_snapshot="
+                     f"{ck['overhead_us_per_snapshot']:.0f}"))
+    except Exception as e:
+        rows.append(("ckpt_overhead", -1.0, f"FAILED:{e!r:.200}"))
     try:
         shape = _fused_engine_shape()
         report["fused_engine"] = shape

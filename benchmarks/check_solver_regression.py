@@ -23,6 +23,7 @@ Usage:  check_solver_regression.py [BENCH_solvers.json] [baseline.json]
         check_solver_regression.py --generate [baseline.json]
         check_solver_regression.py --serve [BENCH_serve.json] [baseline.json]
         check_solver_regression.py --chaos [BENCH_serve.json] [baseline.json]
+        check_solver_regression.py --resume [BENCH_resume.json] [baseline.json]
 
 ``--generate`` runs the smoke solves itself (no full benchmark harness
 needed) and guards the result — the BLOCKING ``bench-guard`` CI job and
@@ -33,9 +34,12 @@ after warmup, that coalescing reached a multi-RHS rung, convergence, and
 the iteration-count ceiling.  ``--chaos`` guards a fault-injection report
 (bench_serve.py --chaos) against the baseline's ``chaos`` section: every
 poisoned request failed classified, zero healthy casualties (blast radius
-exactly 1), and both fault surfaces actually exercised.  The
-artifact-comparing default mode stays in the non-blocking smoke-bench job
-for timing context.
+exactly 1), and both fault surfaces actually exercised.  ``--resume``
+guards a crash-resume lane report (benchmarks/bench_resume.py): SIGKILLed
+solves resumed from their latest checkpoint (including across mesh
+shapes) and a killed server's journal replayed to zero incomplete
+entries.  The artifact-comparing default mode stays in the non-blocking
+smoke-bench job for timing context.
 Exit 0 on pass, 1 on regression or missing/invalid inputs.
 """
 
@@ -163,6 +167,86 @@ def _check_eo_sharded(table, cur, base):
     table.iters("eo_sharded", "iters", base_s["iters"], cur_s["iters"])
 
 
+def _check_ckpt_overhead(table, cur, base):
+    """Guard the segmented (checkpointed) smoke solve.
+
+    Three properties, all algorithmic: the one-shot iteration count holds
+    the usual baseline+slack ceiling, the SEGMENTED solve takes exactly
+    as many iterations as the one-shot solve it mirrors, and the two
+    iterates are bitwise equal — segmenting may cost snapshot I/O, never
+    Krylov math.  Wall-clock overhead stays unguarded.
+    """
+    base_s = base.get("ckpt_overhead")
+    if not base_s:
+        return  # baseline predates durable solves: nothing to guard
+    cur_s = cur.get("ckpt_overhead")
+    if not cur_s:
+        table.missing("ckpt_overhead", "(section)", "present")
+        return
+    if not _problem_match(table, "ckpt_overhead", cur_s, base_s,
+                          extra=("every_iters",)):
+        return
+    table.iters("ckpt_overhead", "iters", base_s["iters"], cur_s["iters"])
+    same = (int(cur_s.get("iters_checkpointed", -1))
+            == int(cur_s.get("iters", -2)))
+    table.add("ckpt_overhead", "iters_checkpointed", cur_s.get("iters"),
+              cur_s.get("iters_checkpointed"), "-",
+              "OK" if same else "REGRESSION")
+    bw = bool(cur_s.get("bitwise_equal", False))
+    table.add("ckpt_overhead", "bitwise_equal", True, bw, "-",
+              "OK" if bw else "REGRESSION")
+
+
+def _check_resume(table, cur, base):
+    """Guard a crash-resume lane report (benchmarks/bench_resume.py).
+
+    The lane SIGKILLs real subprocesses and the report records what
+    recovery achieved; the gate demands each experiment actually ran to
+    its kill (``killed`` — an early-exiting child proves nothing) and
+    that recovery met the durability contract (DESIGN.md §11):
+
+    * solver: resumed from a checkpoint step >= 1 and the resumed solve
+      passed true-residual verification;
+    * elastic: a solve checkpointed on a mesh resumed VERIFIED without
+      the mesh (smaller-world restart);
+    * journal: the killed server left >= min_incomplete journaled
+      requests unfinished and recovery replayed EVERY one of them.
+    """
+    base_r = base.get("resume")
+    if not base_r:
+        table.missing("resume", "(baseline section)", "present")
+        return
+    for lane in ("solver", "elastic"):
+        s = cur.get(lane)
+        if not s:
+            table.missing(lane, "(report section)", "present")
+            continue
+        table.add(lane, "killed", True, s.get("killed"), "-",
+                  "OK" if s.get("killed") else "REGRESSION")
+        step = s.get("resumed_from_step")
+        table.add(lane, "resumed_from_step", ">=1", step, 1,
+                  "OK" if isinstance(step, int) and step >= 1
+                  else "REGRESSION")
+        table.add(lane, "resume_ok", True, s.get("resume_ok"), "-",
+                  "OK" if s.get("resume_ok") else "REGRESSION")
+    j = cur.get("journal")
+    if not j:
+        table.missing("journal", "(report section)", "present")
+        return
+    table.add("journal", "killed", True, j.get("killed"), "-",
+              "OK" if j.get("killed") else "REGRESSION")
+    found = int(j.get("incomplete_found", 0))
+    need = int(base_r.get("min_incomplete", 1))
+    table.add("journal", "incomplete_found", f">={need}", found, need,
+              "OK" if found >= need else "REGRESSION")
+    recovered = int(j.get("recovered", -1))
+    table.add("journal", "recovered", found, recovered, found,
+              "OK" if recovered == found else "REGRESSION")
+    left = int(j.get("incomplete_after_recovery", -1))
+    table.add("journal", "incomplete_after_recovery", 0, left, 0,
+              "OK" if left == 0 else "REGRESSION")
+
+
 def _check_serve(table, cur, base):
     """Guard a serving-lane report against the baseline ``serve`` section.
 
@@ -281,9 +365,11 @@ def _load(path: str, what: str) -> dict | None:
 def main(argv: list[str]) -> int:
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_solvers_baseline.json")
-    if len(argv) > 1 and argv[1] in ("--serve", "--chaos"):
+    if len(argv) > 1 and argv[1] in ("--serve", "--chaos", "--resume"):
         mode = argv[1].lstrip("-")
-        cur_path = argv[2] if len(argv) > 2 else "BENCH_serve.json"
+        default_report = ("BENCH_resume.json" if mode == "resume"
+                          else "BENCH_serve.json")
+        cur_path = argv[2] if len(argv) > 2 else default_report
         if len(argv) > 3:
             base_path = argv[3]
         cur = _load(cur_path, f"{mode} report")
@@ -293,6 +379,8 @@ def main(argv: list[str]) -> int:
         table = _Table()
         if mode == "serve":
             _check_serve(table, cur, base)
+        elif mode == "resume":
+            _check_resume(table, cur, base)
         else:
             _check_chaos(table, cur, base)
         table.print()
@@ -310,7 +398,8 @@ def main(argv: list[str]) -> int:
         cur = {"eo_smoke": bench_solvers._run_eo_smoke(),
                "eo_smoke_tm": bench_solvers._run_eo_smoke_tm(),
                "batch_sweep": bench_solvers._run_batch_sweep(),
-               "eo_sharded": bench_solvers._run_eo_sharded()}
+               "eo_sharded": bench_solvers._run_eo_sharded(),
+               "ckpt_overhead": bench_solvers._run_ckpt_overhead()}
     else:
         cur_path = argv[1] if len(argv) > 1 else "BENCH_solvers.json"
         if len(argv) > 2:
@@ -334,6 +423,7 @@ def main(argv: list[str]) -> int:
         _check_section(table, name, cur, base)
     _check_batch_sweep(table, cur, base)
     _check_eo_sharded(table, cur, base)
+    _check_ckpt_overhead(table, cur, base)
     if not table.rows:
         print("solver-regression guard: nothing to compare (baseline has "
               "no guarded sections)")

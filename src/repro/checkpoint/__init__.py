@@ -1,2 +1,3 @@
-from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (latest_step, prune_checkpoints,
+                                   restore_checkpoint, restore_latest,
+                                   save_checkpoint, valid_steps)

@@ -13,15 +13,21 @@ the data pipeline's step-indexed batches are the other half.
 from __future__ import annotations
 
 import hashlib
+import io
 import json
 import os
 import shutil
+import sys
 import tempfile
 
 import jax
 import numpy as np
 
 _SEP = "§"
+
+
+def _warn(msg: str) -> None:
+    print(f"[ckpt] {msg}", file=sys.stderr)
 
 
 def _flatten(tree):
@@ -60,31 +66,56 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
         raise
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """Ascending list of step numbers with a COMPLETE ``step_<N>`` dir.
+
+    Complete means the atomic rename landed (manifest.json present) —
+    contents may still fail the checksum; :func:`restore_checkpoint`
+    verifies that per step.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if name.startswith("step_") and \
                 os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
             steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, target_tree,
-                       shardings=None):
-    """Restore into the structure of ``target_tree`` (shapes must match);
-    ``shardings`` (same pytree of NamedSharding/None) re-shards elastically
-    onto the current mesh."""
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    for step in valid_steps(ckpt_dir)[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{step:08d}"),
+                      ignore_errors=True)
+
+
+def _restore_step(ckpt_dir: str, step: int, target_tree, shardings):
+    """Restore exactly ``step_<step>``; IOError on any corruption
+    (unreadable/tampered manifest, truncated or checksum-failing npz)."""
     path = os.path.join(ckpt_dir, f"step_{int(step):08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    npz = os.path.join(path, "arrays.npz")
-    with open(npz, "rb") as f:
-        digest = hashlib.sha256(f.read()).hexdigest()
-    if digest != manifest["sha256"]:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with open(os.path.join(path, "arrays.npz"), "rb") as f:
+            raw = f.read()
+    except (OSError, ValueError) as e:
+        raise IOError(f"checkpoint {path} is unreadable ({e})") from e
+    if not isinstance(manifest, dict) or "sha256" not in manifest:
+        raise IOError(f"checkpoint {path} has a tampered manifest")
+    if hashlib.sha256(raw).hexdigest() != manifest["sha256"]:
         raise IOError(f"checkpoint {path} failed checksum verification")
-    data = np.load(npz)
+    # checksum passed: the bytes are exactly what the writer wrote, so any
+    # error past this point is a CALLER mismatch (wrong target tree), not
+    # corruption — those raise and never trigger the fallback walk
+    data = np.load(io.BytesIO(raw))
     flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
@@ -100,3 +131,50 @@ def restore_checkpoint(ckpt_dir: str, step: int, target_tree,
         leaves.append(jax.device_put(arr, shd) if shd is not None
                       else jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target_tree,
+                       shardings=None):
+    """Restore into the structure of ``target_tree`` (shapes must match);
+    ``shardings`` (same pytree of NamedSharding/None) re-shards elastically
+    onto the current mesh.
+
+    Corruption-tolerant: when ``step_<step>`` fails its checksum (or is
+    truncated/unreadable), the restore FALLS BACK to the previous complete
+    step instead of raising — a crash mid-write or a bad sector costs one
+    checkpoint interval, not the whole run.  Raises IOError only when no
+    step at or below ``step`` restores cleanly.
+    """
+    candidates = [s for s in valid_steps(ckpt_dir) if s <= int(step)]
+    last_err: IOError | None = None
+    for s in sorted(candidates, reverse=True):
+        try:
+            return _restore_step(ckpt_dir, s, target_tree, shardings)
+        except IOError as e:
+            last_err = e
+            _warn(f"{e}; falling back to the previous complete step")
+    if last_err is not None:
+        raise last_err
+    raise IOError(f"no complete checkpoint at or below step {int(step)} "
+                  f"in {ckpt_dir}")
+
+
+def restore_latest(ckpt_dir: str, target_tree, shardings=None):
+    """``(step, tree)`` from the newest checkpoint that restores cleanly.
+
+    Walks complete steps newest-first, skipping any that fail checksum
+    verification (with a warning).  Raises FileNotFoundError when the
+    directory holds no complete checkpoint at all, IOError when every
+    complete checkpoint is corrupt.
+    """
+    steps = valid_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    last_err: IOError | None = None
+    for s in reversed(steps):
+        try:
+            return s, _restore_step(ckpt_dir, s, target_tree, shardings)
+        except IOError as e:
+            last_err = e
+            _warn(f"{e}; falling back to the previous complete step")
+    raise last_err

@@ -50,7 +50,7 @@ inside their forwarders.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Callable, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -296,7 +296,9 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
           max_outer: int = 50, residual_replacement_every: int = 25,
           dot=field_dot, norm2=field_norm2,
           layout: str = "natural",
-          verify: bool = True) -> tuple[Array, solvers.SolveStats]:
+          verify: bool = True,
+          checkpoint: "CheckpointPolicy | None" = None,
+          ) -> tuple[Array, solvers.SolveStats]:
     """Execute a :class:`SolverPlan`: the single entry point of the stack.
 
     Args:
@@ -316,6 +318,12 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
         themselves (e.g. the retry ladder, which checks the accumulated
         iterate against the original system) — they must not treat the
         returned x as trusted.
+      checkpoint: a :class:`CheckpointPolicy` makes the solve DURABLE —
+        the identical while-loop body runs in segments of at most
+        ``every_iters`` iterations, snapshotting ``(x, iteration,
+        verdict, rhs_mask)`` to ``checkpoint.dir`` between segments (see
+        :func:`loop_program`; DESIGN.md §11).  ``None`` (the default)
+        runs the historical single-while-loop program.
     Returns:
       (x, SolveStats) — solution in the input layout; per-RHS stats
       fields (residual_norm2/converged/rhs_iterations) when batched.
@@ -327,6 +335,13 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
         raise ValueError("layout='packed' is the full-operator contract; "
                          "the even-odd paths take natural-layout fields")
     _check_batch_shape(plan, b, layout)
+    if checkpoint is not None:
+        return _solve_checkpointed(
+            plan, u, b, mass, checkpoint=checkpoint, tol=tol,
+            maxiter=maxiter, inner_tol=inner_tol,
+            inner_maxiter=inner_maxiter, max_outer=max_outer,
+            residual_replacement_every=residual_replacement_every,
+            dot=dot, norm2=norm2, layout=layout, verify=verify)
     kw = dict(tol=tol, maxiter=maxiter, inner_tol=inner_tol,
               inner_maxiter=inner_maxiter, max_outer=max_outer,
               residual_replacement_every=residual_replacement_every,
@@ -602,6 +617,25 @@ def _solve_eo_sharded(plan, u, b, mass, *, tol, maxiter,
     never sharded, so every gauge halo plane travels once per direction
     regardless of N.
     """
+    batched = plan.batched
+    upe, upo, pb_e, pb_o = _eo_sharded_prep(plan, u, b)
+    solver = _sharded_eo_solver(plan, float(mass), float(tol), int(maxiter),
+                                int(residual_replacement_every))
+    x_e, x_o, stats = solver(upe, upo, pb_e, pb_o)
+    xe = unpack_spinor(x_e, dtype=b.dtype)
+    xo = unpack_spinor(x_o, dtype=b.dtype)
+    x = jax.vmap(merge_eo)(xe, xo) if batched else merge_eo(xe, xo)
+    return x, stats
+
+
+def _eo_sharded_prep(plan: SolverPlan, u: Array, b: Array):
+    """Validate a sharded even-odd plan and shard its packed parity fields.
+
+    Returns ``(upe, upo, pb_e, pb_o)`` device_put with the mesh shardings
+    — the common front half of the one-shot sharded solve AND the
+    segmented program (which re-enters shard_map once per segment over
+    the same resident shards).
+    """
     mesh = plan.mesh
     batched = plan.batched
     if plan.r != 1.0:
@@ -631,13 +665,7 @@ def _solve_eo_sharded(plan, u, b, mass, *, tol, maxiter,
     bspec = P(None, *psi_spec) if batched else psi_spec
     gput = lambda a: jax.device_put(a, NamedSharding(mesh, gauge_spec))
     sput = lambda a: jax.device_put(a, NamedSharding(mesh, bspec))
-    solver = _sharded_eo_solver(plan, float(mass), float(tol), int(maxiter),
-                                int(residual_replacement_every))
-    x_e, x_o, stats = solver(gput(upe), gput(upo), sput(pb_e), sput(pb_o))
-    xe = unpack_spinor(x_e, dtype=b.dtype)
-    xo = unpack_spinor(x_o, dtype=b.dtype)
-    x = jax.vmap(merge_eo)(xe, xo) if batched else merge_eo(xe, xo)
-    return x, stats
+    return gput(upe), gput(upo), sput(pb_e), sput(pb_o)
 
 
 # (plan identity, solve params) -> jitted shard_map'd solve.  Reusing the
@@ -696,3 +724,483 @@ def _sharded_eo_solver(plan: SolverPlan, mass: float, tol: float,
         check_vma=False))
     _SHARDED_EO_CACHE[key] = solver
     return solver
+
+
+# ---------------------------------------------------------------------------
+# Segmented solving — durability without touching the hot loop (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# A CheckpointPolicy runs the SAME ``lax.while_loop`` body in segments of
+# at most ``every_iters`` iterations and snapshots ``(x, iteration,
+# verdict, rhs_mask)`` between segments.  The decomposition lives in
+# ``solvers.LoopParts``: the segmented stopping rule is the solver's own
+# ``cond`` AND an iteration bound, so the while-loop BODY jaxpr is bitwise
+# identical to the unsegmented solve (asserted in
+# tests/test_checkpoint_resume.py) and there are zero host syncs inside
+# the loop — all snapshot I/O happens at segment boundaries on the host.
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """How a durable solve checkpoints.
+
+    Fields:
+      dir:         checkpoint directory (``step_<N>`` subdirs; see
+        :mod:`repro.checkpoint.ckpt`).
+      every_iters: segment length — snapshot after at most this many
+        iterations (inner iterations for precision="mixed", whose
+        segments end at reliable-update boundaries and may overshoot by
+        one inner solve).
+      keep:        how many newest checkpoints to retain; older steps are
+        pruned after each snapshot.  Keep >= 2 so a crash mid-write plus
+        a corrupted latest step still leaves a restorable previous step.
+    """
+
+    dir: str
+    every_iters: int = 50
+    keep: int = 2
+
+    def __post_init__(self):
+        if not self.dir:
+            raise ValueError("CheckpointPolicy.dir must be a directory path")
+        if self.every_iters < 1:
+            raise ValueError("CheckpointPolicy.every_iters must be >= 1, "
+                             f"got {self.every_iters}")
+        if self.keep < 1:
+            raise ValueError(f"CheckpointPolicy.keep must be >= 1, "
+                             f"got {self.keep}")
+
+
+class LoopProgram(NamedTuple):
+    """A plan's solve as a host-steppable program.
+
+    ``start()`` returns the initial ``(carry, continue?)``; ``step(carry,
+    stop)`` runs the solver's OWN while loop bounded by ``counter(carry)
+    < stop`` (``stop`` traced — one compiled program serves every
+    segment) and returns the advanced ``(carry, continue?)``;
+    ``finalize(carry)`` produces ``(x, SolveStats)`` in the plan's output
+    layout from ANY carry — which is exactly what a snapshot stores.
+    ``counter(carry)`` is the host-side iteration count (one device sync,
+    at a segment boundary only).
+    """
+
+    start: Callable      # () -> (carry, cont)
+    step: Callable       # (carry, stop: int32) -> (carry, cont)
+    counter: Callable    # carry -> host int iteration count
+    finalize: Callable   # carry -> (x, SolveStats)
+
+
+def _segmented_program(parts: solvers.LoopParts, post) -> LoopProgram:
+    """Wrap single-device :class:`solvers.LoopParts` as a LoopProgram.
+
+    ``post(x_solver, stats)`` maps the solver-space iterate (e.g. the
+    even half field) to the plan's output layout — back-substitution,
+    unpacking, merging.  It runs at segment boundaries and at the end,
+    never inside the loop.
+    """
+    seg_cond = solvers.segment_cond(parts)
+
+    @jax.jit
+    def step(carry, stop):
+        out = jax.lax.while_loop(lambda c: seg_cond(c, stop),
+                                 parts.body, carry)
+        return out, parts.cond(out)
+
+    def start():
+        return parts.init, parts.cond(parts.init)
+
+    def counter(carry):
+        return int(jax.device_get(parts.counter(carry)))
+
+    def finalize(carry):
+        return post(*parts.finish(carry))
+
+    return LoopProgram(start=start, step=step, counter=counter,
+                       finalize=finalize)
+
+
+def _loop_program_eo(plan, u, b, mass, *, tol, maxiter, dot, norm2,
+                     residual_replacement_every, **_):
+    """Segmented form of :func:`_solve_eo` — same prep, same loop body."""
+    ctx = resolve(plan, u, mass, out_dtype=b.dtype)
+    b_e, b_o = ctx.prepare(b)
+    ops = ctx.ops
+    b_hat = b_e - ops.d_eo(ops.m_inv(b_o))
+    a_hat = lambda v: ops.dhat_dag(ops.dhat(v))
+    rhs = ops.dhat_dag(b_hat)
+    if plan.solver == "pipecg":
+        parts = solvers.pipecg_parts(
+            a_hat, rhs, tol=tol, maxiter=maxiter,
+            residual_replacement_every=residual_replacement_every,
+            dot=dot, norm2=norm2, batched=ctx.batched)
+    else:
+        engine = {}
+        if ctx.engine is not None:
+            engine = dict(update=ctx.engine[0], xpay=ctx.engine[1])
+        parts = solvers.cg_parts(a_hat, rhs, tol=tol, maxiter=maxiter,
+                                 dot=dot, norm2=norm2, batched=ctx.batched,
+                                 **engine)
+
+    def post(x_e, stats):
+        x_o = ops.m_inv(b_o - ops.d_oe(x_e))
+        return ctx.finish(x_e, x_o), stats
+
+    return _segmented_program(parts, post)
+
+
+def _loop_program_eo_mp(plan, u, b, mass, *, tol, maxiter, inner_tol,
+                        inner_maxiter, max_outer, dot, norm2, **_):
+    """Segmented form of :func:`_solve_eo_mp`.
+
+    The segment boundary is a reliable-update boundary (``mpcg_parts``
+    counts accumulated inner iterations), so every snapshot holds an
+    iterate whose true residual was just recomputed in high precision.
+    """
+    low_dtype = plan.low_dtype
+    twist = _family_site(plan, mass).twist
+    ctx = resolve(plan, u, mass, out_dtype=b.dtype)
+    b_e, b_o = ctx.prepare(b)
+    ops = ctx.ops
+    if ctx.packed:
+        # local import: see eo_operators_packed
+        from repro.kernels.wilson_dslash import ops as wops
+
+        high = b_e.dtype
+        u_e_lo = ops.u_e.astype(low_dtype)
+        u_o_lo = ops.u_o.astype(low_dtype)
+        kkw = dict(twist=twist, bz=plan.bz, interpret=plan.interpret)
+
+        def a_low(w):
+            return wops.schur_normal_op(u_e_lo, u_o_lo, w, mass, **kkw)
+
+        def a_high(v):
+            return wops.schur_normal_op(ops.u_e, ops.u_o, v, mass, **kkw)
+
+        to_low = lambda v: v.astype(low_dtype)
+        to_high = lambda w: w.astype(high)
+    else:
+        high = b.dtype
+
+        def round_links(w):
+            pair = complex_to_real_pair(w, dtype=low_dtype)
+            return real_pair_to_complex(pair, dtype=w.dtype)
+
+        u_e_lo, u_o_lo = round_links(ops.u_e), round_links(ops.u_o)
+
+        def a_low(w):
+            v = real_pair_to_complex(w, dtype=high)
+            av = schur_normal_op_g(u_e_lo, u_o_lo, v, mass, r=plan.r,
+                                   twist=twist)
+            return complex_to_real_pair(av, dtype=low_dtype)
+
+        def a_high(v):
+            return schur_normal_op_g(ops.u_e, ops.u_o, v, mass, r=plan.r,
+                                     twist=twist)
+
+        to_low = lambda v: complex_to_real_pair(v, dtype=low_dtype)
+        to_high = lambda w: real_pair_to_complex(w, dtype=high)
+
+    engine = {}
+    if ctx.engine is not None:
+        engine = dict(update=ctx.engine[0], xpay=ctx.engine[1])
+    b_hat = b_e - ops.d_eo(ops.m_inv(b_o))
+    parts = solvers.mpcg_parts(
+        a_low, a_high, ops.dhat_dag(b_hat), tol=tol, inner_tol=inner_tol,
+        inner_maxiter=inner_maxiter, max_outer=max_outer,
+        low_dtype=low_dtype, to_low=to_low, to_high=to_high,
+        dot=dot, norm2=norm2, **engine)
+
+    def post(x_e, stats):
+        x_o = ops.m_inv(b_o - ops.d_oe(x_e))
+        return ctx.finish(x_e, x_o), stats
+
+    return _segmented_program(parts, post)
+
+
+def _loop_program_full(plan, u, b, mass, *, tol, maxiter, inner_tol,
+                       inner_maxiter, max_outer,
+                       residual_replacement_every, dot, norm2, layout):
+    """Segmented form of :func:`_solve_full` — same prep, same loop body."""
+    # local import: see eo_operators_packed
+    from repro.kernels.wilson_dslash import ops as wops
+
+    packed_in = layout == "packed"
+    up = u if packed_in else pack_gauge(u)
+    pp = b if packed_in else pack_spinor(b)
+    m = float(mass)
+    kw = dict(twist=_family_site(plan, mass).twist, bz=plan.bz,
+              interpret=plan.interpret,
+              use_pallas=plan.backend == "pallas")
+    op_hi = lambda v: wops.normal_op(up, v, m, **kw)
+    rhs = wops.dslash_dagger(up, pp, m, **kw)
+    batched = plan.batched
+    cast_low = False
+    if plan.precision == "single":
+        if plan.solver == "pipecg":
+            parts = solvers.pipecg_parts(
+                op_hi, rhs, tol=tol, maxiter=maxiter,
+                residual_replacement_every=residual_replacement_every,
+                dot=dot, norm2=norm2, batched=batched)
+        else:
+            parts = solvers.cg_parts(op_hi, rhs, tol=tol, maxiter=maxiter,
+                                     dot=dot, norm2=norm2, batched=batched)
+    else:
+        low_dtype = plan.low_dtype
+        up_lo = up.astype(low_dtype)
+        op_lo = lambda v: wops.normal_op(up_lo, v, m, **kw)
+        if plan.precision == "mixed":
+            parts = solvers.mpcg_parts(op_lo, op_hi, rhs, tol=tol,
+                                       inner_tol=inner_tol,
+                                       inner_maxiter=inner_maxiter,
+                                       max_outer=max_outer,
+                                       low_dtype=low_dtype,
+                                       dot=dot, norm2=norm2, batched=batched)
+        else:  # "low": all-low cg16 — NOT accurate to tol; a measurement rig
+            parts = solvers.cg_parts(op_lo, rhs.astype(low_dtype), tol=tol,
+                                     maxiter=maxiter, dot=dot, norm2=norm2,
+                                     batched=batched)
+            cast_low = True
+
+    def post(x, stats):
+        if cast_low:
+            x = x.astype(pp.dtype)
+        if packed_in:
+            return x, stats
+        return unpack_spinor(x, dtype=b.dtype), stats
+
+    return _segmented_program(parts, post)
+
+
+# (plan identity, solve params) -> (start, step, finish) jitted shard_maps.
+# Same reuse rationale as _SHARDED_EO_CACHE: every segment of every solve
+# with the same plan hits the same three compiled programs.
+_SHARDED_EO_SEG_CACHE: dict = {}
+
+
+def _sharded_eo_segment_fns(plan: SolverPlan, mass: float, tol: float,
+                            maxiter: int, residual_replacement_every: int):
+    """The sharded even-odd solve split into start/step/finish shard_maps.
+
+    Each function rebuilds the SAME LoopParts inside its trace (the
+    right-hand-side prep is ~2 matvecs, re-traced per segment boundary
+    and dead-code-eliminated where unused); the step's while loop uses
+    the identical ``parts.body`` the one-shot sharded solve uses, bounded
+    by a TRACED ``stop`` so one compiled step serves every segment.  The
+    carry crosses shard_map boundaries with static per-leaf specs
+    (fields sharded, scalars/masks replicated) and stays resident on the
+    mesh between segments.
+    """
+    key = (plan.cache_key(), mass, tol, maxiter, residual_replacement_every)
+    cached = _SHARDED_EO_SEG_CACHE.get(key)
+    if cached is not None:
+        return cached
+    mesh = plan.mesh
+    batched = plan.batched
+    psi_spec, gauge_spec, sharded = dist.lattice_specs(mesh, plan.axis_map)
+    bspec = P(None, *psi_spec) if batched else psi_spec
+    site = _family_site(plan, mass)
+    twist = site.twist
+    kkw = dict(sharded=sharded, use_pallas=plan.backend == "pallas",
+               bz=plan.bz, interpret=plan.interpret)
+    skw = dict(twist=twist, **kkw)
+    pdot, pnorm2 = dist.make_psum_dots(mesh, batched=batched)
+
+    def make_parts(upe_l, upo_l, pbe_l, pbo_l):
+        d_eo = lambda v: dist.parity_hop_halo("eo", upe_l, upo_l, v, **kkw)
+        d_oe = lambda v: dist.parity_hop_halo("oe", upe_l, upo_l, v, **kkw)
+        dhat_dag = lambda v: dist.schur_op_halo(upe_l, upo_l, v, mass,
+                                                dagger=True, **skw)
+        a_hat = lambda v: dist.schur_normal_op_halo(upe_l, upo_l, v, mass,
+                                                    **skw)
+        m_inv = site.solve
+        b_hat = pbe_l - d_eo(m_inv(pbo_l))
+        rhs = dhat_dag(b_hat)
+        if plan.solver == "pipecg":
+            parts = solvers.pipecg_parts(
+                a_hat, rhs, tol=tol, maxiter=maxiter,
+                residual_replacement_every=residual_replacement_every,
+                dot=pdot, norm2=pnorm2, batched=batched,
+                fused_dots=dist.make_fused_psum_dots(mesh, batched=batched))
+        else:
+            parts = solvers.cg_parts(a_hat, rhs, tol=tol, maxiter=maxiter,
+                                     dot=pdot, norm2=pnorm2, batched=batched)
+        return parts, m_inv, d_oe
+
+    # static per-leaf carry specs: half fields sharded like the RHS,
+    # counters/scalars/masks replicated (they are psum-consistent across
+    # shards, so P() is exact, not an approximation)
+    if plan.solver == "pipecg":
+        carry_spec = ((P(),) + (bspec,) * 6 + (P(),) * 5
+                      + ((P(),) if batched else ()) + (P(),))
+    else:
+        carry_spec = ((P(),) + (bspec,) * 3 + (P(),)
+                      + ((P(),) if batched else ()) + (P(), P()))
+    stats_spec = solvers.SolveStats(P(), P(), P(), P(),
+                                    P() if batched else None,
+                                    verdict=P())
+    gspecs = (gauge_spec, gauge_spec, bspec, bspec)
+
+    def local_start(upe_l, upo_l, pbe_l, pbo_l):
+        parts, _, _ = make_parts(upe_l, upo_l, pbe_l, pbo_l)
+        return parts.init, parts.cond(parts.init)
+
+    def local_step(upe_l, upo_l, pbe_l, pbo_l, carry, stop):
+        parts, _, _ = make_parts(upe_l, upo_l, pbe_l, pbo_l)
+        seg_cond = solvers.segment_cond(parts)
+        out = jax.lax.while_loop(lambda c: seg_cond(c, stop),
+                                 parts.body, carry)
+        return out, parts.cond(out)
+
+    def local_finish(upe_l, upo_l, pbe_l, pbo_l, carry):
+        parts, m_inv, d_oe = make_parts(upe_l, upo_l, pbe_l, pbo_l)
+        x_e, stats = parts.finish(carry)
+        x_o = m_inv(pbo_l - d_oe(x_e))
+        return x_e, x_o, stats
+
+    start = jax.jit(compat.shard_map(
+        local_start, mesh=mesh, in_specs=gspecs,
+        out_specs=(carry_spec, P()), check_vma=False))
+    step = jax.jit(compat.shard_map(
+        local_step, mesh=mesh, in_specs=gspecs + (carry_spec, P()),
+        out_specs=(carry_spec, P()), check_vma=False))
+    finish = jax.jit(compat.shard_map(
+        local_finish, mesh=mesh, in_specs=gspecs + (carry_spec,),
+        out_specs=(bspec, bspec, stats_spec), check_vma=False))
+    fns = (start, step, finish)
+    _SHARDED_EO_SEG_CACHE[key] = fns
+    return fns
+
+
+def _loop_program_eo_sharded(plan, u, b, mass, *, tol, maxiter,
+                             residual_replacement_every, **_):
+    """Segmented form of :func:`_solve_eo_sharded`.
+
+    Carry stays sharded on the mesh between segments; ``finalize``
+    gathers the global natural-layout iterate — so a snapshot stores
+    UNSHARDED host arrays and a checkpoint written on a 2x2x2 mesh
+    restores on a smaller mesh or on CPU (the elastic-resume contract).
+    """
+    batched = plan.batched
+    upe, upo, pb_e, pb_o = _eo_sharded_prep(plan, u, b)
+    start_f, step_f, finish_f = _sharded_eo_segment_fns(
+        plan, float(mass), float(tol), int(maxiter),
+        int(residual_replacement_every))
+
+    def start():
+        return start_f(upe, upo, pb_e, pb_o)
+
+    def step(carry, stop):
+        return step_f(upe, upo, pb_e, pb_o, carry,
+                      jnp.asarray(stop, jnp.int32))
+
+    def counter(carry):
+        # both cg and pipecg carry the iteration count in slot 0
+        return int(jax.device_get(carry[0]))
+
+    def finalize(carry):
+        x_e, x_o, stats = finish_f(upe, upo, pb_e, pb_o, carry)
+        xe = unpack_spinor(x_e, dtype=b.dtype)
+        xo = unpack_spinor(x_o, dtype=b.dtype)
+        x = jax.vmap(merge_eo)(xe, xo) if batched else merge_eo(xe, xo)
+        return x, stats
+
+    return LoopProgram(start=start, step=step, counter=counter,
+                       finalize=finalize)
+
+
+def loop_program(plan: SolverPlan, u: Array, b: Array, mass, *,
+                 tol: float = 1e-8, maxiter: int = 1000,
+                 inner_tol: float = 5e-2, inner_maxiter: int = 200,
+                 max_outer: int = 50, residual_replacement_every: int = 25,
+                 dot=field_dot, norm2=field_norm2,
+                 layout: str = "natural") -> LoopProgram:
+    """Resolve a plan to its host-steppable :class:`LoopProgram`.
+
+    Mirrors :func:`solve`'s dispatch table; ``finalize(carry)`` after
+    stepping to completion is numerically identical to the one-shot
+    ``solve`` (and BITWISE identical for the while-loop body — only the
+    stopping condition differs; see :class:`solvers.LoopParts`).
+    """
+    if layout not in ("natural", "packed"):
+        raise ValueError(f"layout must be 'natural' or 'packed', "
+                         f"got {layout!r}")
+    if layout == "packed" and plan.operator != "full":
+        raise ValueError("layout='packed' is the full-operator contract; "
+                         "the even-odd paths take natural-layout fields")
+    _check_batch_shape(plan, b, layout)
+    kw = dict(tol=tol, maxiter=maxiter, inner_tol=inner_tol,
+              inner_maxiter=inner_maxiter, max_outer=max_outer,
+              residual_replacement_every=residual_replacement_every,
+              dot=dot, norm2=norm2)
+    if plan.mesh is not None:
+        if plan.operator != "eo-schur":
+            raise NotImplementedError(
+                "segmented solving on a mesh is wired for the eo-schur "
+                "fast path; use operator='eo-schur' (or drop the mesh)")
+        if plan.precision != "single":
+            raise NotImplementedError(
+                "sharded eo-schur supports precision='single' (the "
+                "mixed-precision Schur solve is single-device for now)")
+        return _loop_program_eo_sharded(plan, u, b, mass, **kw)
+    if plan.operator == "eo-schur":
+        if plan.precision == "mixed":
+            if plan.batched:
+                raise NotImplementedError(
+                    "batched mixed-precision eo-schur is not wired yet; "
+                    "drop nrhs or precision")
+            return _loop_program_eo_mp(plan, u, b, mass, **kw)
+        return _loop_program_eo(plan, u, b, mass, **kw)
+    return _loop_program_full(plan, u, b, mass, layout=layout, **kw)
+
+
+def _snapshot(checkpoint: CheckpointPolicy, plan: SolverPlan,
+              prog: LoopProgram, carry) -> int:
+    """Write one durable snapshot from a segment-boundary carry.
+
+    Stores the plan-layout iterate plus exactly the resume contract —
+    ``(x, iteration, verdict, rhs_mask)`` — as UNSHARDED host arrays
+    (``ckpt`` gathers on save), keyed by the iteration count as the step
+    number.  Returns the step written.
+    """
+    from repro.checkpoint import ckpt
+
+    x, stats = prog.finalize(carry)
+    step = int(jax.device_get(stats.iterations))
+    ckpt.save_checkpoint(checkpoint.dir, step, {
+        "x": x,
+        "iteration": stats.iterations,
+        "verdict": stats.verdict,
+        "rhs_mask": stats.converged,
+    })
+    ckpt.prune_checkpoints(checkpoint.dir, checkpoint.keep)
+    return step
+
+
+def _solve_checkpointed(plan, u, b, mass, *, checkpoint, tol, maxiter,
+                        inner_tol, inner_maxiter, max_outer,
+                        residual_replacement_every, dot, norm2, layout,
+                        verify):
+    """Run a plan's LoopProgram in segments, snapshotting between them.
+
+    The host loop below is the ONLY durability addition: everything
+    between two snapshots is the unsegmented solve's own compiled while
+    loop.  A process killed mid-segment loses at most ``every_iters``
+    iterations; :func:`repro.core.resilience.resume_solve` picks the run
+    back up from the latest valid snapshot.
+    """
+    prog = loop_program(plan, u, b, mass, tol=tol, maxiter=maxiter,
+                        inner_tol=inner_tol, inner_maxiter=inner_maxiter,
+                        max_outer=max_outer,
+                        residual_replacement_every=residual_replacement_every,
+                        dot=dot, norm2=norm2, layout=layout)
+    every = int(checkpoint.every_iters)
+    carry, cont = prog.start()
+    while bool(jax.device_get(cont)):
+        stop = prog.counter(carry) + every
+        carry, cont = prog.step(carry, jnp.asarray(stop, jnp.int32))
+        _snapshot(checkpoint, plan, prog, carry)
+    x, stats = prog.finalize(carry)
+    if verify:
+        stats = _attach_verification(plan, u, b, mass, x, stats, tol,
+                                     layout=layout)
+    return x, stats

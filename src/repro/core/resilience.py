@@ -39,7 +39,8 @@ from repro.core.lattice import field_norm2, field_norm2_batched
 from repro.core.operators import dslash_g
 from repro.core.solvers import verdict_name
 
-__all__ = ["AttemptRecord", "RetryPolicy", "SolveFailure", "defended_solve"]
+__all__ = ["AttemptRecord", "ResumeRecord", "RetryPolicy", "SolveFailure",
+           "defended_solve", "resume_solve"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +123,7 @@ def _all(v) -> bool:
 def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
                    tol: float = 1e-8, maxiter: int = 1000,
                    policy: RetryPolicy | None = None,
+                   x0=None, checkpoint=None,
                    **solve_kw):
     """Run ``plan.solve`` under a retry/escalation ladder.
 
@@ -135,6 +137,20 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
     ``r = b - D x`` recomputed fresh (one matvec through the registry
     oracle) and a tolerance rescaled by ``‖b‖/‖r‖``, then accumulates
     ``x + d``.  Breakdown/NaN iterates restart from zero instead.
+
+    ``x0`` seeds the FIRST attempt with an existing iterate through the
+    same defect-correction machinery — this is how :func:`resume_solve`
+    continues from a checkpoint: the saved x becomes the accumulated
+    iterate, attempt 0 solves only the remaining defect, and the
+    accumulated solution is verified against the ORIGINAL system.  A
+    non-finite ``x0`` is discarded (attempt 0 then starts from zero).
+
+    ``checkpoint`` (a :class:`plan.CheckpointPolicy`) makes the
+    from-scratch attempts durable.  Restarted attempts deliberately run
+    WITHOUT it: their solver iterate is a defect correction ``d``, not
+    the accumulated solution, and snapshotting it would poison a later
+    resume — the caller (``resume_solve``) re-checkpoints the verified
+    accumulated iterate instead.
     """
     policy = RetryPolicy() if policy is None else policy
     ladder = policy.ladder(plan)
@@ -150,6 +166,13 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
     bs = jnp.real(norm2(b))
     attempts: list[AttemptRecord] = []
     x_acc = None          # accumulated finite iterate (None: start from 0)
+    if x0 is not None:
+        x0 = jnp.asarray(x0).astype(b.dtype)
+        if x0.shape != b.shape:
+            raise ValueError(
+                f"defended_solve: x0 shape {x0.shape} does not match the "
+                f"RHS shape {b.shape}")
+        x_acc = x0  # finiteness is checked by the restart path below
     last_verdict = "nonfinite"
     for attempt in range(policy.max_attempts):
         rung = ladder[min(attempt, len(ladder) - 1)]
@@ -170,8 +193,11 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
                 restarted = True
             else:
                 x_acc = None  # poisoned iterate: restart from scratch
+        ckw = dict(solve_kw)
+        if checkpoint is not None and not restarted:
+            ckw["checkpoint"] = checkpoint
         x, stats = plan_mod.solve(rung, u, rhs, mass, tol=rhs_tol,
-                                  maxiter=maxiter, **solve_kw)
+                                  maxiter=maxiter, **ckw)
         x_try = x if not restarted else x_acc + x
         # verify the ACCUMULATED iterate against the original system (the
         # per-attempt stats verified the defect system only)
@@ -204,3 +230,79 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
         f"without a verified solution (last verdict: {last_verdict}; "
         f"ladder: {[_plan_desc(p) for p in ladder]})",
         verdict=last_verdict, attempts=tuple(attempts))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeRecord:
+    """How a :func:`resume_solve` picked a run back up."""
+
+    resumed_from_step: int | None   # None: no checkpoint found, fresh solve
+    checkpoint_iterations: int      # iterations banked before the crash
+    checkpoint_verdict: str | None  # verdict saved with the checkpoint
+    attempts: tuple[AttemptRecord, ...]
+
+
+def resume_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
+                 checkpoint_dir: str, tol: float = 1e-8,
+                 maxiter: int = 1000, policy: RetryPolicy | None = None,
+                 missing_ok: bool = False, **solve_kw):
+    """Continue an interrupted checkpointed solve (DESIGN.md §11).
+
+    Restores the latest VALID checkpoint from ``checkpoint_dir``
+    (checksum-verified; a corrupt newest step falls back to the previous
+    one), seeds :func:`defended_solve` with the saved iterate — which
+    defect-corrects against the ORIGINAL system and re-verifies the
+    accumulated solution — and finally re-checkpoints the verified
+    result, so repeated crash/resume cycles keep converging.
+
+    Checkpoints store UNSHARDED host arrays, so a solve checkpointed on
+    a 2x2x2 mesh resumes here on a smaller mesh or on CPU: pass whatever
+    ``plan`` fits the surviving hardware — only its lattice/batch shape
+    must match the crashed run's.
+
+    ``missing_ok=True`` turns "no checkpoint yet" (a crash before the
+    first segment boundary) into a fresh defended solve instead of an
+    error.  Returns ``(x, stats, ResumeRecord)``.
+    """
+    from repro.checkpoint import ckpt
+
+    vshape = (plan.nrhs,) if plan.batched else ()
+    target = {
+        "iteration": jax.ShapeDtypeStruct((), jnp.int32),
+        "rhs_mask": jax.ShapeDtypeStruct(vshape, jnp.bool_),
+        "verdict": jax.ShapeDtypeStruct(vshape, jnp.int32),
+        "x": jax.ShapeDtypeStruct(b.shape, b.dtype),
+    }
+    try:
+        step, tree = ckpt.restore_latest(checkpoint_dir, target)
+    # ONLY "directory holds no checkpoint at all" is a fresh start;
+    # "every checkpoint is corrupt" (plain IOError) stays a hard error
+    # even under missing_ok — data exists but cannot be trusted
+    except FileNotFoundError:
+        if not missing_ok:
+            raise
+        step, ckpt_iters, ckpt_verdict, x0 = None, 0, None, None
+    else:
+        ckpt_iters = int(np.asarray(tree["iteration"]))
+        ckpt_verdict = verdict_name(int(np.asarray(tree["verdict"]).max()))
+        x0 = tree["x"]
+    x, stats, attempts = defended_solve(
+        plan, u, b, mass, tol=tol, maxiter=maxiter, policy=policy,
+        x0=x0, checkpoint=(None if x0 is not None else
+                           plan_mod.CheckpointPolicy(dir=checkpoint_dir)),
+        **solve_kw)
+    # bank the verified accumulated iterate: another crash right now
+    # resumes from DONE, not from a pre-crash (or mid-ladder) snapshot —
+    # defect-correction attempts deliberately never checkpointed, so the
+    # newest snapshot on disk may predate the accumulated solution
+    new_iters = sum(a.iterations for a in attempts)
+    ckpt.save_checkpoint(checkpoint_dir, ckpt_iters + new_iters, {
+        "x": x,
+        "iteration": jnp.asarray(ckpt_iters + new_iters, jnp.int32),
+        "verdict": jnp.broadcast_to(jnp.asarray(0, jnp.int32), vshape),
+        "rhs_mask": jnp.broadcast_to(jnp.asarray(True), vshape),
+    })
+    ckpt.prune_checkpoints(checkpoint_dir, 2)
+    return x, stats, ResumeRecord(
+        resumed_from_step=step, checkpoint_iterations=ckpt_iters,
+        checkpoint_verdict=ckpt_verdict, attempts=attempts)

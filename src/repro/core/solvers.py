@@ -107,6 +107,44 @@ def verdict_name(code) -> str:
     return VERDICTS[int(code)]
 
 
+# ---------------------------------------------------------------------------
+# Loop decomposition — the segmented-solving contract (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+class LoopParts(NamedTuple):
+    """A solver's ``lax.while_loop`` decomposed into reusable pieces.
+
+    ``cg``/``pipecg``/``mpcg`` are each exactly
+    ``finish(lax.while_loop(cond, body, init))`` over their parts — and a
+    SEGMENTED runner may instead iterate
+    ``while_loop(lambda c: cond(c) & (counter(c) < stop), body, carry)``
+    in bounded chunks, snapshotting the carry between chunks.  Because
+    both spellings close over the SAME ``body`` function with the same
+    carry avals, the while-loop body jaxpr is bitwise identical — the
+    durability layer (plan.CheckpointPolicy) never touches the hot loop,
+    only the stopping condition.  Asserted in tests/test_checkpoint_resume.
+    """
+
+    init: tuple                 # initial carry (concrete arrays)
+    cond: Callable              # carry -> bool   (the solver's own test)
+    body: Callable              # carry -> carry  (the hot loop, untouched)
+    finish: Callable            # carry -> (x, SolveStats)
+    counter: Callable           # carry -> int32 iteration count
+
+
+def segment_cond(parts: LoopParts) -> Callable:
+    """The segmented stopping rule: the solver's own ``cond`` AND an
+    iteration bound ``counter(carry) < stop`` (``stop`` traced, so one
+    compiled segment program serves every segment)."""
+
+    def cond(carry, stop):
+        return jnp.logical_and(parts.cond(carry),
+                               parts.counter(carry) < stop)
+
+    return cond
+
+
 def classify(rs: Array, limit: Array, broken=False, stalled=False) -> Array:
     """Classify a solver exit from its final ``‖r‖²`` and failure flags.
 
@@ -168,36 +206,15 @@ def _stop_limit(tol, bs: Array, batched: bool) -> Array:
 # Conjugate Gradient (HPD operator)
 # ---------------------------------------------------------------------------
 
-def cg(op: Op, b: Array, x0: Array | None = None, *,
-       tol: float = 1e-8, maxiter: int = 1000,
-       dot=field_dot, norm2=field_norm2,
-       update=None, xpay=None, batched: bool = False,
-       ) -> tuple[Array, SolveStats]:
-    """Standard conjugate gradient for a Hermitian positive-definite ``op``.
+def cg_parts(op: Op, b: Array, x0: Array | None = None, *,
+             tol: float = 1e-8, maxiter: int = 1000,
+             dot=field_dot, norm2=field_norm2,
+             update=None, xpay=None, batched: bool = False) -> LoopParts:
+    """:func:`cg` decomposed into :class:`LoopParts` (same arguments).
 
-    Stops when ``||r||^2 <= tol^2 * ||b||^2`` or at ``maxiter``.
-
-    ``update``/``xpay`` inject the iteration's vector algebra (the fused
-    vector engine; see the module docstring).  ``update`` must return the
-    residual norm it computed alongside the updated ``x``/``r`` so no
-    separate ``norm2`` pass over ``r`` is needed.  When a NON-default
-    ``norm2`` is also injected (e.g. a psum-ing distributed reduction),
-    the engine's locally-reduced norm cannot be trusted and ``norm2(r)``
-    is recomputed instead — a distributed fused engine should fold the
-    collective into ``update`` itself and leave ``norm2`` for the
-    initial residual only.
-
-    ``batched=True``: ``b`` (and ``op``'s in/out) carry a leading RHS-batch
-    axis; each system stops against ITS OWN ``tol² ||b_n||²`` through the
-    convergence mask — and ``tol`` itself may be a per-RHS (N,) vector
-    (see ``_stop_limit``), so systems with different target tolerances
-    share one masked loop — a converged system's ``alpha`` is masked to 0 (so
-    ``x_n``/``r_n`` freeze bitwise, even inside an injected engine) and
-    its direction update is gated off; the loop runs while ANY system is
-    active.  Default ``dot``/``norm2`` swap to their per-RHS versions; an
-    injected engine must follow the batched contract (per-RHS ``rs`` from
-    ``update``, gate argument on ``xpay``; see DESIGN.md §6).
-    """
+    ``cg(...)`` is exactly ``parts.finish(while_loop(parts.cond,
+    parts.body, parts.init))`` over these parts; a segmented runner reuses
+    the identical ``body`` (see :class:`LoopParts`)."""
     if batched:
         dot, norm2 = _batched_defaults(dot, norm2)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -271,18 +288,59 @@ def cg(op: Op, b: Array, x0: Array | None = None, *,
     if batched:
         init = init + (jnp.zeros_like(rs, jnp.int32),)
     init = init + (jnp.zeros(rs.shape, bool), rs)
-    out = jax.lax.while_loop(cond, body, init)
-    k, x, r, p, rs = out[:5]
-    broken, rs_mark = out[-2:]
-    # exit-time stagnation test: ran past a full window yet ‖r‖² failed to
-    # contract by STAGNATION_FACTOR since the last watermark
-    stalled = jnp.logical_and(k >= STAGNATION_WINDOW,
-                              rs > STAGNATION_FACTOR * rs_mark)
-    stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
-                       residual_norm2=rs, converged=rs <= limit,
-                       rhs_iterations=out[5] if batched else None,
-                       verdict=classify(rs, limit, broken, stalled))
-    return x, stats
+
+    def finish(out):
+        k, x, r, p, rs = out[:5]
+        broken, rs_mark = out[-2:]
+        # exit-time stagnation test: ran past a full window yet ‖r‖² failed
+        # to contract by STAGNATION_FACTOR since the last watermark
+        stalled = jnp.logical_and(k >= STAGNATION_WINDOW,
+                                  rs > STAGNATION_FACTOR * rs_mark)
+        stats = SolveStats(iterations=k,
+                           outer_iterations=jnp.asarray(1, jnp.int32),
+                           residual_norm2=rs, converged=rs <= limit,
+                           rhs_iterations=out[5] if batched else None,
+                           verdict=classify(rs, limit, broken, stalled))
+        return x, stats
+
+    return LoopParts(init=init, cond=cond, body=body, finish=finish,
+                     counter=lambda c: c[0])
+
+
+def cg(op: Op, b: Array, x0: Array | None = None, *,
+       tol: float = 1e-8, maxiter: int = 1000,
+       dot=field_dot, norm2=field_norm2,
+       update=None, xpay=None, batched: bool = False,
+       ) -> tuple[Array, SolveStats]:
+    """Standard conjugate gradient for a Hermitian positive-definite ``op``.
+
+    Stops when ``||r||^2 <= tol^2 * ||b||^2`` or at ``maxiter``.
+
+    ``update``/``xpay`` inject the iteration's vector algebra (the fused
+    vector engine; see the module docstring).  ``update`` must return the
+    residual norm it computed alongside the updated ``x``/``r`` so no
+    separate ``norm2`` pass over ``r`` is needed.  When a NON-default
+    ``norm2`` is also injected (e.g. a psum-ing distributed reduction),
+    the engine's locally-reduced norm cannot be trusted and ``norm2(r)``
+    is recomputed instead — a distributed fused engine should fold the
+    collective into ``update`` itself and leave ``norm2`` for the
+    initial residual only.
+
+    ``batched=True``: ``b`` (and ``op``'s in/out) carry a leading RHS-batch
+    axis; each system stops against ITS OWN ``tol² ||b_n||²`` through the
+    convergence mask — and ``tol`` itself may be a per-RHS (N,) vector
+    (see ``_stop_limit``), so systems with different target tolerances
+    share one masked loop — a converged system's ``alpha`` is masked to 0 (so
+    ``x_n``/``r_n`` freeze bitwise, even inside an injected engine) and
+    its direction update is gated off; the loop runs while ANY system is
+    active.  Default ``dot``/``norm2`` swap to their per-RHS versions; an
+    injected engine must follow the batched contract (per-RHS ``rs`` from
+    ``update``, gate argument on ``xpay``; see DESIGN.md §6).
+    """
+    parts = cg_parts(op, b, x0, tol=tol, maxiter=maxiter, dot=dot,
+                     norm2=norm2, update=update, xpay=xpay, batched=batched)
+    return parts.finish(jax.lax.while_loop(parts.cond, parts.body,
+                                           parts.init))
 
 
 def cg_trace(op: Op, b: Array, *, iters: int,
@@ -450,15 +508,19 @@ def mpcg_eo(a_low: Op, a_high: Op, dhat_dag: Op, d_eo: Op, d_oe: Op,
 # Mixed-precision reliable-update CG  (the paper's Ref. [10] variant)
 # ---------------------------------------------------------------------------
 
-def mpcg(op_low: Op, op_high: Op, b: Array, *,
-         tol: float = 1e-6, inner_tol: float = 5e-2,
-         inner_maxiter: int = 200, max_outer: int = 50,
-         low_dtype=jnp.bfloat16, to_low=None, to_high=None,
-         dot=field_dot, norm2=field_norm2,
-         update=None, xpay=None,
-         batched: bool = False) -> tuple[Array, SolveStats]:
-    """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
-    high-precision true-residual "reliable updates".
+def mpcg_parts(op_low: Op, op_high: Op, b: Array, *,
+               tol: float = 1e-6, inner_tol: float = 5e-2,
+               inner_maxiter: int = 200, max_outer: int = 50,
+               low_dtype=jnp.bfloat16, to_low=None, to_high=None,
+               dot=field_dot, norm2=field_norm2,
+               update=None, xpay=None, batched: bool = False) -> LoopParts:
+    """:func:`mpcg` decomposed into :class:`LoopParts` (same arguments).
+
+    The loop is the OUTER reliable-update cycle, so ``counter`` reads the
+    accumulated INNER iteration total (carry slot 1): a segmented runner
+    snapshots at reliable-update boundaries — exactly where the true
+    residual was just recomputed in high precision — and a segment may
+    overshoot its ``stop`` by at most one inner solve.
 
     Each outer cycle solves ``A d = r`` approximately in low precision
     (relative tolerance ``inner_tol``), then updates ``x += d`` and
@@ -528,29 +590,57 @@ def mpcg(op_low: Op, op_high: Op, b: Array, *,
     if batched:
         init = init + (jnp.zeros_like(bs, jnp.int32),)
     init = init + (jnp.zeros(bs.shape, bool), bs)
-    out = jax.lax.while_loop(cond, body, init)
-    outer, inner_total, x, r, rs = out[:5]
-    broken, rs_mark = out[-2:]
-    # outer-cycle stagnation: a reliable update that failed to contract the
-    # true residual by STAGNATION_FACTOR over the last cycle
-    stalled = jnp.logical_and(outer >= 2,
-                              rs > STAGNATION_FACTOR * rs_mark)
-    stats = SolveStats(iterations=inner_total, outer_iterations=outer,
-                       residual_norm2=rs, converged=rs <= limit,
-                       rhs_iterations=out[5] if batched else None,
-                       verdict=classify(rs, limit, broken, stalled))
-    return x, stats
+
+    def finish(out):
+        outer, inner_total, x, r, rs = out[:5]
+        broken, rs_mark = out[-2:]
+        # outer-cycle stagnation: a reliable update that failed to contract
+        # the true residual by STAGNATION_FACTOR over the last cycle
+        stalled = jnp.logical_and(outer >= 2,
+                                  rs > STAGNATION_FACTOR * rs_mark)
+        stats = SolveStats(iterations=inner_total, outer_iterations=outer,
+                           residual_norm2=rs, converged=rs <= limit,
+                           rhs_iterations=out[5] if batched else None,
+                           verdict=classify(rs, limit, broken, stalled))
+        return x, stats
+
+    return LoopParts(init=init, cond=cond, body=body, finish=finish,
+                     counter=lambda c: c[1])
+
+
+def mpcg(op_low: Op, op_high: Op, b: Array, *,
+         tol: float = 1e-6, inner_tol: float = 5e-2,
+         inner_maxiter: int = 200, max_outer: int = 50,
+         low_dtype=jnp.bfloat16, to_low=None, to_high=None,
+         dot=field_dot, norm2=field_norm2,
+         update=None, xpay=None,
+         batched: bool = False) -> tuple[Array, SolveStats]:
+    """Two-precision CG: bulk iterations in ``low_dtype``, corrected by
+    high-precision true-residual "reliable updates".
+
+    See :func:`mpcg_parts` for the full algorithm notes; this is exactly
+    its parts run to completion in one ``lax.while_loop``.
+    """
+    parts = mpcg_parts(op_low, op_high, b, tol=tol, inner_tol=inner_tol,
+                       inner_maxiter=inner_maxiter, max_outer=max_outer,
+                       low_dtype=low_dtype, to_low=to_low, to_high=to_high,
+                       dot=dot, norm2=norm2, update=update, xpay=xpay,
+                       batched=batched)
+    return parts.finish(jax.lax.while_loop(parts.cond, parts.body,
+                                           parts.init))
 
 
 # ---------------------------------------------------------------------------
 # Pipelined CG — one fused reduction per iteration (Ghysels–Vanroose)
 # ---------------------------------------------------------------------------
 
-def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
-           residual_replacement_every: int = 25,
-           dot=field_dot, norm2=field_norm2, fused_dots=None,
-           batched: bool = False) -> tuple[Array, SolveStats]:
-    """Pipelined CG: the two inner products of an iteration are fused into a
+def pipecg_parts(op: Op, b: Array, *, tol: float = 1e-8,
+                 maxiter: int = 1000, residual_replacement_every: int = 25,
+                 dot=field_dot, norm2=field_norm2, fused_dots=None,
+                 batched: bool = False) -> LoopParts:
+    """:func:`pipecg` decomposed into :class:`LoopParts` (same arguments).
+
+    Pipelined CG: the two inner products of an iteration are fused into a
     single reduction which the scheduler can overlap with the matvec
     ``A w`` — per-iteration collective count drops from 2-3 to 1.
 
@@ -656,13 +746,34 @@ def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
             out = out + (jnp.where(active, k + 1, c[12]),)
         return out + (broken,)
 
-    out = jax.lax.while_loop(cond, body, init)
-    k, x, gamma, broken = out[0], out[1], out[7], out[-1]
-    stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
-                       residual_norm2=gamma, converged=gamma <= limit,
-                       rhs_iterations=out[12] if batched else None,
-                       verdict=classify(gamma, limit, broken))
-    return x, stats
+    def finish(out):
+        k, x, gamma, broken = out[0], out[1], out[7], out[-1]
+        stats = SolveStats(iterations=k,
+                           outer_iterations=jnp.asarray(1, jnp.int32),
+                           residual_norm2=gamma, converged=gamma <= limit,
+                           rhs_iterations=out[12] if batched else None,
+                           verdict=classify(gamma, limit, broken))
+        return x, stats
+
+    return LoopParts(init=init, cond=cond, body=body, finish=finish,
+                     counter=lambda c: c[0])
+
+
+def pipecg(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
+           residual_replacement_every: int = 25,
+           dot=field_dot, norm2=field_norm2, fused_dots=None,
+           batched: bool = False) -> tuple[Array, SolveStats]:
+    """Pipelined CG — ONE fused reduction per iteration.
+
+    See :func:`pipecg_parts` for the full algorithm notes; this is exactly
+    its parts run to completion in one ``lax.while_loop``.
+    """
+    parts = pipecg_parts(
+        op, b, tol=tol, maxiter=maxiter,
+        residual_replacement_every=residual_replacement_every,
+        dot=dot, norm2=norm2, fused_dots=fused_dots, batched=batched)
+    return parts.finish(jax.lax.while_loop(parts.cond, parts.body,
+                                           parts.init))
 
 
 # ---------------------------------------------------------------------------

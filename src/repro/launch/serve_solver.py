@@ -55,7 +55,8 @@ def build_config(args) -> WorkloadConfig:
         deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
         chaos=args.chaos, chaos_poison_fraction=args.chaos_poison_fraction,
         chaos_fault_every=args.chaos_fault_every,
-        chaos_fault_mode=args.chaos_fault_mode)
+        chaos_fault_mode=args.chaos_fault_mode,
+        journal_dir=args.journal_dir)
 
 
 def make_parser() -> argparse.ArgumentParser:
@@ -108,6 +109,11 @@ def make_parser() -> argparse.ArgumentParser:
                    choices=["gauge_nan_plane", "gauge_bitflip", "stall",
                             "raise"],
                    help="transient fault model for --chaos-fault-every")
+    p.add_argument("--journal-dir", default=None,
+                   help="write-ahead journal directory (DESIGN.md §11): "
+                        "admitted requests become durable; after a crash, "
+                        "SolverServer.recover() replays the incomplete "
+                        "entries")
     p.add_argument("--out", default=None,
                    help="write the BENCH_serve.json report here")
     return p

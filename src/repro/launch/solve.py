@@ -92,7 +92,20 @@ def main(argv=None):
     p.add_argument("--maxiter", type=int, default=2000)
     p.add_argument("--mesh", default="none", choices=["none", "debug"])
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="segment the solve and snapshot (x, iteration, "
+                        "verdict, rhs_mask) here every --checkpoint-every "
+                        "iterations (DESIGN.md §11)")
+    p.add_argument("--checkpoint-every", type=int, default=50,
+                   help="segment length in iterations between snapshots")
+    p.add_argument("--resume", action="store_true",
+                   help="restore the latest valid checkpoint from "
+                        "--checkpoint-dir and defect-correct from the "
+                        "saved iterate (fresh checkpointed solve when the "
+                        "directory has no checkpoint yet)")
     args = p.parse_args(argv)
+    if args.resume and args.checkpoint_dir is None:
+        p.error("--resume requires --checkpoint-dir")
 
     t, z, y, x = (int(v) for v in args.lattice.split("x"))
     shape = LatticeShape(t, z, y, x)
@@ -117,8 +130,31 @@ def main(argv=None):
 
     t0 = time.time()
     try:
-        xsol, st = plan_mod.solve(plan, u, b, m, tol=args.tol,
-                                  maxiter=args.maxiter)
+        if args.resume:
+            from repro.core import resilience
+            xsol, st, record = resilience.resume_solve(
+                plan, u, b, m, checkpoint_dir=args.checkpoint_dir,
+                tol=args.tol, maxiter=args.maxiter, missing_ok=True)
+            if record.resumed_from_step is None:
+                print("[solve] no checkpoint found; fresh checkpointed "
+                      "solve", flush=True)
+            else:
+                print(f"[solve] resumed from step "
+                      f"{record.resumed_from_step} "
+                      f"({record.checkpoint_iterations} iterations banked, "
+                      f"checkpoint verdict "
+                      f"{record.checkpoint_verdict})", flush=True)
+        elif args.checkpoint_dir is not None:
+            policy = plan_mod.CheckpointPolicy(
+                dir=args.checkpoint_dir, every_iters=args.checkpoint_every)
+            print(f"[solve] checkpointing to {policy.dir} every "
+                  f"{policy.every_iters} iterations", flush=True)
+            xsol, st = plan_mod.solve(plan, u, b, m, tol=args.tol,
+                                      maxiter=args.maxiter,
+                                      checkpoint=policy)
+        else:
+            xsol, st = plan_mod.solve(plan, u, b, m, tol=args.tol,
+                                      maxiter=args.maxiter)
     except (ValueError, NotImplementedError) as e:
         # dispatch-time rejections (e.g. full + mesh + nrhs) — same
         # friendly failure as a plan that fails to construct

@@ -26,6 +26,10 @@ Two fault surfaces:
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
+import subprocess
+import threading
 import time
 
 import jax
@@ -34,8 +38,9 @@ import numpy as np
 
 Array = jax.Array
 
-__all__ = ["InjectedFault", "BatchFaultInjector", "poison_nan",
-           "poison_overflow", "nan_plane", "bit_flip"]
+__all__ = ["InjectedFault", "BatchFaultInjector", "CrashedProcess",
+           "poison_nan", "poison_overflow", "nan_plane", "bit_flip",
+           "run_and_sigkill"]
 
 _MODES = ("gauge_nan_plane", "gauge_bitflip", "stall", "raise")
 
@@ -133,3 +138,80 @@ class BatchFaultInjector:
         if self.mode == "gauge_nan_plane":
             return nan_plane(u), b
         return bit_flip(u), b
+
+
+# -- process-level crash injection (DESIGN.md §11) ---------------------------
+
+@dataclasses.dataclass
+class CrashedProcess:
+    """Outcome of :func:`run_and_sigkill`."""
+
+    args: tuple
+    pid: int
+    killed: bool        # True: we SIGKILLed it; False: it exited first
+    returncode: int
+    stdout: str         # everything the child printed (stderr merged in)
+
+
+def run_and_sigkill(argv, *, kill_when, env=None, cwd=None,
+                    timeout_s: float = 240.0,
+                    poll_s: float = 0.05) -> CrashedProcess:
+    """Run ``argv`` and SIGKILL it the moment ``kill_when`` triggers.
+
+    ``kill_when`` is either a string — kill once it appears anywhere in
+    the child's (merged) output — or a zero/one-argument callable polled
+    every ``poll_s`` seconds; callables may inspect the child's output
+    (passed as the single argument when accepted) or the filesystem
+    (e.g. "a checkpoint step directory exists", "the journal has N admit
+    lines").  SIGKILL — not SIGTERM — is the point: the child gets no
+    chance to flush, drain, or run atexit hooks, which is exactly the
+    crash the durability machinery must survive.
+
+    If the child exits before the trigger fires, ``killed`` is False and
+    the caller decides whether that invalidates the experiment.  If
+    neither happens within ``timeout_s`` the child is killed and a
+    TimeoutError is raised.
+    """
+    proc = subprocess.Popen(list(argv), stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True,
+                            env=env, cwd=cwd)
+    chunks: list[str] = []
+
+    def _reader():
+        for line in proc.stdout:
+            chunks.append(line)
+
+    reader = threading.Thread(target=_reader, daemon=True)
+    reader.start()
+
+    def _triggered() -> bool:
+        out = "".join(chunks)
+        if callable(kill_when):
+            try:
+                return bool(kill_when(out))
+            except TypeError:
+                return bool(kill_when())
+        return str(kill_when) in out
+
+    deadline = time.monotonic() + float(timeout_s)
+    killed = False
+    while True:
+        if proc.poll() is not None:
+            break
+        if _triggered():
+            os.kill(proc.pid, signal.SIGKILL)
+            killed = True
+            break
+        if time.monotonic() > deadline:
+            os.kill(proc.pid, signal.SIGKILL)
+            proc.wait()
+            reader.join(timeout=5)
+            raise TimeoutError(
+                f"run_and_sigkill: no trigger and no exit within "
+                f"{timeout_s}s; output so far:\n" + "".join(chunks))
+        time.sleep(poll_s)
+    proc.wait()
+    reader.join(timeout=5)
+    return CrashedProcess(args=tuple(argv), pid=proc.pid, killed=killed,
+                          returncode=proc.returncode,
+                          stdout="".join(chunks))

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from repro.core import LatticeShape, random_gauge, random_spinor
 from repro.serve.batching import BatchPolicy, DEFAULT_LADDER
 from repro.serve.plan_cache import PlanCache
-from repro.serve.server import SolveRequest, SolveResult, SolverServer
+from repro.serve.server import (ServerClosed, SolveRequest, SolveResult,
+                                SolverServer)
 
 VERIFY_TOL = 1e-5
 
@@ -77,6 +78,10 @@ class WorkloadConfig:
     # healthy member of an affected batch
     chaos_fault_every: int = 0
     chaos_fault_mode: str = "gauge_nan_plane"
+    # write-ahead journal directory (DESIGN.md §11) — admitted requests
+    # become durable and a crashed run's incomplete entries can be
+    # replayed by SolverServer.recover()
+    journal_dir: str | None = None
 
 
 def poisoned_indices(cfg: WorkloadConfig) -> frozenset[int]:
@@ -197,17 +202,27 @@ def verify_against_direct(gauges: dict, requests: list[SolveRequest],
 
 def summarize_chaos(cfg: WorkloadConfig,
                     results: list[tuple[float, object]],
-                    wall_s: float) -> dict:
+                    wall_s: float, recovery: dict | None = None) -> dict:
     """Containment scorecard: goodput + blast-radius accounting.
 
     The chaos gate (DESIGN.md §10): every HEALTHY request must return a
     verified solution, every POISONED request must fail with a classified
     verdict, and nothing else may fail — blast radius exactly 1 per
     poisoned request.
+
+    Crash accounting (§11): requests that died with the process
+    (:class:`ServerClosed`) are NOT containment failures — they are
+    counted in their own ``*_crash_lost`` buckets and must be balanced by
+    the recovery summary (``SolverServer.recover``) when one is supplied:
+    every crash-lost healthy request must come back completed, every
+    crash-lost poisoned request must come back with a classified failure.
+    Every submitted request lands in exactly one bucket
+    (``all_accounted``).
     """
     poison = poisoned_indices(cfg)
     healthy_ok = healthy_failed = healthy_unverified = 0
     poisoned_failed = poisoned_served = 0
+    healthy_crash_lost = poisoned_crash_lost = 0
     rescued = 0
     verdict_hist: dict[str, int] = {}
     for i, (_, res) in enumerate(results):
@@ -220,6 +235,13 @@ def summarize_chaos(cfg: WorkloadConfig,
                 healthy_ok += 1
                 if res.stats.retried:
                     rescued += 1
+        elif isinstance(res, ServerClosed):
+            # died with the process — the journal, not this run's results,
+            # is responsible for these
+            if i in poison:
+                poisoned_crash_lost += 1
+            else:
+                healthy_crash_lost += 1
         else:
             verdict = getattr(res, "verdict",
                               getattr(res, "reason", type(res).__name__))
@@ -228,25 +250,47 @@ def summarize_chaos(cfg: WorkloadConfig,
                 poisoned_failed += 1
             else:
                 healthy_failed += 1
-    return {
+    crash_lost = healthy_crash_lost + poisoned_crash_lost
+    accounted = (healthy_ok + healthy_failed + healthy_unverified
+                 + poisoned_failed + poisoned_served + crash_lost)
+    summary = {
         "poisoned": len(poison),
         "poisoned_failed": poisoned_failed,
         "poisoned_served": poisoned_served,
+        "poisoned_crash_lost": poisoned_crash_lost,
         "healthy": len(results) - len(poison),
         "healthy_ok": healthy_ok,
         "healthy_failed": healthy_failed,
         "healthy_unverified": healthy_unverified,
+        "healthy_crash_lost": healthy_crash_lost,
         "healthy_rescued_by_retry": rescued,
+        "crash_lost": crash_lost,
+        "resumed_after_recovery": (0 if recovery is None
+                                   else int(recovery.get("completed", 0))),
+        "all_accounted": accounted == len(results),
         "failure_verdicts": dict(sorted(verdict_hist.items())),
         "goodput_rps": healthy_ok / max(wall_s, 1e-9),
         "fault_every": cfg.chaos_fault_every,
         "poison_fraction": cfg.chaos_poison_fraction,
         # the acceptance criterion as one bool: blast radius == 1 per
-        # poisoned request and zero healthy casualties
-        "containment_ok": (healthy_failed == 0 and healthy_unverified == 0
-                           and poisoned_served == 0
-                           and poisoned_failed == len(poison)),
+        # poisoned request and zero healthy casualties among requests the
+        # process lived to answer
+        "containment_ok": (
+            healthy_failed == 0 and healthy_unverified == 0
+            and poisoned_served == 0
+            and poisoned_failed == len(poison) - poisoned_crash_lost),
+        # the crash ledger balances: nothing was lost, or a recovery pass
+        # completed every crash-lost healthy request and classified every
+        # crash-lost poisoned one
+        "recovery_ok": (crash_lost == 0 or (
+            recovery is not None
+            and int(recovery.get("completed", 0)) == healthy_crash_lost
+            and int(recovery.get("failed", 0)) == poisoned_crash_lost)),
     }
+    if recovery is not None:
+        summary["recovery"] = {k: v for k, v in recovery.items()
+                               if k != "results"}
+    return summary
 
 
 def run_workload(cfg: WorkloadConfig) -> dict:
@@ -263,7 +307,8 @@ def run_workload(cfg: WorkloadConfig) -> dict:
             mass=cfg.mass, backend=cfg.backend, ladder=cfg.ladder,
             policy=BatchPolicy(max_wait=cfg.max_wait_s,
                                max_batch=cfg.max_batch),
-            maxiter=cfg.maxiter, fault_injector=injector)
+            maxiter=cfg.maxiter, fault_injector=injector,
+            journal_dir=cfg.journal_dir)
         for gid, u in gauges.items():
             server.register_gauge(gid, u)
         try:

@@ -77,6 +77,7 @@ import jax.numpy as jnp
 
 from repro.core import plan as plan_mod
 from repro.core.solvers import verdict_name
+from repro.serve import journal as journal_mod
 from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
                                   pad_tols, rung_for, validate_ladder)
 from repro.serve.errors import (RequestFailed, RequestRejected, ServerClosed,
@@ -131,6 +132,7 @@ class RequestStats:
     verified: bool = True             # true-residual verification gate
     true_residual_norm2: float = 0.0  # ‖b - D x‖² from the verify matvec
     retried: bool = False   # served by the individual containment re-solve
+    resumed: bool = False   # replayed from the journal after a crash
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +146,7 @@ class _Pending(NamedTuple):
     future: asyncio.Future
     t_enqueue: float
     t_deadline: float | None
+    rid: int | None = None    # journal record id (None: journaling off)
 
 
 class SolverServer:
@@ -155,7 +158,8 @@ class SolverServer:
                  plan_cache: PlanCache | None = None,
                  admission_validation: bool = True,
                  max_queue_depth: int = 256,
-                 fault_injector: Callable | None = None):
+                 fault_injector: Callable | None = None,
+                 journal_dir: str | None = None):
         self.mass = float(mass)
         self.backend = backend
         self.ladder = validate_ladder(ladder)
@@ -170,6 +174,16 @@ class SolverServer:
         self.max_queue_depth = int(max_queue_depth)
         # test hook (serve/chaos.py): rewrites the worker's (u, b) view
         self.fault_injector = fault_injector
+        # write-ahead journal (serve/journal.py): admitted requests are
+        # durable; recover() replays whatever a crash left incomplete
+        self.journal = (journal_mod.RequestJournal(journal_dir)
+                        if journal_dir is not None else None)
+        # continue rids past a previous process's entries when journaling
+        # into the same directory (restart-into-same-journal is the
+        # recover() deployment shape)
+        self._next_rid = (0 if self.journal is None else 1 + max(
+            (int(ev["rid"]) for ev in journal_mod.scan_journal(journal_dir)),
+            default=-1))
         self._gauges: dict[str, Array] = {}
         self._queues: dict[tuple, asyncio.Queue] = {}
         self._dispatchers: dict[tuple, asyncio.Task] = {}
@@ -312,10 +326,22 @@ class SolverServer:
                 queue_depth=queue.qsize())
         future: asyncio.Future = loop.create_future()
         self._n_requests += 1
+        rid = None
+        if self.journal is not None:
+            # write-ahead: the admit record (RHS included) is fsync'd
+            # BEFORE the request can be queued — from here on, a SIGKILL
+            # cannot lose it, only leave it for recover() to replay
+            rid = self._next_rid
+            self._next_rid += 1
+            self.journal.admit(
+                rid, operator_family=request.operator_family,
+                gauge_id=str(request.gauge_id), rhs=request.rhs,
+                tol=float(request.tol), mu=float(request.mu),
+                mass=request.mass, deadline_s=request.deadline_s)
         now = loop.time()
         deadline = (None if request.deadline_s is None
                     else now + float(request.deadline_s))
-        queue.put_nowait(_Pending(request, future, now, deadline))
+        queue.put_nowait(_Pending(request, future, now, deadline, rid))
         return await future
 
     async def _dispatch_loop(self, key: tuple, queue: asyncio.Queue):
@@ -355,11 +381,21 @@ class SolverServer:
             if draining:
                 return
 
+    def _journal_complete(self, p: _Pending, status: str):
+        if self.journal is not None and p.rid is not None:
+            self.journal.complete(p.rid, status)
+
     def _fail(self, p: _Pending, exc: Exception, verdict: str | None = None):
         self._failed_requests += 1
         if verdict is not None:
             self._verdict_hist[verdict] = (
                 self._verdict_hist.get(verdict, 0) + 1)
+        # a classified failure IS a completion (the client got a durable
+        # answer); ServerClosed is NOT — those requests died with the
+        # process and must remain in the replay set
+        if not isinstance(exc, ServerClosed):
+            self._journal_complete(
+                p, verdict if verdict is not None else type(exc).__name__)
         if not p.future.done():
             p.future.set_exception(exc)
 
@@ -471,6 +507,7 @@ class SolverServer:
                     residual_norm2=float(res2[i]), plan_cache_hit=cache_hit,
                     verdict=verdict, verified=bool(verified[i]),
                     true_residual_norm2=float(true_res2[i]), retried=retried)
+                self._journal_complete(p, "ok")
                 if not p.future.done():
                     p.future.set_result(SolveResult(x=x[i], stats=st))
         for p in retry:
@@ -507,6 +544,64 @@ class SolverServer:
                 "verdict_hist": dict(sorted(self._verdict_hist.items())),
             },
         }
+
+    async def recover(self, journal_dir: str | None = None) -> dict:
+        """Replay a dead process's journal: every admitted-but-incomplete
+        request is re-submitted through the normal pipeline.
+
+        ``journal_dir`` defaults to this server's own journal directory
+        (the usual shape: start a fresh journaled server over the same
+        directory, then recover).  Replayed requests drop their original
+        deadline — it was measured against a clock that died with the old
+        process.  Each replayed entry is retired in the OLD journal with a
+        ``recovered`` / ``recovered_failed:*`` mark so a second recovery
+        pass finds nothing; requests whose gauge was never re-registered
+        are retired as ``skipped_unknown_gauge`` rather than left to poison
+        every future recovery.
+
+        Returns a summary: ``{"found", "replayed", "completed", "failed",
+        "skipped_unknown_gauge", "results": [(rid, "ok" | "<ExcType>")]}``.
+        """
+        if journal_dir is None:
+            if self.journal is None:
+                raise ValueError(
+                    "recover() needs a journal_dir when the server itself "
+                    "is not journaled")
+            journal_dir = self.journal.dir
+        entries = journal_mod.incomplete_requests(journal_dir)
+        summary = {"found": len(entries), "replayed": 0, "completed": 0,
+                   "failed": 0, "skipped_unknown_gauge": 0, "results": []}
+        pending: list[tuple[int, asyncio.Future]] = []
+        for ev in entries:
+            rid = int(ev["rid"])
+            if str(ev["gauge_id"]) not in self._gauges:
+                journal_mod.mark_complete(
+                    journal_dir, rid, "skipped_unknown_gauge")
+                summary["skipped_unknown_gauge"] += 1
+                continue
+            req = SolveRequest(
+                operator_family=str(ev["operator_family"]),
+                gauge_id=str(ev["gauge_id"]),
+                rhs=jnp.asarray(journal_mod.load_rhs(journal_dir, ev)),
+                tol=float(ev["tol"]), mu=float(ev["mu"]),
+                mass=ev["mass"], deadline_s=None)
+            pending.append(
+                (rid, asyncio.ensure_future(self.submit(req))))
+            summary["replayed"] += 1
+        for rid, fut in pending:
+            try:
+                res = await fut
+            except Exception as exc:
+                journal_mod.mark_complete(
+                    journal_dir, rid, f"recovered_failed:{type(exc).__name__}")
+                summary["failed"] += 1
+                summary["results"].append((rid, type(exc).__name__))
+            else:
+                journal_mod.mark_complete(journal_dir, rid, "recovered")
+                summary["completed"] += 1
+                summary["results"].append((rid, "ok"))
+                object.__setattr__(res.stats, "resumed", True)
+        return summary
 
     async def close(self, drain: bool = True):
         """Shut down; by default DRAIN (complete queued + in-flight work).
@@ -545,6 +640,8 @@ class SolverServer:
         self._dispatchers.clear()
         self._queues.clear()
         self._exec.shutdown(wait=True)
+        if self.journal is not None:
+            self.journal.close()
 
     async def __aenter__(self):
         return self

@@ -1,0 +1,298 @@
+"""Write-ahead serving journal + crash recovery (DESIGN.md §11).
+
+The serving half of durability: every ADMITTED request is journaled
+(fsync'd, RHS first) before it can touch a queue; completions — results
+AND classified failures — are marked; a crash leaves exactly the
+in-flight entries unmarked, and ``SolverServer.recover`` replays them to
+completion on a fresh server over the same journal directory.
+"""
+
+import asyncio
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.serve import journal as jm
+from repro.serve.loadgen import (WorkloadConfig, poisoned_indices,
+                                 summarize_chaos)
+from repro.serve.server import (ServerClosed, SolveRequest, SolveResult,
+                                SolverServer)
+
+LAT = LatticeShape(4, 4, 4, 4)
+MASS = 0.1
+TOL = 1e-6
+
+
+@pytest.fixture(scope="module")
+def fields():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, LAT)
+    pool = [random_spinor(jax.random.fold_in(kb, i), LAT) for i in range(4)]
+    return u, pool
+
+
+def _req(rhs, **kw):
+    base = dict(operator_family="wilson", gauge_id="cfg0", tol=TOL)
+    base.update(kw)
+    return SolveRequest(rhs=rhs, **base)
+
+
+# -- journal file format ----------------------------------------------------
+
+
+def test_admit_complete_scan_roundtrip(tmp_path, fields):
+    _, pool = fields
+    d = str(tmp_path)
+    j = jm.RequestJournal(d)
+    for rid in range(3):
+        j.admit(rid, operator_family="wilson", gauge_id="cfg0",
+                rhs=pool[rid], tol=TOL, mu=0.0, mass=None, deadline_s=None)
+    j.complete(1, "ok")
+    j.close()
+    events = jm.scan_journal(d)
+    assert [e["event"] for e in events] == ["admit"] * 3 + ["complete"]
+    inc = jm.incomplete_requests(d)
+    assert [e["rid"] for e in inc] == [0, 2]
+    # the journaled RHS round-trips bit-exactly
+    np.testing.assert_array_equal(jm.load_rhs(d, inc[0]),
+                                  np.asarray(pool[0]))
+
+
+def test_external_mark_complete_retires_entries(tmp_path, fields):
+    _, pool = fields
+    d = str(tmp_path)
+    j = jm.RequestJournal(d)
+    j.admit(0, operator_family="wilson", gauge_id="cfg0", rhs=pool[0],
+            tol=TOL, mu=0.0, mass=None, deadline_s=None)
+    j.close()
+    jm.mark_complete(d, 0, "recovered")
+    assert jm.incomplete_requests(d) == []
+
+
+def test_torn_tail_is_tolerated_mid_corruption_raises(tmp_path, fields):
+    _, pool = fields
+    d = str(tmp_path)
+    j = jm.RequestJournal(d)
+    for rid in range(2):
+        j.admit(rid, operator_family="wilson", gauge_id="cfg0",
+                rhs=pool[rid], tol=TOL, mu=0.0, mass=None, deadline_s=None)
+    j.close()
+    log = os.path.join(d, "journal.jsonl")
+    # a torn FINAL line is the crash artifact fsync-per-line permits
+    with open(log, "a") as f:
+        f.write('{"event": "admit", "rid":')
+    assert [e["rid"] for e in jm.scan_journal(d)] == [0, 1]
+    # but a torn line ANYWHERE ELSE is corruption and must raise
+    lines = open(log).read().splitlines()
+    lines[0] = lines[0][: len(lines[0]) // 2]
+    open(log, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(IOError):
+        jm.scan_journal(d)
+
+
+def test_empty_or_absent_journal_scans_empty(tmp_path):
+    assert jm.scan_journal(str(tmp_path / "nope")) == []
+    assert jm.incomplete_requests(str(tmp_path / "nope")) == []
+
+
+# -- server lifecycle -------------------------------------------------------
+
+
+def test_drained_server_completes_every_journal_entry(tmp_path, fields):
+    u, pool = fields
+    d = str(tmp_path)
+
+    async def main():
+        server = SolverServer(mass=MASS, ladder=(1, 4), journal_dir=d)
+        server.register_gauge("cfg0", u)
+        results = await asyncio.gather(
+            *[server.submit(_req(pool[i])) for i in range(3)])
+        await server.close()  # drain
+        return results
+
+    results = asyncio.run(main())
+    assert all(isinstance(r, SolveResult) for r in results)
+    assert jm.incomplete_requests(d) == []
+    events = jm.scan_journal(d)
+    assert sum(e["event"] == "admit" for e in events) == 3
+    assert all(e["status"] == "ok" for e in events
+               if e["event"] == "complete")
+
+
+def test_classified_failure_is_a_completion(tmp_path, fields):
+    """A structured failure IS a durable answer — the entry must NOT be
+    replayed after a crash."""
+    u, pool = fields
+    d = str(tmp_path)
+    from repro.serve.chaos import poison_overflow
+    poisoned = poison_overflow(pool[0])
+
+    async def main():
+        server = SolverServer(mass=MASS, ladder=(1, 4), journal_dir=d)
+        server.register_gauge("cfg0", u)
+        try:
+            await server.submit(_req(poisoned))
+        except Exception as e:
+            return type(e).__name__
+        finally:
+            await server.close()
+        return None
+
+    failure = asyncio.run(main())
+    assert failure is not None
+    assert jm.incomplete_requests(d) == []
+
+
+def test_crash_then_recover_completes_all(tmp_path, fields):
+    """The §11 serving acceptance gate, in-process: abort mid-flight
+    (futures die with ServerClosed), then a fresh journaled server over
+    the same directory replays every incomplete entry to a verified
+    completion."""
+    u, pool = fields
+    d = str(tmp_path)
+
+    async def crash():
+        server = SolverServer(mass=MASS, ladder=(1, 4), journal_dir=d)
+        server.register_gauge("cfg0", u)
+        futs = [asyncio.ensure_future(server.submit(_req(pool[i])))
+                for i in range(4)]
+        await asyncio.sleep(0)      # admits land; nothing completes
+        await server.close(drain=False)
+        outcomes = []
+        for f in futs:
+            try:
+                await f
+                outcomes.append("ok")
+            except ServerClosed:
+                outcomes.append("closed")
+        return outcomes
+
+    outcomes = asyncio.run(crash())
+    lost = outcomes.count("closed")
+    assert lost >= 1
+    incomplete = jm.incomplete_requests(d)
+    assert len(incomplete) == lost
+
+    async def recover():
+        server = SolverServer(mass=MASS, ladder=(1, 4), journal_dir=d)
+        server.register_gauge("cfg0", u)
+        summary = await server.recover()
+        await server.close()
+        return summary
+
+    summary = asyncio.run(recover())
+    assert summary["found"] == summary["replayed"] == lost
+    assert summary["completed"] == lost
+    assert summary["failed"] == 0
+    assert jm.incomplete_requests(d) == []
+    # rids stay unique across the two server generations
+    rids = [e["rid"] for e in jm.scan_journal(d) if e["event"] == "admit"]
+    assert len(set(rids)) == len(rids)
+
+
+def test_recover_skips_unknown_gauge(tmp_path, fields):
+    """An incomplete entry whose gauge was never re-registered is retired
+    as skipped — it must not poison every future recovery pass."""
+    u, pool = fields
+    d = str(tmp_path)
+    j = jm.RequestJournal(d)
+    j.admit(0, operator_family="wilson", gauge_id="gone", rhs=pool[0],
+            tol=TOL, mu=0.0, mass=None, deadline_s=None)
+    j.admit(1, operator_family="wilson", gauge_id="cfg0", rhs=pool[1],
+            tol=TOL, mu=0.0, mass=None, deadline_s=None)
+    j.close()
+
+    async def main():
+        server = SolverServer(mass=MASS, ladder=(1, 4), journal_dir=d)
+        server.register_gauge("cfg0", u)
+        summary = await server.recover()
+        await server.close()
+        return summary
+
+    summary = asyncio.run(main())
+    assert summary["skipped_unknown_gauge"] == 1
+    assert summary["completed"] == 1
+    assert jm.incomplete_requests(d) == []
+
+
+# -- chaos accounting: every submitted request lands in one bucket ----------
+
+
+def _cfg(**kw):
+    base = dict(requests=10, chaos=True, chaos_poison_fraction=0.2)
+    base.update(kw)
+    return WorkloadConfig(**base)
+
+
+class _FakeStats:
+    converged = True
+    verified = True
+    retried = False
+
+
+def _fake_results(cfg, crash_from):
+    """Synthetic outcome list: poisoned fail classified, the tail is
+    crash-lost, the rest served."""
+    poison = poisoned_indices(cfg)
+    out = []
+    for i in range(cfg.requests):
+        if i >= crash_from:
+            out.append((0.0, ServerClosed("died")))
+        elif i in poison:
+            exc = RuntimeError("poisoned")
+            exc.verdict = "nonfinite"
+            out.append((0.0, exc))
+        else:
+            out.append((0.1, SolveResult(x=None, stats=_FakeStats())))
+    return out
+
+
+def test_summarize_chaos_accounts_for_every_request():
+    cfg = _cfg()
+    poison = poisoned_indices(cfg)
+    crash_from = 7
+    results = _fake_results(cfg, crash_from)
+    lost_poisoned = sum(1 for i in poison if i >= crash_from)
+    lost_healthy = (cfg.requests - crash_from) - lost_poisoned
+    recovery = {"found": cfg.requests - crash_from,
+                "replayed": cfg.requests - crash_from,
+                "completed": lost_healthy, "failed": lost_poisoned,
+                "skipped_unknown_gauge": 0}
+    c = summarize_chaos(cfg, results, wall_s=1.0, recovery=recovery)
+    assert c["all_accounted"]
+    assert c["crash_lost"] == cfg.requests - crash_from
+    assert c["healthy_crash_lost"] == lost_healthy
+    assert c["poisoned_crash_lost"] == lost_poisoned
+    assert c["resumed_after_recovery"] == lost_healthy
+    assert c["containment_ok"]
+    assert c["recovery_ok"]
+
+
+def test_summarize_chaos_flags_unbalanced_recovery():
+    cfg = _cfg()
+    results = _fake_results(cfg, crash_from=7)
+    # no recovery pass at all: the ledger must NOT balance
+    c = summarize_chaos(cfg, results, wall_s=1.0)
+    assert c["crash_lost"] > 0
+    assert not c["recovery_ok"]
+    # a recovery that completed fewer than it lost also fails
+    c2 = summarize_chaos(cfg, results, wall_s=1.0,
+                         recovery={"completed": 0, "failed": 0})
+    assert not c2["recovery_ok"]
+
+
+def test_summarize_chaos_without_crashes_matches_pr7_shape():
+    """The normal chaos lane (no crash) keeps its PR 7 semantics: crash
+    buckets zero, containment gate unchanged."""
+    cfg = _cfg()
+    results = _fake_results(cfg, crash_from=cfg.requests)
+    c = summarize_chaos(cfg, results, wall_s=1.0)
+    assert c["crash_lost"] == 0
+    assert c["all_accounted"]
+    assert c["containment_ok"]
+    assert c["recovery_ok"]

@@ -212,3 +212,56 @@ def test_plans_are_replaceable_dataclasses():
     again = dataclasses.replace(plan, backend="reference")
     assert again.backend == "reference"
     assert again.operator == plan.operator
+
+
+# -- the ladder on a 2x2x2 mesh (subprocess; 8 fake CPU devices) ------------
+
+
+def test_defended_solve_on_mesh_reaches_backend_fallback_rung():
+    """The retry ladder works unchanged on a sharded plan: a starved
+    pallas attempt exhausts, the defect-correction retry runs on the
+    backend-fallback REFERENCE rung (same 2x2x2 mesh), and the
+    accumulated solution verifies against the original system."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.mesh_utils import create_device_mesh
+from jax.sharding import Mesh
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.core import plan as plan_mod
+from repro.core.resilience import RetryPolicy, defended_solve
+
+lat = LatticeShape(4, 4, 4, 8)
+key = jax.random.PRNGKey(7)
+ku, kb = jax.random.split(key)
+u, b = random_gauge(ku, lat), random_spinor(kb, lat)
+mesh = Mesh(create_device_mesh((2, 2, 2)), ("pod", "data", "model"))
+plan = plan_mod.SolverPlan(operator="eo-schur", solver="cgnr",
+                           backend="pallas", mesh=mesh)
+_, st_full = plan_mod.solve(plan, u, b, 0.1, tol=1e-6, maxiter=500)
+need = int(st_full.iterations)
+starve = max(need // 2, 1)
+x, st, attempts = defended_solve(plan, u, b, 0.1, tol=1e-6,
+                                 maxiter=starve,
+                                 policy=RetryPolicy(max_attempts=4))
+backends = [a.plan_desc.split("/")[2] for a in attempts]
+assert backends[0] == "pallas", backends
+assert attempts[0].verdict == "maxiter_exhausted", attempts
+assert "reference" in backends[1:], backends
+assert attempts[-1].verified, attempts
+assert bool(np.asarray(st.verified).all())
+assert all(a.iterations <= starve for a in attempts), attempts
+print("LADDER=" + ",".join(backends))
+print("SHARDED_DEFENDED_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "SHARDED_DEFENDED_OK" in r.stdout
