@@ -4,18 +4,36 @@ CPU wall-times here are *interpret-mode* lower bounds used for relative
 comparisons (jnp packed op vs Pallas path); absolute TPU projections come
 from the dry-run roofline (EXPERIMENTS.md §Roofline), exactly as the paper
 separates simulation traces from device numbers.
+
+Each timing is also scored against the DESIGN.md §6 streaming-traffic
+model (``roofline.dslash_intensity``): the derived CSV column and the
+``model_bw_gbs`` field in **BENCH_dslash.json** report the memory
+bandwidth the measurement WOULD need if it streamed exactly the model's
+``(144/N + 48)·dtype_bytes`` bytes per site — so a batched row whose
+model bandwidth does NOT drop ~(144+48)/(144/N+48)× versus single-RHS is
+leaving the gauge-reuse win on the table.  The JSON (path overridable
+via ``$BENCH_DSLASH_JSON``) carries one entry per timing with the model
+bytes/site, arithmetic intensity, and implied bandwidth alongside the
+achieved GFLOP/s.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks.roofline import dslash_intensity
 from repro.core import LatticeShape, dslash_flops
 from repro.core.wilson import dslash_packed
 from repro.data import lattice_problem
+
+OUT_JSON = os.environ.get("BENCH_DSLASH_JSON", "BENCH_dslash.json")
+
+BATCH_NRHS = 8  # batched-gauge-reuse timing point (DESIGN.md §6)
 
 
 def _time(f, *args, iters=3):
@@ -28,27 +46,68 @@ def _time(f, *args, iters=3):
     return (time.time() - t0) / iters
 
 
+def _entry(name, t_s, volume, n_rhs=1, dtype_bytes=4):
+    """One JSON row: achieved GFLOP/s + §6-model-implied bandwidth."""
+    model = dslash_intensity(n_rhs=n_rhs, dtype_bytes=dtype_bytes)
+    flops = dslash_flops(volume) * n_rhs
+    model_bytes = model["bytes_per_site"] * volume * n_rhs
+    return {
+        "name": name,
+        "us_per_call": t_s * 1e6,
+        "gflops": flops / t_s / 1e9,
+        "model_bytes_per_site": model["bytes_per_site"],
+        "model_flops_per_byte": model["flops_per_byte"],
+        # bandwidth this timing would need at exactly the model traffic
+        "model_bw_gbs": model_bytes / t_s / 1e9,
+        "n_rhs": n_rhs,
+        "dtype_bytes": dtype_bytes,
+    }
+
+
 def run() -> list[tuple[str, float, str]]:
-    rows = []
+    rows, entries = [], []
+
+    def emit(name, t_s, volume, n_rhs=1, dtype_bytes=4):
+        e = _entry(name, t_s, volume, n_rhs=n_rhs, dtype_bytes=dtype_bytes)
+        entries.append(e)
+        rows.append((name, t_s * 1e6,
+                     f"{e['gflops']:.3f}GFLOP/s;"
+                     f"model_bw={e['model_bw_gbs']:.2f}GB/s"
+                     f"@{e['model_bytes_per_site']:.0f}B/site"))
+
     for dims in ((4, 4, 4, 8), (8, 8, 8, 8), (8, 8, 8, 16)):
         lat = LatticeShape(*dims)
         up, pp = lattice_problem(lat, mass=0.1)
         m = 0.1
         jnp_op = jax.jit(lambda u, p: dslash_packed(u, p, m))
-        t_jnp = _time(jnp_op, up, pp)
-        fl = dslash_flops(lat.volume)
-        rows.append((f"dslash_jnp_{lat}", t_jnp * 1e6,
-                     f"{fl / t_jnp / 1e9:.3f}GFLOP/s"))
-        # bf16 storage variant (the paper's low-precision datapath)
+        emit(f"dslash_jnp_{lat}", _time(jnp_op, up, pp), lat.volume)
+        # bf16 storage variant (the paper's low-precision datapath):
+        # halves every byte in the §6 model, so the model bandwidth for
+        # equal wall-time is half the f32 row's
         up16, pp16 = up.astype(jnp.bfloat16), pp.astype(jnp.bfloat16)
-        t_16 = _time(jax.jit(lambda u, p: dslash_packed(u, p, m)), up16, pp16)
-        rows.append((f"dslash_jnp_bf16_{lat}", t_16 * 1e6,
-                     f"{fl / t_16 / 1e9:.3f}GFLOP/s"))
-    # Pallas kernel, interpret mode (correctness path; slow by design)
+        t_16 = _time(jax.jit(lambda u, p: dslash_packed(u, p, m)),
+                     up16, pp16)
+        emit(f"dslash_jnp_bf16_{lat}", t_16, lat.volume, dtype_bytes=2)
+    # batched N-RHS point: N spinors stream through ONE gauge read, so
+    # the §6 per-RHS traffic drops from 192 to 144/N + 48 bytes-reals —
+    # this row's model_bw_gbs is the honest amortized number
     lat = LatticeShape(4, 4, 4, 8)
     up, pp = lattice_problem(lat, mass=0.1)
+    pb = jnp.stack([pp] * BATCH_NRHS)
+    batched_op = jax.jit(lambda u, p: jax.vmap(
+        lambda s: dslash_packed(u, s, 0.1))(p))
+    emit(f"dslash_jnp_nrhs{BATCH_NRHS}_{lat}",
+         _time(batched_op, up, pb), lat.volume, n_rhs=BATCH_NRHS)
+    # Pallas kernel, interpret mode (correctness path; slow by design)
     from repro.kernels.wilson_dslash import dslash as dslash_k
-    t_pal = _time(jax.jit(lambda u, p: dslash_k(u, p, 0.1)), up, pp, iters=1)
-    rows.append((f"dslash_pallas_interp_{lat}", t_pal * 1e6,
-                 f"{dslash_flops(lat.volume) / t_pal / 1e9:.3f}GFLOP/s"))
+    t_pal = _time(jax.jit(lambda u, p: dslash_k(u, p, 0.1)), up, pp,
+                  iters=1)
+    emit(f"dslash_pallas_interp_{lat}", t_pal, lat.volume)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump({"bench": "dslash", "schema": 1,
+                   "model": "DESIGN.md §6: (144/N + 48) * dtype_bytes "
+                            "bytes/site, 1320 flops/site",
+                   "entries": entries}, f, indent=2, sort_keys=True)
+        f.write("\n")
     return rows

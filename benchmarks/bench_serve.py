@@ -13,6 +13,12 @@ Two entry points:
   regression guard (check_solver_regression.py --serve) and artifact
   upload.  Exits nonzero on verify failure or non-convergence.
 
+``main`` additionally runs the warm-gauge DEFLATION lane (unless
+``--chaos`` or ``--skip-deflation-serve``): a light-mass workload with
+the per-gauge EigCG deflation cache on, embedded in the report as
+``deflation_serve`` — the guarded proof that a second request on a hot
+gauge field converges in strictly fewer iterations than the first.
+
 Latency numbers here include queueing by construction (open-loop
 arrivals), so they are throughput-honest but NOT a kernel benchmark —
 see bench_solvers.py for per-iteration timings.
@@ -37,6 +43,21 @@ OUT_JSON = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
 SMOKE = WorkloadConfig(requests=40, burst=4, interarrival_s=0.02,
                        ladder=(1, 4, 8), maxiter=500)
 
+# Warm-gauge deflation lane (ISSUE 9): a second, light-mass workload with
+# the per-gauge deflation cache ON.  At the smoke mass (0.1, 14
+# iterations) deflation is physically inert, so this lane runs
+# near-critical mass where the Krylov space is ~120 deep — the first
+# verified solve per (gauge, family) harvests an EigCG basis, and every
+# later request on that key must converge in STRICTLY fewer iterations
+# (guarded by check_solver_regression.py --serve via the
+# ``deflation_serve`` report section).  Wilson-only keeps it cheap; both
+# gauges exercise the per-gauge keying.
+DEFLATION_SERVE = WorkloadConfig(
+    families=(("wilson", 0.0),), mass=-1.7, tol=1e-6, requests=32,
+    burst=4, interarrival_s=0.01, rhs_pool=8, n_gauge=2, ladder=(1, 4, 8),
+    max_wait_s=0.05, maxiter=500, verify=True,
+    deflation_nev=32, deflation_m_max=160, deflation_harvest_tol=1e-8)
+
 
 def run():
     """Harness protocol: yield (name, us_per_call, derived) rows."""
@@ -56,6 +77,10 @@ def run():
 
 def main(argv=None) -> int:
     parser = make_parser()
+    parser.add_argument("--skip-deflation-serve", action="store_true",
+                        help="skip the embedded warm-gauge deflation lane "
+                             "(DEFLATION_SERVE); it also auto-skips under "
+                             "--chaos")
     parser.set_defaults(out=OUT_JSON)
     args = parser.parse_args(argv)
     cfg = build_config(args)
@@ -68,12 +93,32 @@ def main(argv=None) -> int:
           f"p50={lat['p50']:.1f}ms p99={lat['p99']:.1f}ms  "
           f"batches={report['batch_hist']}  "
           f"hit_rate={report['request_cache_hit_rate']:.3f}")
+    deflation_ok = True
+    if not (args.skip_deflation_serve or args.chaos):
+        d = DEFLATION_SERVE
+        print(f"[bench_serve] deflation lane: {d.requests} requests at "
+              f"mass={d.mass}, nev={d.deflation_nev}, "
+              f"harvest_tol={d.deflation_harvest_tol}")
+        defl = run_workload(d)
+        report["deflation_serve"] = defl
+        drop = defl["deflation_drop"]
+        cache = defl["deflation"]
+        print(f"[bench_serve] deflation lane: {cache['harvests']} "
+              f"harvests, {drop['hit_requests']} cache-hit requests, "
+              f"keys={drop['keys']}")
+        deflation_ok = (bool(defl["all_converged"])
+                        and drop["all_hits_dropped"]
+                        and drop["hit_requests"] > 0
+                        and defl.get("verify", {}).get("passed", True))
+        print(f"[bench_serve] deflation lane: "
+              f"{'OK' if deflation_ok else 'FAIL'} (strict iteration "
+              f"drop on every warm-gauge hit)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"[bench_serve] wrote {args.out}")
-    ok = bool(report["all_converged"])
+    ok = bool(report["all_converged"]) and deflation_ok
     if "chaos" in report:
         c = report["chaos"]
         print(f"[bench_serve] chaos: poisoned {c['poisoned_failed']}/"

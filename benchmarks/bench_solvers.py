@@ -62,6 +62,18 @@ SMOKE_TM_MU = 0.25
 # sites·RHS/s must grow monotonically from N=1 to N>=8 on the Pallas path).
 BATCH_SIZES = (1, 4, 8, 16)
 
+# Iteration-cutting rows (blockcg_16rhs / eo_deflation) run the SAME 4⁴
+# lattice and seed at a NEAR-CRITICAL mass: the 14-iteration smoke
+# operator at mass 0.1 has no low-mode structure worth sharing or
+# deflating, so the demonstration regime is where the Krylov space is
+# deep (~120 iterations) and the paper's iteration budget actually hurts.
+DEFL_MASS = -1.7
+DEFL_TOL = 1e-6
+DEFL_NEV = 32          # deflation-basis slots harvested
+DEFL_M_MAX = 160       # Lanczos vectors recorded by the harvest solve
+DEFL_HARVEST_TOL = 1e-8  # harvest solves past serving tol: deeper basis
+BLOCK_NRHS = 16        # the ROADMAP item-2 headline batch
+
 
 def _timed(fn):
     """((result, ...), first-call µs, warm µs) of fn().
@@ -195,6 +207,8 @@ def _run_eo_smoke() -> dict:
         "seed": SMOKE_SEED,
         "cgnr_eo_iters": int(st_ref.iterations),
         "cgnr_eo_pallas_iters": int(st_pal.iterations),
+        "cgnr_eo_matvecs": int(st_ref.matvecs),
+        "cgnr_eo_pallas_matvecs": int(st_pal.matvecs),
         "cgnr_eo_us": us_ref, "cgnr_eo_pallas_us": us_pal,
         "rel_res_ref": rel(x_ref), "rel_res_pallas": rel(x_pal),
         "sites_per_s_ref": sites_per_s(st_ref, us_ref),
@@ -204,11 +218,13 @@ def _run_eo_smoke() -> dict:
         # from the first (compile-inclusive) call
         "entries": [
             {"name": "cgnr_eo", "backend": "reference", "interpret": None,
-             "iters": int(st_ref.iterations), "us_first": us_ref_first,
+             "iters": int(st_ref.iterations),
+             "matvecs": int(st_ref.matvecs), "us_first": us_ref_first,
              "us_warm": us_ref},
             {"name": "cgnr_eo_pallas", "backend": "pallas",
              "interpret": True, "iters": int(st_pal.iterations),
-             "us_first": us_pal_first, "us_warm": us_pal},
+             "matvecs": int(st_pal.matvecs), "us_first": us_pal_first,
+             "us_warm": us_pal},
         ],
     }
 
@@ -253,14 +269,18 @@ def _run_eo_smoke_tm() -> dict:
         "tol": SMOKE_TOL, "seed": SMOKE_SEED, "operator": "twisted-mass",
         "cgnr_eo_tm_iters": int(st_ref.iterations),
         "cgnr_eo_tm_pallas_iters": int(st_pal.iterations),
+        "cgnr_eo_tm_matvecs": int(st_ref.matvecs),
+        "cgnr_eo_tm_pallas_matvecs": int(st_pal.matvecs),
         "rel_res_ref": rel(x_ref), "rel_res_pallas": rel(x_pal),
         "pallas_interpret_mode": True,
         "entries": [
             {"name": "cgnr_eo_tm", "backend": "reference",
              "interpret": None, "iters": int(st_ref.iterations),
+             "matvecs": int(st_ref.matvecs),
              "us_first": us_ref_first, "us_warm": us_ref},
             {"name": "cgnr_eo_tm_pallas", "backend": "pallas",
              "interpret": True, "iters": int(st_pal.iterations),
+             "matvecs": int(st_pal.matvecs),
              "us_first": us_pal_first, "us_warm": us_pal},
         ],
     }
@@ -302,9 +322,13 @@ def _run_batch_sweep() -> dict:
             jnp.linalg.norm(res.reshape(n, -1), axis=1)
             / jnp.linalg.norm(b_n.reshape(n, -1), axis=1)))
         iters = int(st.iterations)
+        mv = jax.device_get(st.matvecs)
         entries.append({
             "n_rhs": n, "iters": iters, "us_warm": us, "us_first": us_first,
             "backend": "pallas", "interpret": True,
+            # per-RHS operator applications: max over lanes matches the
+            # "iters" convention; the SUM is the gauge-amortization ledger
+            "matvecs": int(mv.max()), "matvecs_total": int(mv.sum()),
             "max_rel_res": rel, "all_converged": bool(jnp.all(st.converged)),
             "sites_rhs_per_s": lat.volume * n * iters / max(us / 1e6, 1e-12),
         })
@@ -313,6 +337,116 @@ def _run_batch_sweep() -> dict:
         "seed": SMOKE_SEED, "pallas_interpret_mode": True,
         "backend": "pallas", "interpret": True,
         "entries": entries,
+    }
+
+
+def _run_blockcg() -> dict:
+    """Block CGNR vs 16 independent solves: the shared-Krylov-space win.
+
+    Same 4⁴ lattice/seed as the smoke rows, near-critical mass (see
+    DEFL_MASS).  The guarded headline (ROADMAP item 2): TOTAL matvecs for
+    16 RHS through one block solve must come in well under 16× the
+    single-RHS count — the block search space lets every lane ride the
+    others' directions, so the block iteration count (= each lane's
+    matvec count) drops far below the single-RHS iteration count.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LatticeShape, random_gauge, random_spinor)
+    from repro.core import plan as plan_mod
+    from repro.core.wilson import dslash
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, lat)
+    b_all = jnp.stack([random_spinor(jax.random.fold_in(kb, i), lat)
+                       for i in range(BLOCK_NRHS)])
+
+    single = plan_mod.SolverPlan(operator="eo-schur", backend="reference")
+    (x_s, st_s), _, us_s = _timed(lambda: plan_mod.solve(
+        single, u, b_all[0], DEFL_MASS, tol=DEFL_TOL, maxiter=500))
+
+    block = plan_mod.SolverPlan(operator="eo-schur", backend="reference",
+                                solver="blockcg", nrhs=BLOCK_NRHS)
+    (x_b, st_b), us_b_first, us_b = _timed(lambda: plan_mod.solve(
+        block, u, b_all, DEFL_MASS, tol=DEFL_TOL, maxiter=500))
+
+    res = jax.vmap(lambda xx, bb: dslash(u, xx, DEFL_MASS) - bb)(x_b, b_all)
+    rel = float(jnp.max(
+        jnp.linalg.norm(res.reshape(BLOCK_NRHS, -1), axis=1)
+        / jnp.linalg.norm(b_all.reshape(BLOCK_NRHS, -1), axis=1)))
+    mv = jax.device_get(st_b.matvecs)
+    total = int(mv.sum())
+    total_single16 = BLOCK_NRHS * int(st_s.matvecs)
+    return {
+        "lattice": str(lat), "mass": DEFL_MASS, "tol": DEFL_TOL,
+        "seed": SMOKE_SEED, "n_rhs": BLOCK_NRHS, "backend": "reference",
+        "single_iters": int(st_s.iterations),
+        "single_matvecs": int(st_s.matvecs),
+        "blockcg_iters": int(st_b.iterations),
+        "blockcg_matvecs": int(mv.max()),
+        "total_matvecs": total,
+        "total_matvecs_single16": total_single16,
+        "matvec_ratio": total / max(total_single16, 1),
+        "max_rel_res": rel,
+        "all_converged": bool(jnp.all(st_b.converged)),
+        "all_verified": bool(jnp.all(st_b.verified)),
+        "us_warm": us_b, "us_first": us_b_first, "us_single_warm": us_s,
+    }
+
+
+def _run_eo_deflation() -> dict:
+    """EigCG deflation: harvest on the first solve, deflate the second.
+
+    The harvest solve runs past serving tolerance (DEFL_HARVEST_TOL) to
+    record a deep Krylov space, condenses it into DEFL_NEV approximate
+    low modes, and every LATER solve on this gauge field starts from the
+    Galerkin projection — the guarded signal is the strict iteration drop
+    of the deflated solve versus the identical undeflated one, and the
+    deflated solve still passing true-residual verification against the
+    ORIGINAL system.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LatticeShape, random_gauge, random_spinor)
+    from repro.core import plan as plan_mod
+
+    lat = LatticeShape(*SMOKE_DIMS)
+    key = jax.random.PRNGKey(SMOKE_SEED)
+    ku, kb = jax.random.split(key)
+    u = random_gauge(ku, lat)
+    b0 = random_spinor(jax.random.fold_in(kb, 0), lat)
+    b1 = random_spinor(jax.random.fold_in(kb, 1), lat)
+
+    plan = plan_mod.SolverPlan(operator="eo-schur", backend="reference")
+    _, st_h, basis = plan_mod.harvest_deflation(
+        plan, u, b0, DEFL_MASS, tol=DEFL_HARVEST_TOL, maxiter=500,
+        nev=DEFL_NEV, m_max=DEFL_M_MAX, verify_tol=DEFL_TOL)
+
+    (x_u, st_u), _, us_u = _timed(lambda: plan_mod.solve(
+        plan, u, b1, DEFL_MASS, tol=DEFL_TOL, maxiter=500))
+    (x_d, st_d), us_d_first, us_d = _timed(lambda: plan_mod.solve(
+        plan, u, b1, DEFL_MASS, tol=DEFL_TOL, maxiter=500,
+        deflation=basis))
+
+    return {
+        "lattice": str(lat), "mass": DEFL_MASS, "tol": DEFL_TOL,
+        "seed": SMOKE_SEED, "backend": "reference",
+        "nev": DEFL_NEV, "m_max": DEFL_M_MAX,
+        "harvest_tol": DEFL_HARVEST_TOL,
+        "harvest_iters": int(st_h.iterations),
+        "harvest_matvecs": int(st_h.matvecs),
+        "harvest_verified": bool(st_h.verified),
+        "undeflated_iters": int(st_u.iterations),
+        "undeflated_matvecs": int(st_u.matvecs),
+        "deflated_iters": int(st_d.iterations),
+        "deflated_matvecs": int(st_d.matvecs),
+        "iteration_drop": int(st_u.iterations) - int(st_d.iterations),
+        "deflated_converged": bool(st_d.converged),
+        "deflated_verified": bool(st_d.verified),
+        "us_undeflated_warm": us_u, "us_deflated_warm": us_d,
+        "us_deflated_first": us_d_first,
     }
 
 
@@ -351,6 +485,8 @@ out = {"lattice": str(lat), "mass": mass, "tol": tol, "seed": seed,
        "backend": "reference", "interpret": None,
        "iters": int(st.iterations),
        "rhs_iters": [int(v) for v in st.rhs_iterations],
+       "matvecs": int(jnp.max(st.matvecs)),
+       "matvecs_total": int(jnp.sum(st.matvecs)),
        "max_rel_res": rel, "all_converged": bool(jnp.all(st.converged)),
        "us_warm": us, "us_first": us_first,
        "sites_rhs_per_s": lat.volume * n * int(st.iterations)
@@ -418,7 +554,9 @@ def _run_ckpt_overhead() -> dict:
         "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
         "seed": SMOKE_SEED, "every_iters": every,
         "iters": iters,
+        "matvecs": int(st_ref.matvecs),
         "iters_checkpointed": int(st_seg.iterations),
+        "matvecs_checkpointed": int(st_seg.matvecs),
         "bitwise_equal": bool(np.array_equal(np.asarray(x_seg),
                                              np.asarray(x_ref))),
         "segments": segments,
@@ -524,6 +662,25 @@ def run() -> list[tuple[str, float, str]]:
                          f"sites_rhs_per_s={e['sites_rhs_per_s']:.0f}"))
     except Exception as e:
         rows.append(("batch_sweep", -1.0, f"FAILED:{e!r:.200}"))
+    try:
+        blk = _run_blockcg()
+        report["blockcg_16rhs"] = blk
+        rows.append((f"blockcg_n{blk['n_rhs']}", blk["us_warm"],
+                     f"iters={blk['blockcg_iters']};"
+                     f"total_matvecs={blk['total_matvecs']};"
+                     f"vs_16x_single={blk['matvec_ratio']:.2f}x"))
+    except Exception as e:
+        rows.append(("blockcg_16rhs", -1.0, f"FAILED:{e!r:.200}"))
+    try:
+        dfl = _run_eo_deflation()
+        report["eo_deflation"] = dfl
+        rows.append(("eo_deflation", dfl["us_deflated_warm"],
+                     f"iters={dfl['deflated_iters']}"
+                     f"(undeflated={dfl['undeflated_iters']});"
+                     f"harvest={dfl['harvest_iters']};"
+                     f"nev={dfl['nev']}"))
+    except Exception as e:
+        rows.append(("eo_deflation", -1.0, f"FAILED:{e!r:.200}"))
     try:
         sh = _run_eo_sharded()
         report["eo_sharded"] = sh

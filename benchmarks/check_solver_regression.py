@@ -8,7 +8,13 @@ Compares a freshly generated ``BENCH_solvers.json`` against the committed
 * ``eo_smoke_tm`` — the same solve through the operator registry's
   twisted-mass family (site-term epilogues folded into the same kernels);
 * ``batch_sweep`` — per-N iteration counts of the multi-RHS batched solve;
-* ``eo_sharded``  — the 8-way sharded pipelined Schur solve's trip count.
+* ``eo_sharded``  — the 8-way sharded pipelined Schur solve's trip count;
+* ``blockcg_16rhs`` — block CGNR over 16 RHS at near-critical mass: the
+  iteration/matvec counts AND the headline inequality (total matvecs
+  <= 0.7 x 16 x the single-RHS count, ROADMAP item 2);
+* ``eo_deflation`` — EigCG harvest + deflated re-solve: exact counts and
+  the strict deflated < undeflated iteration drop, verified against the
+  original system.
 
 Iteration count is an ALGORITHMIC property (deterministic seed, fixed
 tolerance), so it is the cheap, noise-free regression signal — wall-clock
@@ -167,6 +173,72 @@ def _check_eo_sharded(table, cur, base):
     table.iters("eo_sharded", "iters", base_s["iters"], cur_s["iters"])
 
 
+def _check_blockcg(table, cur, base):
+    """Guard the block-CG row: exact counts + the 0.7x matvec headline.
+
+    Iteration and matvec counts hold the usual baseline+slack ceiling;
+    additionally the ISSUE-9 acceptance inequality is recomputed from the
+    CURRENT run — total matvecs for the 16-RHS block solve must stay
+    <= max_matvec_ratio x (16 x the single-RHS matvec count) — so the
+    win is guarded as a property, not just pinned as a number.
+    """
+    base_s = base.get("blockcg_16rhs")
+    if not base_s:
+        return  # baseline predates block CG: nothing to guard
+    cur_s = cur.get("blockcg_16rhs")
+    if not cur_s:
+        table.missing("blockcg_16rhs", "(section)", "present")
+        return
+    if not _problem_match(table, "blockcg_16rhs", cur_s, base_s,
+                          extra=("n_rhs", "backend")):
+        return
+    for key in ("single_iters", "single_matvecs", "blockcg_iters",
+                "blockcg_matvecs"):
+        table.iters("blockcg_16rhs", key, base_s[key], cur_s[key])
+    for key in ("all_converged", "all_verified"):
+        ok = bool(cur_s.get(key, False))
+        table.add("blockcg_16rhs", key, True, ok, "-",
+                  "OK" if ok else "REGRESSION")
+    ratio_cap = float(base_s.get("max_matvec_ratio", 0.7))
+    total = int(cur_s.get("total_matvecs", 0))
+    cap = ratio_cap * int(cur_s.get("total_matvecs_single16", 0))
+    table.add("blockcg_16rhs", "total_matvecs", f"<={cap:.0f}", total,
+              f"{ratio_cap}x16xsingle",
+              "OK" if total and total <= cap else "REGRESSION")
+
+
+def _check_eo_deflation(table, cur, base):
+    """Guard the EigCG row: exact counts + the strict iteration drop.
+
+    The deflated solve must take STRICTLY fewer iterations than the
+    identical undeflated solve (the warm-gauge-field product the serving
+    cache sells), and still pass true-residual verification against the
+    ORIGINAL system.
+    """
+    base_s = base.get("eo_deflation")
+    if not base_s:
+        return  # baseline predates deflation: nothing to guard
+    cur_s = cur.get("eo_deflation")
+    if not cur_s:
+        table.missing("eo_deflation", "(section)", "present")
+        return
+    if not _problem_match(table, "eo_deflation", cur_s, base_s,
+                          extra=("nev", "m_max", "harvest_tol", "backend")):
+        return
+    for key in ("harvest_iters", "harvest_matvecs", "undeflated_iters",
+                "undeflated_matvecs", "deflated_iters", "deflated_matvecs"):
+        table.iters("eo_deflation", key, base_s[key], cur_s[key])
+    drop = (int(cur_s.get("deflated_iters", 1 << 30))
+            < int(cur_s.get("undeflated_iters", 0)))
+    table.add("eo_deflation", "deflated<undeflated",
+              True, drop, "-", "OK" if drop else "REGRESSION")
+    for key in ("harvest_verified", "deflated_converged",
+                "deflated_verified"):
+        ok = bool(cur_s.get(key, False))
+        table.add("eo_deflation", key, True, ok, "-",
+                  "OK" if ok else "REGRESSION")
+
+
 def _check_ckpt_overhead(table, cur, base):
     """Guard the segmented (checkpointed) smoke solve.
 
@@ -295,6 +367,52 @@ def _check_serve(table, cur, base):
         table.missing("serve", "iters.max", base_s.get("max_iters"))
     else:
         table.iters("serve", "iters.max", base_s["max_iters"], iters_max)
+    _check_deflation_serve(table, cur, base)
+
+
+def _check_deflation_serve(table, cur, base):
+    """Guard the warm-gauge deflation lane embedded in the serve report.
+
+    bench_serve.py runs a second, light-mass workload with the deflation
+    cache ON and embeds its report under ``deflation_serve``.  The gate
+    is the ISSUE-9 serving acceptance: enough requests were served off a
+    deflation-cache hit (``min_hits``), every hit converged in STRICTLY
+    fewer iterations than the cold solve on its coalesce key, everything
+    converged+verified, and the direct-oracle comparison (re-solved with
+    the SAME basis) passed.
+    """
+    base_d = base.get("deflation_serve")
+    if not base_d:
+        return  # baseline predates the deflation lane: nothing to guard
+    d = cur.get("deflation_serve")
+    if not d:
+        table.missing("deflation_serve", "(report section)", "present")
+        return
+    if not _problem_match(table, "deflation_serve", d, base_d,
+                          extra=("backend",)):
+        return
+    conv = bool(d.get("all_converged", False))
+    table.add("deflation_serve", "all_converged", True, conv, "-",
+              "OK" if conv else "REGRESSION")
+    drop = d.get("deflation_drop", {})
+    hits = int(drop.get("hit_requests", 0))
+    need = int(base_d.get("min_hits", 1))
+    table.add("deflation_serve", "hit_requests", f">={need}", hits, need,
+              "OK" if hits >= need else "REGRESSION")
+    dropped = bool(drop.get("all_hits_dropped", False))
+    table.add("deflation_serve", "all_hits_dropped", True, dropped, "-",
+              "OK" if dropped else "REGRESSION")
+    harvests = int(d.get("deflation", {}).get("harvests", 0))
+    need_h = int(base_d.get("min_harvests", 1))
+    table.add("deflation_serve", "harvests", f">={need_h}", harvests,
+              need_h, "OK" if harvests >= need_h else "REGRESSION")
+    v = d.get("verify")
+    if not v:
+        table.missing("deflation_serve", "verify", "passed")
+    else:
+        table.add("deflation_serve", "verify.max_abs_err",
+                  f"<={v.get('tol')}", v.get("max_abs_err"), v.get("tol"),
+                  "OK" if v.get("passed") else "REGRESSION")
 
 
 def _check_chaos(table, cur, base):
@@ -398,6 +516,8 @@ def main(argv: list[str]) -> int:
         cur = {"eo_smoke": bench_solvers._run_eo_smoke(),
                "eo_smoke_tm": bench_solvers._run_eo_smoke_tm(),
                "batch_sweep": bench_solvers._run_batch_sweep(),
+               "blockcg_16rhs": bench_solvers._run_blockcg(),
+               "eo_deflation": bench_solvers._run_eo_deflation(),
                "eo_sharded": bench_solvers._run_eo_sharded(),
                "ckpt_overhead": bench_solvers._run_ckpt_overhead()}
     else:
@@ -422,6 +542,8 @@ def main(argv: list[str]) -> int:
     for name in GUARDED_SECTIONS:
         _check_section(table, name, cur, base)
     _check_batch_sweep(table, cur, base)
+    _check_blockcg(table, cur, base)
+    _check_eo_deflation(table, cur, base)
     _check_eo_sharded(table, cur, base)
     _check_ckpt_overhead(table, cur, base)
     if not table.rows:

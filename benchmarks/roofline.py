@@ -21,6 +21,32 @@ import os
 
 PEAK = {"compute": 197e12, "hbm": 819e9, "ici": 50e9}
 
+
+def dslash_intensity(n_rhs: int = 1, dtype_bytes: int = 4) -> dict:
+    """DESIGN.md §6 streaming-traffic model for the packed Wilson dslash.
+
+    Per output site one application reads 8 links × 18 reals = 144 reals
+    of gauge plus 24 reals of spinor and writes 24; batching N RHS
+    through one gauge read amortizes only the gauge term:
+
+        bytes/site/RHS = (144 / N + 48) · dtype_bytes
+        flops/site     = 1320                  (paper §5 convention)
+
+    Returns the model's bytes/site, flops/site and arithmetic intensity
+    (flops per byte).  bench_dslash.py divides measured wall-time into
+    this model to report the memory bandwidth each timing WOULD need if
+    it streamed exactly the model traffic — the achieved-vs-model
+    column in BENCH_dslash.json.
+    """
+    if n_rhs < 1:
+        raise ValueError(f"n_rhs must be >= 1, got {n_rhs}")
+    bytes_per_site = (144.0 / n_rhs + 48.0) * dtype_bytes
+    flops_per_site = 1320.0
+    return {"n_rhs": int(n_rhs), "dtype_bytes": int(dtype_bytes),
+            "bytes_per_site": bytes_per_site,
+            "flops_per_site": flops_per_site,
+            "flops_per_byte": flops_per_site / bytes_per_site}
+
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 

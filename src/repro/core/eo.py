@@ -130,6 +130,22 @@ def eo_operators_packed(u: Array, mass, r: float = 1.0, *,
         u_e=upe, u_o=upo)
 
 
+def schur_rhs(ops: EOOperators, b_e: Array, b_o: Array) -> Array:
+    """The Schur normal-equation RHS ``D̂†(b_e − D_eo M_oo⁻¹ b_o)``.
+
+    Every even-odd Krylov path iterates against this vector — plain CGNR,
+    pipecg, block CG, and the deflation projection all derive it
+    identically, so it is built here once.  Prologue work: NOT a counted
+    matvec (see ``SolveStats.matvecs``).
+    """
+    return ops.dhat_dag(b_e - ops.d_eo(ops.m_inv(b_o)))
+
+
+def back_substitute_odd(ops: EOOperators, b_o: Array, x_e: Array) -> Array:
+    """Recover the odd half field: ``x_o = M_oo⁻¹ (b_o − D_oe x_e)``."""
+    return ops.m_inv(b_o - ops.d_oe(x_e))
+
+
 class EOContext(NamedTuple):
     """A resolved even-odd solve: blocks + layout converters + engine.
 

@@ -59,7 +59,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.core import distributed as dist
 from repro.core import solvers
-from repro.core.eo import EOContext, eo_context
+from repro.core.eo import (EOContext, back_substitute_odd, eo_context,
+                           schur_rhs)
 from repro.core.lattice import (complex_to_real_pair, field_dot,
                                 field_norm2, field_norm2_batched, merge_eo,
                                 pack_gauge, pack_spinor,
@@ -73,7 +74,7 @@ Array = jax.Array
 
 _OPERATORS = ("full", "eo-schur")
 _BACKENDS = ("reference", "pallas")
-_SOLVERS = ("cgnr", "pipecg")
+_SOLVERS = ("cgnr", "pipecg", "blockcg")
 _PRECISIONS = ("single", "mixed", "low")
 
 
@@ -95,8 +96,11 @@ class SolverPlan:
         a nonzero ``mu`` for families that don't).
       backend:   "reference" (jnp, the paper's CPU debugging path) or
         "pallas" (plane-streaming stencil kernels + fused vector engine).
-      solver:    "cgnr" or "pipecg" (pipelined: ONE fused reduction per
-        iteration — T4 at cluster scale).
+      solver:    "cgnr", "pipecg" (pipelined: ONE fused reduction per
+        iteration — T4 at cluster scale) or "blockcg" (block CGNR: the N
+        right-hand sides share one Krylov search space through N×N Gram
+        solves — fewer iterations, not just cheaper ones; requires
+        ``nrhs``, single precision, single device; DESIGN.md §12).
       precision: "single", "mixed" (reliable-update mpcg: bulk iterations
         in ``low``, true residuals wide) or "low" (all-low cg16 — the
         measurement rig for mpcg's inner-loop cost, full operator only).
@@ -141,11 +145,17 @@ class SolverPlan:
                 f"SolverPlan: operator family {spec.name!r} has no site "
                 f"parameter 'mu' (got mu={self.mu}); pick a family that "
                 "declares it, e.g. operator_family='twisted-mass'")
-        if self.precision in ("mixed", "low") and self.solver == "pipecg":
+        if self.precision in ("mixed", "low") and self.solver in ("pipecg",
+                                                                  "blockcg"):
             raise ValueError(
                 "SolverPlan: the mixed/low precision paths use the "
-                "reliable-update CG loop; solver='pipecg' composes with "
-                "precision='single' only")
+                f"reliable-update CG loop; solver={self.solver!r} composes "
+                "with precision='single' only")
+        if self.solver == "blockcg" and self.nrhs is None:
+            raise ValueError(
+                "SolverPlan: solver='blockcg' shares one Krylov space "
+                "across a batch of right-hand sides; set nrhs (a single "
+                "RHS has nothing to share — use solver='cgnr')")
         if self.precision == "low" and self.operator != "full":
             raise ValueError(
                 "SolverPlan: precision='low' (all-low cg16) exists for the "
@@ -298,6 +308,7 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
           layout: str = "natural",
           verify: bool = True,
           checkpoint: "CheckpointPolicy | None" = None,
+          deflation: "solvers.DeflationBasis | None" = None,
           ) -> tuple[Array, solvers.SolveStats]:
     """Execute a :class:`SolverPlan`: the single entry point of the stack.
 
@@ -324,6 +335,15 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
         verdict, rhs_mask)`` to ``checkpoint.dir`` between segments (see
         :func:`loop_program`; DESIGN.md §11).  ``None`` (the default)
         runs the historical single-while-loop program.
+      deflation: a :class:`solvers.DeflationBasis` harvested by
+        :func:`harvest_deflation` on the SAME (gauge, family, mu, mass,
+        backend) — the RHS is Galerkin-projected against the basis and
+        the CG loop starts from the x₀ correction, cutting the iteration
+        count by the deflated low modes (DESIGN.md §12).  Composes with
+        the single-precision cg paths ("cgnr"/"blockcg", no mesh, no
+        checkpoint); the post-solve verification still gates against the
+        ORIGINAL system, so a stale or wrong basis fails loudly instead
+        of returning an unconverged x.
     Returns:
       (x, SolveStats) — solution in the input layout; per-RHS stats
       fields (residual_norm2/converged/rhs_iterations) when batched.
@@ -335,6 +355,15 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
         raise ValueError("layout='packed' is the full-operator contract; "
                          "the even-odd paths take natural-layout fields")
     _check_batch_shape(plan, b, layout)
+    if deflation is not None and (
+            plan.mesh is not None or checkpoint is not None
+            or plan.solver == "pipecg" or plan.precision != "single"):
+        raise NotImplementedError(
+            "deflation composes with the single-device single-precision "
+            "cg paths (solver='cgnr'/'blockcg', no checkpoint); got "
+            f"solver={plan.solver!r} precision={plan.precision!r} "
+            f"mesh={'set' if plan.mesh is not None else None} "
+            f"checkpoint={'set' if checkpoint is not None else None}")
     if checkpoint is not None:
         return _solve_checkpointed(
             plan, u, b, mass, checkpoint=checkpoint, tol=tol,
@@ -347,6 +376,10 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
               residual_replacement_every=residual_replacement_every,
               dot=dot, norm2=norm2)
     if plan.mesh is not None:
+        if plan.solver == "blockcg":
+            raise NotImplementedError(
+                "blockcg is single-device (its N×N Gram einsums contract "
+                "unsharded site axes); drop the mesh or use solver='cgnr'")
         if plan.operator == "eo-schur":
             if plan.precision != "single":
                 raise NotImplementedError(
@@ -368,9 +401,11 @@ def solve(plan: SolverPlan, u: Array, b: Array, mass, *,
                     "drop nrhs or precision")
             x, stats = _solve_eo_mp(plan, u, b, mass, **kw)
         else:
-            x, stats = _solve_eo(plan, u, b, mass, **kw)
+            x, stats = _solve_eo(plan, u, b, mass, deflation=deflation,
+                                 **kw)
     else:
-        x, stats = _solve_full(plan, u, b, mass, layout=layout, **kw)
+        x, stats = _solve_full(plan, u, b, mass, layout=layout,
+                               deflation=deflation, **kw)
     if verify:
         stats = _attach_verification(plan, u, b, mass, x, stats, tol,
                                      layout=layout)
@@ -389,13 +424,72 @@ def _check_batch_shape(plan: SolverPlan, b: Array, layout: str):
                          f"extent {b.shape[0]}")
 
 
+def harvest_deflation(plan: SolverPlan, u: Array, b: Array, mass, *,
+                      tol: float = 1e-8, maxiter: int = 1000, nev: int = 8,
+                      m_max: int = 48, verify_tol: float | None = None,
+                      ) -> tuple[Array, "solvers.SolveStats",
+                                 "solvers.DeflationBasis"]:
+    """Solve ONE system and harvest a :class:`solvers.DeflationBasis`.
+
+    Runs :func:`solvers.cg_harvest` (bitwise the plain CG trajectory, one
+    Lanczos-vector buffer write per iteration) on the plan's Schur normal
+    operator, then condenses the recorded Lanczos data into the ``nev``
+    smallest Ritz pairs eagerly on the host (the harvest count is a
+    concrete loop exit, not a traced value).  The basis lives in the
+    plan's WORKING layout — reuse it only via ``plan.solve(...,
+    deflation=basis)`` on a plan with the same ``cache_key()`` and the
+    same ``(u, mass)``; the serving layer keys its deflation cache
+    accordingly (DESIGN.md §12).
+
+    Returns ``(x, stats, basis)`` — ``stats.matvecs`` includes the
+    ``min(nev, iterations)`` extra operator applications spent projecting
+    the basis (``WᴴAW``), so benchmark accounting charges the harvest
+    cost to the harvest solve.  Verification runs against the ORIGINAL
+    system exactly as in :func:`solve`, gated at ``verify_tol``
+    (default: ``tol``) — a deep harvest deliberately iterates past the
+    serving tolerance to mine spectral data, and single precision cannot
+    push the TRUE residual below ~1e-7 relative no matter how far the
+    recursive residual falls, so the honest verification gate for a
+    harvest driven to 1e-8 is the tolerance its ``x`` is actually served
+    or compared at.
+
+    Single-device, single-precision, single-RHS eo-schur only: the
+    harvest records live alongside an unbatched CG loop.
+    """
+    if (plan.operator != "eo-schur" or plan.precision != "single"
+            or plan.batched or plan.mesh is not None):
+        raise NotImplementedError(
+            "harvest_deflation needs the single-device single-precision "
+            "unbatched eo-schur path; got "
+            f"operator={plan.operator!r} precision={plan.precision!r} "
+            f"nrhs={plan.nrhs} mesh="
+            f"{'set' if plan.mesh is not None else None}")
+    ctx = resolve(plan, u, mass, out_dtype=b.dtype)
+    b_e, b_o = ctx.prepare(b)
+    ops = ctx.ops
+    a_hat = lambda v: ops.dhat_dag(ops.dhat(v))
+    rhs = schur_rhs(ops, b_e, b_o)
+    x_e, stats, (vbuf, albuf, bebuf) = solvers.cg_harvest(
+        a_hat, rhs, tol=tol, maxiter=maxiter, m_max=m_max)
+    k = int(jax.device_get(stats.iterations))
+    basis = solvers.ritz_deflation_basis(a_hat, vbuf, albuf, bebuf, k, nev)
+    n_eff = max(1, min(nev, min(k, int(m_max))))
+    stats = stats._replace(matvecs=stats.matvecs + n_eff)
+    x_o = back_substitute_odd(ops, b_o, x_e)
+    x = ctx.finish(x_e, x_o)
+    stats = _attach_verification(
+        plan, u, b, mass, x, stats,
+        tol if verify_tol is None else float(verify_tol), layout="natural")
+    return x, stats, basis
+
+
 # ---------------------------------------------------------------------------
 # Single-device even-odd paths
 # ---------------------------------------------------------------------------
 
 
 def _solve_eo(plan, u, b, mass, *, tol, maxiter, dot, norm2,
-              residual_replacement_every, **_):
+              residual_replacement_every, deflation=None, **_):
     ctx = resolve(plan, u, mass, out_dtype=b.dtype)
     b_e, b_o = ctx.prepare(b)
     ops = ctx.ops
@@ -411,14 +505,26 @@ def _solve_eo(plan, u, b, mass, *, tol, maxiter, dot, norm2,
             residual_replacement_every=residual_replacement_every,
             dot=dot, norm2=norm2, batched=ctx.batched)
         x_o = ops.m_inv(b_o - ops.d_oe(x_e))
+    elif plan.solver == "blockcg":
+        rhs = schur_rhs(ops, b_e, b_o)
+        x0 = None
+        if deflation is not None:
+            x0 = solvers.deflate_x0(deflation, rhs)
+        x_e, stats = solvers.blockcg(
+            lambda v: ops.dhat_dag(ops.dhat(v)), rhs, x0,
+            tol=tol, maxiter=maxiter, norm2=norm2)
+        x_o = back_substitute_odd(ops, b_o, x_e)
     else:
         engine = {}
         if ctx.engine is not None:
             engine = dict(update=ctx.engine[0], xpay=ctx.engine[1])
+        x0 = None
+        if deflation is not None:
+            x0 = solvers.deflate_x0(deflation, schur_rhs(ops, b_e, b_o))
         (x_e, x_o), stats = solvers.cgnr_eo(
             ops.dhat, ops.dhat_dag, ops.d_eo, ops.d_oe, ops.m_inv,
-            b_e, b_o, tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
-            batched=ctx.batched, **engine)
+            b_e, b_o, x0=x0, tol=tol, maxiter=maxiter, dot=dot,
+            norm2=norm2, batched=ctx.batched, **engine)
     return ctx.finish(x_e, x_o), stats
 
 
@@ -496,7 +602,7 @@ def _solve_eo_mp(plan, u, b, mass, *, tol, maxiter, inner_tol,
 
 def _solve_full(plan, u, b, mass, *, tol, maxiter, inner_tol,
                 inner_maxiter, max_outer, residual_replacement_every,
-                dot, norm2, layout):
+                dot, norm2, layout, deflation=None):
     # local import: see eo_operators_packed
     from repro.kernels.wilson_dslash import ops as wops
 
@@ -510,14 +616,20 @@ def _solve_full(plan, u, b, mass, *, tol, maxiter, inner_tol,
     op_hi = lambda v: wops.normal_op(up, v, m, **kw)
     rhs = wops.dslash_dagger(up, pp, m, **kw)
     batched = plan.batched
+    x0 = None
+    if deflation is not None:
+        x0 = solvers.deflate_x0(deflation, rhs)
     if plan.precision == "single":
         if plan.solver == "pipecg":
             x, stats = solvers.pipecg(
                 op_hi, rhs, tol=tol, maxiter=maxiter,
                 residual_replacement_every=residual_replacement_every,
                 dot=dot, norm2=norm2, batched=batched)
+        elif plan.solver == "blockcg":
+            x, stats = solvers.blockcg(op_hi, rhs, x0, tol=tol,
+                                       maxiter=maxiter, norm2=norm2)
         else:
-            x, stats = solvers.cg(op_hi, rhs, tol=tol, maxiter=maxiter,
+            x, stats = solvers.cg(op_hi, rhs, x0, tol=tol, maxiter=maxiter,
                                   dot=dot, norm2=norm2, batched=batched)
     else:
         low_dtype = plan.low_dtype
@@ -587,7 +699,8 @@ def _solve_full_sharded(plan, u, b, mass, *, tol, maxiter, inner_tol,
         return solvers.cg(lambda v: op(up_l, v), rhs, tol=tol,
                           maxiter=maxiter, dot=pdot, norm2=pnorm2)
 
-    stats_spec = solvers.SolveStats(P(), P(), P(), P(), None, verdict=P())
+    stats_spec = solvers.SolveStats(P(), P(), P(), P(), None, verdict=P(),
+                                    matvecs=P())
     shmapped = compat.shard_map(
         local_solve, mesh=mesh,
         in_specs=(gauge_spec, psi_spec),
@@ -716,7 +829,7 @@ def _sharded_eo_solver(plan: SolverPlan, mass: float, tol: float,
 
     stats_spec = solvers.SolveStats(P(), P(), P(), P(),
                                     P() if batched else None,
-                                    verdict=P())
+                                    verdict=P(), matvecs=P())
     solver = jax.jit(compat.shard_map(
         local_solve, mesh=mesh,
         in_specs=(gauge_spec, gauge_spec, bspec, bspec),
@@ -1037,7 +1150,7 @@ def _sharded_eo_segment_fns(plan: SolverPlan, mass: float, tol: float,
                       + ((P(),) if batched else ()) + (P(), P()))
     stats_spec = solvers.SolveStats(P(), P(), P(), P(),
                                     P() if batched else None,
-                                    verdict=P())
+                                    verdict=P(), matvecs=P())
     gspecs = (gauge_spec, gauge_spec, bspec, bspec)
 
     def local_start(upe_l, upo_l, pbe_l, pbo_l):
@@ -1127,6 +1240,11 @@ def loop_program(plan: SolverPlan, u: Array, b: Array, mass, *,
     if layout == "packed" and plan.operator != "full":
         raise ValueError("layout='packed' is the full-operator contract; "
                          "the even-odd paths take natural-layout fields")
+    if plan.solver == "blockcg":
+        raise NotImplementedError(
+            "blockcg has no segmented LoopProgram (checkpointing shares "
+            "the cg/pipecg carry contracts); use solver='cgnr' for "
+            "checkpointed solves")
     _check_batch_shape(plan, b, layout)
     kw = dict(tol=tol, maxiter=maxiter, inner_tol=inner_tol,
               inner_maxiter=inner_maxiter, max_outer=max_outer,

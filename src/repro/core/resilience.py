@@ -151,9 +151,20 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
     the accumulated solution, and snapshotting it would poison a later
     resume — the caller (``resume_solve``) re-checkpoints the verified
     accumulated iterate instead.
+
+    ``deflation`` (a :class:`solvers.DeflationBasis` via ``solve_kw``)
+    warm-starts the FIRST attempt only.  Retry and escalation rungs run
+    deflation-free: a basis harvested from a bad solve (or one that no
+    longer matches the gauge field) must not be able to poison every
+    rung of the ladder, and the accumulated iterate is in any case
+    verified against the ORIGINAL system above — a misleading deflated
+    x0 can waste attempt 0, never corrupt the returned solution.  When
+    a ``checkpoint`` policy is in effect the basis is dropped too
+    (deflation does not compose with segmented solves).
     """
     policy = RetryPolicy() if policy is None else policy
     ladder = policy.ladder(plan)
+    deflation = solve_kw.pop("deflation", None)
     site = plan.site_term(float(mass))
 
     def true_residual(x):
@@ -196,6 +207,9 @@ def defended_solve(plan: plan_mod.SolverPlan, u, b, mass, *,
         ckw = dict(solve_kw)
         if checkpoint is not None and not restarted:
             ckw["checkpoint"] = checkpoint
+        elif (deflation is not None and attempt == 0 and not restarted
+                and checkpoint is None):
+            ckw["deflation"] = deflation
         x, stats = plan_mod.solve(rung, u, rhs, mass, tol=rhs_tol,
                                   maxiter=maxiter, **ckw)
         x_try = x if not restarted else x_acc + x

@@ -79,6 +79,20 @@ class SolveStats(NamedTuple):
     # verification gate.  See plan._attach_verification.
     true_residual_norm2: Array | None = None
     verified: Array | None = None
+    # exact count of ITERATION-OPERATOR applications (int32; per-RHS (N,)
+    # for batched solves): one "matvec" is one application of the Krylov
+    # operator the solver iterates with — for CGNR paths the normal
+    # operator D†D / D̂†D̂ counts as ONE matvec (the paper's per-iteration
+    # cost unit).  Counts the loop body's applications plus any x0-seeded
+    # initial residual and pipecg's init/replacement applications; RHS
+    # preparation (D†b) and the post-solve verification D-application are
+    # epilogue/prologue work in a different unit and are NOT counted.  In
+    # a batched solve every lane rides every block matvec, so per-RHS
+    # matvecs equal the loop trip count (a frozen lane still streams
+    # through the operator — this is physical work, which is exactly what
+    # block CG and deflation reduce).  Derived from loop-exit counters
+    # only: the hot body and its carry are untouched.
+    matvecs: Array | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +303,9 @@ def cg_parts(op: Op, b: Array, x0: Array | None = None, *,
         init = init + (jnp.zeros_like(rs, jnp.int32),)
     init = init + (jnp.zeros(rs.shape, bool), rs)
 
+    # the x0 branch of the prologue applied op once for the initial residual
+    init_mv = jnp.asarray(0 if x0 is None else 1, jnp.int32)
+
     def finish(out):
         k, x, r, p, rs = out[:5]
         broken, rs_mark = out[-2:]
@@ -300,7 +317,8 @@ def cg_parts(op: Op, b: Array, x0: Array | None = None, *,
                            outer_iterations=jnp.asarray(1, jnp.int32),
                            residual_norm2=rs, converged=rs <= limit,
                            rhs_iterations=out[5] if batched else None,
-                           verdict=classify(rs, limit, broken, stalled))
+                           verdict=classify(rs, limit, broken, stalled),
+                           matvecs=jnp.broadcast_to(k + init_mv, rs.shape))
         return x, stats
 
     return LoopParts(init=init, cond=cond, body=body, finish=finish,
@@ -449,9 +467,10 @@ def cgnr(d_op: Op, d_dag_op: Op, b: Array, **kw) -> tuple[Array, SolveStats]:
 
 
 def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
-            b_e: Array, b_o: Array, *, tol: float = 1e-8,
-            maxiter: int = 1000, dot=field_dot, norm2=field_norm2,
-            update=None, xpay=None, batched: bool = False,
+            b_e: Array, b_o: Array, x0: Array | None = None, *,
+            tol: float = 1e-8, maxiter: int = 1000, dot=field_dot,
+            norm2=field_norm2, update=None, xpay=None,
+            batched: bool = False,
             ) -> tuple[tuple[Array, Array], SolveStats]:
     """Even-odd Schur-preconditioned CGNR.
 
@@ -463,13 +482,16 @@ def cgnr_eo(dhat: Op, dhat_dag: Op, d_eo: Op, d_oe: Op, m_inv: Op,
       b_e, b_o:       the RHS split by parity; a leading RHS-batch axis on
         both (with ``batched=True`` and batch-capable operator blocks)
         solves all N systems in one masked CG loop.
+      x0:             optional even-parity initial guess for the Schur
+        normal system (deflation projects the RHS into one; see
+        :func:`deflate_x0`).  ``None`` keeps the zero-start fast path.
       update, xpay:   optional fused vector engine, forwarded to :func:`cg`.
     Returns:
       ((x_e, x_o), SolveStats) — merge with ``lattice.merge_eo`` for the
       full-lattice solution.  ``iterations`` counts the half-size CG steps.
     """
     b_hat = b_e - d_eo(m_inv(b_o))
-    x_e, stats = cg(lambda v: dhat_dag(dhat(v)), dhat_dag(b_hat),
+    x_e, stats = cg(lambda v: dhat_dag(dhat(v)), dhat_dag(b_hat), x0,
                     tol=tol, maxiter=maxiter, dot=dot, norm2=norm2,
                     update=update, xpay=xpay, batched=batched)
     x_o = m_inv(b_o - d_oe(x_e))
@@ -598,10 +620,14 @@ def mpcg_parts(op_low: Op, op_high: Op, b: Array, *,
         # the true residual by STAGNATION_FACTOR over the last cycle
         stalled = jnp.logical_and(outer >= 2,
                                   rs > STAGNATION_FACTOR * rs_mark)
+        # each outer cycle: the inner CG's per-iteration op_low applications
+        # (= inner_total) plus ONE op_high reliable-update application
         stats = SolveStats(iterations=inner_total, outer_iterations=outer,
                            residual_norm2=rs, converged=rs <= limit,
                            rhs_iterations=out[5] if batched else None,
-                           verdict=classify(rs, limit, broken, stalled))
+                           verdict=classify(rs, limit, broken, stalled),
+                           matvecs=jnp.broadcast_to(inner_total + outer,
+                                                    rs.shape))
         return x, stats
 
     return LoopParts(init=init, cond=cond, body=body, finish=finish,
@@ -748,11 +774,15 @@ def pipecg_parts(op: Op, b: Array, *, tol: float = 1e-8,
 
     def finish(out):
         k, x, gamma, broken = out[0], out[1], out[7], out[-1]
+        # prologue w = op(r) is 1; each body iteration applies op once; a
+        # residual replacement (every rr iterations) applies it twice more
+        mv = k + 1 + (2 * (k // rr) if rr > 0 else 0)
         stats = SolveStats(iterations=k,
                            outer_iterations=jnp.asarray(1, jnp.int32),
                            residual_norm2=gamma, converged=gamma <= limit,
                            rhs_iterations=out[12] if batched else None,
-                           verdict=classify(gamma, limit, broken))
+                           verdict=classify(gamma, limit, broken),
+                           matvecs=jnp.broadcast_to(mv, gamma.shape))
         return x, stats
 
     return LoopParts(init=init, cond=cond, body=body, finish=finish,
@@ -836,5 +866,304 @@ def bicgstab(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
     k, x, rs, broken = out[0], out[1], out[8], out[9]
     stats = SolveStats(iterations=k, outer_iterations=jnp.asarray(1, jnp.int32),
                        residual_norm2=rs, converged=rs <= limit,
-                       verdict=classify(rs, limit, broken))
+                       verdict=classify(rs, limit, broken),
+                       matvecs=2 * k)  # v = op(p) and t = op(s) per iteration
     return x, stats
+
+
+# ---------------------------------------------------------------------------
+# Block CG — one shared Krylov search space for N right-hand sides
+# ---------------------------------------------------------------------------
+#
+# Batched CG (above) shares the MATVEC across N systems but keeps N
+# independent Krylov spaces: every RHS burns its own iteration budget.
+# Block CG (O'Leary 1980) shares the SEARCH SPACE too — the N scalar
+# alpha/beta pairs become small N×N Gram solves, every column's update
+# draws on all N directions, and the iteration count drops toward the one
+# set by the operator's spectrum divided by the block width.  Per-RHS
+# matvecs equal the (smaller) trip count, so the total operator work for
+# N systems falls well below N× the single-RHS count (DESIGN.md §12).
+
+
+def gram(a: Array, b: Array) -> Array:
+    """Pairwise inner products ``G[i, j] = ⟨a_i, b_j⟩`` over the leading
+    axis (single-device; the site axes are flattened and contracted in one
+    einsum).  Real for packed real-pair fields, Hermitian complex for
+    natural fields."""
+    a2 = a.reshape(a.shape[0], -1)
+    b2 = b.reshape(b.shape[0], -1)
+    return jnp.einsum("if,jf->ij", a2.conj(), b2)
+
+
+def _mix(fields: Array, coef: Array) -> Array:
+    """Column mixing ``out_j = Σ_i fields_i · coef[i, j]`` over the leading
+    RHS axis — the block-CG generalization of ``alpha * p``."""
+    f2 = fields.reshape(fields.shape[0], -1)
+    return jnp.einsum("ij,if->jf", coef.astype(f2.dtype),
+                      f2).reshape(fields.shape)
+
+
+def _gram_psolve(g: Array, rhs: Array, rcond: float = 1e-7) -> Array:
+    """Hermitian pseudo-solve of the N×N Gram system — the block-CG
+    RANK-DEFLATION point.  Eigenvalues below ``rcond·λ_max`` (converged
+    columns are zeroed out of P, linearly dependent directions collapse)
+    get zero inverse weight, so degenerate directions drop out of the
+    update instead of poisoning every column through a singular solve."""
+    evals, evecs = jnp.linalg.eigh(g)
+    cut = rcond * jnp.maximum(jnp.max(jnp.abs(evals)), 1e-30)
+    inv = jnp.where(evals > cut, 1.0 / jnp.where(evals > cut, evals, 1.0),
+                    0.0)
+    return evecs @ (inv[:, None].astype(rhs.dtype)
+                    * (evecs.conj().T @ rhs))
+
+
+def blockcg(op: Op, b: Array, x0: Array | None = None, *,
+            tol: float = 1e-8, maxiter: int = 1000,
+            norm2=field_norm2_batched) -> tuple[Array, SolveStats]:
+    """Block CG for a Hermitian positive-definite ``op`` over a leading
+    RHS-batch axis — N systems share ONE Krylov search space.
+
+    Per iteration: one block matvec ``Q = A P`` (the same batched
+    operator the masked multi-RHS solvers use — one gauge fetch serves
+    all N spinors), then two N×N Gram solves
+
+        alpha = (PᴴAP)⁺ PᴴR          (Galerkin step)
+        beta  = −(PᴴAP)⁺ QᴴR₊        (A-orthogonalization)
+
+    with a Hermitian PSEUDO-inverse (:func:`_gram_psolve`): converged
+    columns are zeroed out of ``P``/``R`` and linearly dependent search
+    directions collapse onto eigenvalues below the cut, so both are
+    rank-deflated out of the shared space instead of breaking the solve.
+    Columns therefore do NOT freeze bitwise the way the masked batched CG
+    freezes them (every update mixes all active directions) — the
+    contract degrades gracefully to per-RHS verdicts: per-RHS
+    convergence, per-RHS ``rhs_iterations``, per-RHS classification, and
+    the §10 true-residual verification gate still applies per RHS.
+
+    ``tol`` may be a per-RHS (N,) vector exactly as in :func:`cg`.
+    Single-device only (the Gram einsums contract unsharded site axes).
+    """
+    if b.ndim < 2:
+        raise ValueError("blockcg requires a leading RHS-batch axis")
+    _, norm2 = _batched_defaults(field_dot, norm2)  # always per-RHS here
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - op(x) if x0 is not None else b
+    rs = _real(norm2(r))
+    bs = _real(norm2(b))
+    limit = _stop_limit(tol, bs, True)
+    active0 = rs > limit
+    # invariant: inactive columns of P are identically zero, so they
+    # contribute nothing to the Gram matrices or the shared updates
+    p = jnp.where(_bcast(active0, b), r, jnp.zeros_like(b))
+
+    def cond(c):
+        k, rs, broken = c[0], c[4], c[6]
+        alive = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+        return jnp.logical_and(k < maxiter, jnp.any(alive))
+
+    def body(c):
+        k, x, r, p, rs, it, broken, rs_mark = c
+        rs_mark = jnp.where(k % STAGNATION_WINDOW == 0, rs, rs_mark)
+        m = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+        q = op(p)
+        g = gram(p, q)                       # N×N, PSD (zero inactive slots)
+        alpha = _gram_psolve(g, gram(p, r))
+        # mask converged/broken columns: their x/r stay untouched
+        alpha = alpha * m[None, :].astype(alpha.dtype)
+        colbad = jnp.logical_not(jnp.all(jnp.isfinite(alpha), axis=0))
+        broken = jnp.logical_or(broken, jnp.logical_and(m, colbad))
+        alpha = jnp.where(jnp.isfinite(alpha), alpha, 0.0)
+        x = x + _mix(p, alpha)
+        r = r - _mix(q, alpha)
+        rs_new = _real(norm2(r))
+        m_next = jnp.logical_and(rs_new > limit, jnp.logical_not(broken))
+        beta = -_gram_psolve(g, gram(q, r))
+        beta = beta * m_next[None, :].astype(beta.dtype)
+        beta = jnp.where(jnp.isfinite(beta), beta, 0.0)
+        p_new = (jnp.where(_bcast(m_next, b), r, jnp.zeros_like(b))
+                 + _mix(p, beta))
+        it = jnp.where(m, k + 1, it)
+        return (k + 1, x, r, p_new, rs_new, it, broken, rs_mark)
+
+    init = (jnp.asarray(0, jnp.int32), x, r, p, rs,
+            jnp.zeros_like(rs, jnp.int32), jnp.zeros(rs.shape, bool), rs)
+    k, x, r, p, rs, it, broken, rs_mark = jax.lax.while_loop(cond, body,
+                                                             init)
+    stalled = jnp.logical_and(k >= STAGNATION_WINDOW,
+                              rs > STAGNATION_FACTOR * rs_mark)
+    init_mv = jnp.asarray(0 if x0 is None else 1, jnp.int32)
+    stats = SolveStats(iterations=k,
+                       outer_iterations=jnp.asarray(1, jnp.int32),
+                       residual_norm2=rs, converged=rs <= limit,
+                       rhs_iterations=it,
+                       verdict=classify(rs, limit, broken, stalled),
+                       matvecs=jnp.broadcast_to(k + init_mv, rs.shape))
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# EigCG-style deflation — harvest low eigenpairs from early solves, then
+# project them out of every later solve on the same gauge field
+# ---------------------------------------------------------------------------
+#
+# CG's alpha/beta coefficients ARE a Lanczos factorization of the Krylov
+# operator in the normalized-residual basis: T[k,k] = 1/α_k + β_{k-1}/α_{k-1},
+# T[k,k+1] = √β_k / α_k.  Recording the normalized residuals alongside a
+# normal solve (``cg_harvest``) therefore yields Ritz pairs of A for free —
+# the smallest ones approximate the low modes that dominate the iteration
+# count.  A later solve on the same operator projects its RHS against the
+# harvested basis (Galerkin: x₀ = W (WᴴAW)⁻¹ Wᴴ b) and init-CGs from that
+# x₀ — the low-mode components arrive pre-solved and CG only works on the
+# better-conditioned remainder (DESIGN.md §12).
+
+
+class DeflationBasis(NamedTuple):
+    """A harvested low-mode basis for one (gauge, operator) pair.
+
+    ``w``: (nev, *field) approximate low eigenvectors (Ritz vectors) of
+    the Krylov operator, in the solver's working layout.  ``gram``: the
+    (nev, nev) projected operator ``WᴴAW`` — identity-padded on slots
+    beyond the harvested rank, so the Galerkin solve is always
+    nonsingular and a padded slot contributes exactly zero correction.
+    """
+
+    w: Array
+    gram: Array
+
+    @property
+    def nev(self) -> int:
+        return self.w.shape[0]
+
+
+def cg_harvest(op: Op, b: Array, *, tol: float = 1e-8, maxiter: int = 1000,
+               m_max: int = 48, dot=field_dot, norm2=field_norm2,
+               ) -> tuple[Array, SolveStats, tuple[Array, Array, Array]]:
+    """:func:`cg` (single-RHS) that additionally records its Lanczos data.
+
+    Returns ``(x, stats, (v, alphas, betas))``: the solution and stats of
+    a normal CG solve, plus the first ``min(iterations, m_max)``
+    normalized residuals ``v_k = r_k/‖r_k‖`` (the Lanczos vectors of
+    ``op`` in the Krylov space) and the CG coefficients they pair with —
+    exactly what :func:`ritz_deflation_basis` turns into a
+    :class:`DeflationBasis`.  The hot loop gains one buffer write per
+    iteration and no extra reductions or matvecs; the while-loop trip
+    count (and the iterate trajectory) is bitwise that of :func:`cg`.
+    """
+    m_max = int(min(m_max, maxiter))
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = _real(norm2(r))
+    bs = _real(norm2(b))
+    limit = _stop_limit(tol, bs, False)
+
+    def cond(c):
+        k, rs, broken = c[0], c[4], c[5]
+        alive = jnp.logical_and(rs > limit, jnp.logical_not(broken))
+        return jnp.logical_and(k < maxiter, alive)
+
+    def body(c):
+        k, x, r, p, rs, broken, rs_mark, vbuf, albuf, bebuf = c
+        rs_mark = jnp.where(k % STAGNATION_WINDOW == 0, rs, rs_mark)
+        # record the k-th Lanczos vector (normalized residual) before the
+        # update; writes past m_max re-write the last slot with its own
+        # value (a no-op), keeping the loop free of conditionals
+        idx = jnp.minimum(k, m_max - 1)
+        v = r * jnp.where(rs > 0, jax.lax.rsqrt(rs), 0.0).astype(r.dtype)
+        keep = jax.lax.dynamic_index_in_dim(vbuf, idx, 0, keepdims=False)
+        vbuf = jax.lax.dynamic_update_index_in_dim(
+            vbuf, jnp.where(k < m_max, v, keep), idx, 0)
+        ap = op(p)
+        pap = _real(dot(p, ap))
+        safe = pap != 0
+        broken = jnp.logical_or(broken, pap == 0)
+        alpha = jnp.where(safe, rs / jnp.where(safe, pap, 1.0), 0.0)
+        x = x + alpha.astype(b.dtype) * p
+        r = r - alpha.astype(b.dtype) * ap
+        rs_new = _real(norm2(r))
+        beta = rs_new / rs
+        p = r + beta.astype(b.dtype) * p
+        keep_al = jax.lax.dynamic_index_in_dim(albuf, idx, 0, False)
+        keep_be = jax.lax.dynamic_index_in_dim(bebuf, idx, 0, False)
+        albuf = jax.lax.dynamic_update_index_in_dim(
+            albuf, jnp.where(k < m_max, alpha, keep_al), idx, 0)
+        bebuf = jax.lax.dynamic_update_index_in_dim(
+            bebuf, jnp.where(k < m_max, beta, keep_be), idx, 0)
+        return (k + 1, x, r, p, rs_new, broken, rs_mark, vbuf, albuf, bebuf)
+
+    init = (jnp.asarray(0, jnp.int32), x, r, p, rs,
+            jnp.asarray(False), rs,
+            jnp.zeros((m_max,) + b.shape, b.dtype),
+            jnp.zeros((m_max,), rs.dtype), jnp.zeros((m_max,), rs.dtype))
+    out = jax.lax.while_loop(cond, body, init)
+    k, x, r, p, rs, broken, rs_mark, vbuf, albuf, bebuf = out
+    stalled = jnp.logical_and(k >= STAGNATION_WINDOW,
+                              rs > STAGNATION_FACTOR * rs_mark)
+    stats = SolveStats(iterations=k,
+                       outer_iterations=jnp.asarray(1, jnp.int32),
+                       residual_norm2=rs, converged=rs <= limit,
+                       verdict=classify(rs, limit, broken, stalled),
+                       matvecs=jnp.broadcast_to(k, rs.shape))
+    return x, stats, (vbuf, albuf, bebuf)
+
+
+def ritz_deflation_basis(op: Op, v: Array, alphas: Array, betas: Array,
+                         k, nev: int) -> DeflationBasis:
+    """Host-side (eager): turn :func:`cg_harvest` records into a
+    :class:`DeflationBasis` of exactly ``nev`` slots.
+
+    Builds the k×k Lanczos tridiagonal from the CG coefficients, takes
+    its ``min(nev, k)`` SMALLEST Ritz pairs, combines the recorded
+    Lanczos vectors into Ritz vectors ``W = V·Y``, and projects the
+    operator once: ``gram = WᴴAW`` (costing ``min(nev, k)`` extra
+    matvecs, amortized over every later deflated solve on this gauge
+    field).  Slots beyond the harvested rank are zero vectors with
+    identity gram rows — inert in the Galerkin solve — so the basis shape
+    is static regardless of how early the harvest solve converged.
+    """
+    import numpy as np
+    m = int(min(int(k), v.shape[0]))
+    if m < 1:
+        raise ValueError("ritz_deflation_basis: empty harvest (k < 1)")
+    al = np.asarray(alphas)[:m].astype(np.float64)
+    be = np.asarray(betas)[:m].astype(np.float64)
+    al = np.where(al == 0, 1.0, al)
+    diag = 1.0 / al
+    diag[1:] += be[:m - 1] / al[:m - 1]
+    off = np.sqrt(np.maximum(be[:m - 1], 0.0)) / al[:m - 1]
+    t = np.diag(diag) + np.diag(off, 1) + np.diag(off, -1)
+    _, y = np.linalg.eigh(t)          # ascending: low modes first
+    n_eff = max(1, min(nev, m))
+    # the true Lanczos vectors are q_k = (-1)^k r_k/‖r_k‖; the recorded
+    # v_k drop the sign, so fold it into the eigenvector rows (combining
+    # unsigned v's with unsigned y's would target the WRONG spectrum end)
+    signs = (-1.0) ** np.arange(m)
+    yk = jnp.asarray((y[:, :n_eff] * signs[:, None]).astype(np.float32))
+    vm = v[:m]
+    w = jnp.einsum("km,k...->m...", yk.astype(vm.dtype), vm)
+    aw = jnp.stack([op(w[i]) for i in range(n_eff)])
+    g = gram(w, aw)
+    if n_eff < nev:
+        pad = jnp.zeros((nev - n_eff,) + w.shape[1:], w.dtype)
+        w = jnp.concatenate([w, pad], axis=0)
+        g_full = jnp.eye(nev, dtype=g.dtype)
+        g = g_full.at[:n_eff, :n_eff].set(g)
+    return DeflationBasis(w=w, gram=g)
+
+
+def deflate_x0(basis: DeflationBasis, rhs: Array) -> Array:
+    """Galerkin deflation: ``x₀ = W (WᴴAW)⁻¹ Wᴴ rhs``.
+
+    ``rhs`` may carry a leading RHS-batch axis (same rank as ``basis.w``);
+    the projection is per-RHS — no cross-lane mixing, so a poisoned lane's
+    NaNs stay in its own x₀ (the §10 blast-radius contract).  A zero rhs
+    (serving pad slot) yields exactly zero x₀.
+    """
+    nev = basis.w.shape[0]
+    w2 = basis.w.reshape(nev, -1)
+    batched = rhs.ndim == basis.w.ndim
+    r2 = rhs.reshape(rhs.shape[0] if batched else 1, -1)
+    proj = jnp.einsum("kf,nf->kn", w2.conj(), r2)
+    c = jnp.linalg.solve(basis.gram, proj)
+    x0 = jnp.einsum("kn,kf->nf", c, w2.astype(c.dtype))
+    return x0.reshape(rhs.shape).astype(rhs.dtype)

@@ -56,7 +56,10 @@ def build_config(args) -> WorkloadConfig:
         chaos=args.chaos, chaos_poison_fraction=args.chaos_poison_fraction,
         chaos_fault_every=args.chaos_fault_every,
         chaos_fault_mode=args.chaos_fault_mode,
-        journal_dir=args.journal_dir)
+        journal_dir=args.journal_dir,
+        deflation_nev=args.deflation_nev,
+        deflation_m_max=args.deflation_m_max,
+        deflation_harvest_tol=args.deflation_harvest_tol)
 
 
 def make_parser() -> argparse.ArgumentParser:
@@ -114,6 +117,18 @@ def make_parser() -> argparse.ArgumentParser:
                         "admitted requests become durable; after a crash, "
                         "SolverServer.recover() replays the incomplete "
                         "entries")
+    p.add_argument("--deflation-nev", type=int, default=0,
+                   help="EigCG deflation basis size per (gauge, operator) "
+                        "coalesce key (0 = off); the first verified solve "
+                        "on each key harvests the basis, later requests "
+                        "start deflated and converge in fewer iterations")
+    p.add_argument("--deflation-m-max", type=int, default=160,
+                   help="Lanczos-vector recording depth of the harvest "
+                        "solve")
+    p.add_argument("--deflation-harvest-tol", type=float, default=None,
+                   help="harvest-solve tolerance (default: the triggering "
+                        "request's tol; tighter = deeper Krylov space = "
+                        "better basis on ill-conditioned operators)")
     p.add_argument("--out", default=None,
                    help="write the BENCH_serve.json report here")
     return p
@@ -157,6 +172,14 @@ def main(argv=None):
               f"failure_verdicts={c['failure_verdicts']} "
               f"containment={'OK' if c['containment_ok'] else 'FAIL'}")
         ok = ok and c["containment_ok"]
+    if "deflation_drop" in report:
+        d = report["deflation_drop"]
+        cache = report["deflation"]
+        print(f"[serve_solver] deflation: {cache['harvests']} harvests, "
+              f"{d['hit_requests']} cache-hit requests "
+              f"(hit_rate={cache['hit_rate']:.3f}), iteration drop "
+              f"{'OK' if d['all_hits_dropped'] else 'FAIL'}")
+        ok = ok and d["all_hits_dropped"] and d["hit_requests"] > 0
     if "verify" in report:
         v = report["verify"]
         print(f"[serve_solver] verify: {v['checked']} responses vs "

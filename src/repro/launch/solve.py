@@ -44,6 +44,7 @@ from repro.launch.mesh import make_debug_mesh
 _SOLVERS = {
     "cgnr": ("cgnr", "single"),
     "pipecg": ("pipecg", "single"),
+    "blockcg": ("blockcg", "single"),
     "mpcg": ("cgnr", "mixed"),
     "cg16": ("cgnr", "low"),
 }
@@ -72,7 +73,9 @@ def main(argv=None):
     p.add_argument("--lattice", default="4x4x4x8",
                    help="TxZxYxX extents")
     p.add_argument("--mass", type=float, default=0.2)
-    p.add_argument("--solver", default="mpcg", choices=sorted(_SOLVERS))
+    p.add_argument("--solver", default="mpcg", choices=sorted(_SOLVERS),
+                   help="Krylov loop / precision policy (blockcg shares "
+                        "one search space across an --nrhs batch)")
     p.add_argument("--parity", choices=["full", "eo"], default="full",
                    help="operator shape: full lattice or even-odd Schur")
     p.add_argument("--operator", default="wilson",
@@ -103,9 +106,21 @@ def main(argv=None):
                         "--checkpoint-dir and defect-correct from the "
                         "saved iterate (fresh checkpointed solve when the "
                         "directory has no checkpoint yet)")
+    p.add_argument("--deflate", type=int, default=0, metavar="NEV",
+                   help="harvest an NEV-vector EigCG deflation basis from "
+                        "a warmup solve on a separate RHS (same gauge/"
+                        "mass), then warm-start this solve with it — "
+                        "demonstrates the DESIGN.md §12 iteration cut "
+                        "(eo parity, cgnr/blockcg, single precision only)")
+    p.add_argument("--deflate-harvest-tol", type=float, default=1e-8,
+                   help="recursive-residual tolerance the harvest solve "
+                        "iterates to (deeper than --tol mines more "
+                        "spectrum)")
     args = p.parse_args(argv)
     if args.resume and args.checkpoint_dir is None:
         p.error("--resume requires --checkpoint-dir")
+    if args.deflate > 0 and (args.resume or args.checkpoint_dir):
+        p.error("--deflate does not compose with checkpointed solves")
 
     t, z, y, x = (int(v) for v in args.lattice.split("x"))
     shape = LatticeShape(t, z, y, x)
@@ -127,6 +142,26 @@ def main(argv=None):
           f"backend={plan.backend} solver={plan.solver} "
           f"precision={plan.precision} nrhs={plan.nrhs} mesh="
           f"{dict(plan.mesh.shape) if plan.mesh is not None else None}")
+
+    deflation = None
+    if args.deflate > 0:
+        import dataclasses
+        try:
+            hplan = dataclasses.replace(plan, solver="cgnr", nrhs=None)
+            hkey = jax.random.fold_in(jax.random.PRNGKey(args.seed), 2)
+            b_h = random_spinor(hkey, shape)
+            th = time.time()
+            _, hst, deflation = plan_mod.harvest_deflation(
+                hplan, u, b_h, m, tol=args.deflate_harvest_tol,
+                maxiter=args.maxiter, nev=args.deflate,
+                m_max=max(4 * args.deflate, 48), verify_tol=args.tol)
+        except (ValueError, NotImplementedError) as e:
+            print(f"[solve] invalid plan: {e}")
+            return 1
+        print(f"[solve] deflation harvest: nev={deflation.nev} "
+              f"iters={int(hst.iterations)} matvecs={int(hst.matvecs)} "
+              f"verified={bool(jnp.atleast_1d(hst.verified)[0])} "
+              f"time={time.time() - th:.2f}s", flush=True)
 
     t0 = time.time()
     try:
@@ -154,7 +189,8 @@ def main(argv=None):
                                       checkpoint=policy)
         else:
             xsol, st = plan_mod.solve(plan, u, b, m, tol=args.tol,
-                                      maxiter=args.maxiter)
+                                      maxiter=args.maxiter,
+                                      deflation=deflation)
     except (ValueError, NotImplementedError) as e:
         # dispatch-time rejections (e.g. full + mesh + nrhs) — same
         # friendly failure as a plan that fails to construct
@@ -177,6 +213,9 @@ def main(argv=None):
         per_rhs = [int(v) for v in st.rhs_iterations]
         print("[solve] per-RHS iterations: " + " ".join(
             f"rhs{i}={n}" for i, n in enumerate(per_rhs)))
+        print("[solve] per-RHS matvecs:    " + " ".join(
+            f"rhs{i}={int(v)}" for i, v in enumerate(
+                jnp.atleast_1d(st.matvecs))))
         print("[solve] per-RHS rel_res:   " + " ".join(
             f"rhs{i}={float(r):.2e}" for i, r in enumerate(rels)))
         if verdicts is not None:
@@ -211,7 +250,10 @@ def main(argv=None):
     # the even-odd Schur matvec does the same work on half-size fields.
     volume = shape.volume // 2 if plan.operator == "eo-schur" else shape.volume
     flops = 2 * dslash_flops(volume) * max(iters, 1) * 2 * n_systems
+    mv = jnp.atleast_1d(st.matvecs)
     print(f"[solve] lattice={shape} solver={args.solver} iters={iters} "
+          f"matvecs={int(jnp.max(mv))} "
+          f"(total {int(jnp.sum(mv))} across {n_systems} RHS) "
           f"max_rel_res={rel:.2e} time={dt:.2f}s "
           f"~{flops/dt/1e9:.2f} GFLOP/s (CPU, interpret-mode kernels)")
     return 0 if ok else 1

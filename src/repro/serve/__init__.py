@@ -11,7 +11,9 @@ Public surface:
                poisoned-RHS helpers) driving the containment tests and
                the loadgen --chaos lane
   batching   — the pre-compiled batch-shape ladder + BatchPolicy
-  plan_cache — PlanCache: resolved SolverPlan → jitted solve callable
+  plan_cache — PlanCache: resolved SolverPlan → jitted solve callable;
+               DeflationCache: per-gauge-field EigCG basis store (LRU
+               over gauge ids) behind the warm-gauge serving fast path
   loadgen    — WorkloadConfig / run_workload: synthetic open-loop load
                generator + direct-solve verification (BENCH_serve.json)
 """
@@ -25,6 +27,6 @@ from repro.serve.errors import (RequestFailed, RequestRejected, ServerClosed,
 from repro.serve.loadgen import (WorkloadConfig, build_workload,
                                  drive_open_loop, run_workload,
                                  verify_against_direct)
-from repro.serve.plan_cache import PlanCache
+from repro.serve.plan_cache import DeflationCache, PlanCache
 from repro.serve.server import (RequestStats, SolveRequest, SolveResult,
                                 SolverServer)

@@ -82,6 +82,16 @@ class WorkloadConfig:
     # become durable and a crashed run's incomplete entries can be
     # replayed by SolverServer.recover()
     journal_dir: str | None = None
+    # -- EigCG deflation (DESIGN.md §12): per-gauge-field basis cache ------
+    # 0 = off (the plain serving lane keeps its golden metrics bitwise);
+    # > 0 turns on harvest-on-first-verified-solve per coalesce key and
+    # the report gains a "deflation_drop" section proving hits converge
+    # in strictly fewer iterations than the cold solve
+    deflation_nev: int = 0
+    deflation_m_max: int = 160
+    # None: harvest at the triggering request's tol; ill-conditioned
+    # operators want a tighter harvest (deeper Krylov space, better basis)
+    deflation_harvest_tol: float | None = None
 
 
 def poisoned_indices(cfg: WorkloadConfig) -> frozenset[int]:
@@ -163,16 +173,22 @@ def percentile(sorted_vals: list[float], p: float) -> float:
 
 def verify_against_direct(gauges: dict, requests: list[SolveRequest],
                           results: list[tuple[float, SolveResult]],
-                          cfg: WorkloadConfig) -> dict:
+                          cfg: WorkloadConfig,
+                          deflation_bases: dict | None = None) -> dict:
     """Re-solve every request through a direct unbatched plan.solve.
 
     The masked-freeze contract says a served solution is the iterate its
     own independent solve would have produced — so the direct solve is
-    the oracle.  Uses a PRIVATE PlanCache (the server's hit-rate metrics
-    stay untouched); distinct (gauge, family, mu, rhs) combinations are
-    memoized since the workload cycles a finite RHS pool.
+    the oracle.  A response served off a deflation-cache hit is re-solved
+    with the SAME basis (``deflation_bases``: the server cache snapshot):
+    the contract for a deflated lane is "the iterate an independent
+    DEFLATED solve would have produced".  Uses a PRIVATE PlanCache (the
+    server's hit-rate metrics stay untouched); distinct (gauge, family,
+    mu, rhs, deflated?) combinations are memoized since the workload
+    cycles a finite RHS pool.
     """
     direct_plans = PlanCache()
+    bases = deflation_bases or {}
     memo: dict = {}
     max_err = 0.0
     checked = 0
@@ -181,23 +197,70 @@ def verify_against_direct(gauges: dict, requests: list[SolveRequest],
             continue  # failed outcomes carry no x to verify
         checked += 1
         mass = cfg.mass if req.mass is None else float(req.mass)
+        deflated = bool(res.stats.deflation_cache_hit)
         key = (req.gauge_id, req.operator_family, float(req.mu), mass,
-               float(req.tol), id(req.rhs))
+               float(req.tol), id(req.rhs), deflated)
         x_direct = memo.get(key)
         if x_direct is None:
             from repro.core import plan as plan_mod
             plan = plan_mod.SolverPlan(
                 operator="eo-schur", operator_family=req.operator_family,
                 mu=float(req.mu), backend=cfg.backend)
-            fn, _ = direct_plans.get(plan, mass, cfg.maxiter)
-            x_direct, _ = fn(gauges[req.gauge_id], req.rhs,
-                             jnp.float32(req.tol))
+            if deflated:
+                basis = bases[(req.gauge_id, req.operator_family,
+                               float(req.mu), mass)]
+                fn, _ = direct_plans.get_deflated(plan, mass, cfg.maxiter)
+                x_direct, _ = fn(gauges[req.gauge_id], req.rhs,
+                                 jnp.float32(req.tol), basis.w, basis.gram)
+            else:
+                fn, _ = direct_plans.get(plan, mass, cfg.maxiter)
+                x_direct, _ = fn(gauges[req.gauge_id], req.rhs,
+                                 jnp.float32(req.tol))
             memo[key] = x_direct
         err = float(jnp.max(jnp.abs(res.x - x_direct)))
         max_err = max(max_err, err)
     return {"checked": checked, "direct_solves": len(memo),
             "max_abs_err": max_err, "tol": VERIFY_TOL,
             "passed": max_err <= VERIFY_TOL}
+
+
+def summarize_deflation(cfg: WorkloadConfig, requests: list[SolveRequest],
+                        results: list[tuple[float, object]]) -> dict:
+    """The warm-gauge acceptance check, per coalesce key.
+
+    For every key: the COLD iteration count is the first served request
+    that did NOT hit the deflation cache (the solve that triggered the
+    harvest); every deflation-cache HIT on that key must have converged
+    in strictly fewer iterations.  ``all_hits_dropped`` is the guarded
+    bool (vacuously true for keys that never got a hit — the companion
+    ``hit_requests`` floor keeps the check from passing emptily).
+    """
+    per_key: dict[tuple, dict] = {}
+    hit_requests = 0
+    for req, (_, res) in zip(requests, results):
+        if not isinstance(res, SolveResult):
+            continue
+        mass = cfg.mass if req.mass is None else float(req.mass)
+        key = (req.gauge_id, req.operator_family, float(req.mu), mass)
+        entry = per_key.setdefault(
+            key, {"cold_iters": None, "hits": 0, "hit_iters_max": 0})
+        if res.stats.deflation_cache_hit:
+            hit_requests += 1
+            entry["hits"] += 1
+            entry["hit_iters_max"] = max(entry["hit_iters_max"],
+                                         res.stats.iterations)
+        elif entry["cold_iters"] is None and not res.stats.retried:
+            entry["cold_iters"] = res.stats.iterations
+    dropped = all(
+        e["hits"] == 0 or (e["cold_iters"] is not None
+                           and e["hit_iters_max"] < e["cold_iters"])
+        for e in per_key.values())
+    return {
+        "keys": {"|".join(str(v) for v in k): dict(e)
+                 for k, e in sorted(per_key.items())},
+        "hit_requests": hit_requests,
+        "all_hits_dropped": bool(dropped),
+    }
 
 
 def summarize_chaos(cfg: WorkloadConfig,
@@ -308,7 +371,10 @@ def run_workload(cfg: WorkloadConfig) -> dict:
             policy=BatchPolicy(max_wait=cfg.max_wait_s,
                                max_batch=cfg.max_batch),
             maxiter=cfg.maxiter, fault_injector=injector,
-            journal_dir=cfg.journal_dir)
+            journal_dir=cfg.journal_dir,
+            deflation_nev=cfg.deflation_nev,
+            deflation_m_max=cfg.deflation_m_max,
+            deflation_harvest_tol=cfg.deflation_harvest_tol)
         for gid, u in gauges.items():
             server.register_gauge(gid, u)
         try:
@@ -317,11 +383,12 @@ def run_workload(cfg: WorkloadConfig) -> dict:
             results, wall_s = await drive_open_loop(
                 server, requests, burst=cfg.burst,
                 interarrival_s=cfg.interarrival_s)
-            return results, wall_s, warmed, server.metrics()
+            return (results, wall_s, warmed, server.metrics(),
+                    server.deflations.bases())
         finally:
             await server.close()
 
-    results, wall_s, warmed, metrics = asyncio.run(main())
+    results, wall_s, warmed, metrics, bases = asyncio.run(main())
 
     served = [(lat, res) for lat, res in results
               if isinstance(res, SolveResult)]
@@ -362,7 +429,10 @@ def run_workload(cfg: WorkloadConfig) -> dict:
     }
     if cfg.chaos:
         report["chaos"] = summarize_chaos(cfg, results, wall_s)
+    if cfg.deflation_nev > 0:
+        report["deflation_drop"] = summarize_deflation(cfg, requests,
+                                                       results)
     if cfg.verify:
-        report["verify"] = verify_against_direct(gauges, requests,
-                                                 results, cfg)
+        report["verify"] = verify_against_direct(gauges, requests, results,
+                                                 cfg, deflation_bases=bases)
     return report

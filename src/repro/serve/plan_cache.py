@@ -17,7 +17,18 @@ tens of milliseconds.  This cache keys one jitted solve callable per
 
 The callable contract is ``fn(u, b, tol) -> (x, SolveStats)`` with ``b``
 shaped to the plan's ``nrhs`` rung and ``tol`` a per-RHS (nrhs,) float32
-vector (scalar for unbatched plans).
+vector (scalar for unbatched plans).  The DEFLATED variant
+(:meth:`PlanCache.get_deflated`) additionally takes the harvested basis
+as runtime arguments — ``fn(u, b, tol, w, gram)`` — so one compiled
+deflated program serves every gauge field and every re-harvested basis
+of the same shape.
+
+:class:`DeflationCache` is the companion state cache (DESIGN.md §12):
+harvested :class:`~repro.core.solvers.DeflationBasis` objects keyed by
+the server's coalesce key, LRU-bounded over gauge ids.  PlanCache holds
+CODE (gauge-independent, lives forever); DeflationCache holds DATA about
+one specific gauge field (invalidated when the field changes, evicted
+when the field goes cold).
 """
 
 from __future__ import annotations
@@ -27,6 +38,7 @@ from typing import Callable
 import jax
 
 from repro.core import plan as plan_mod
+from repro.core import solvers
 
 
 class PlanCache:
@@ -66,6 +78,37 @@ class PlanCache:
         self._fns[k] = fn
         return fn, False
 
+    def get_deflated(self, plan: plan_mod.SolverPlan, mass: float,
+                     maxiter: int) -> tuple[Callable, bool]:
+        """The jitted DEFLATED solve callable; (callable, was_cached).
+
+        Contract: ``fn(u, b, tol, w, gram) -> (x, SolveStats)`` where
+        ``(w, gram)`` are the arrays of a harvested
+        :class:`~repro.core.solvers.DeflationBasis` in the plan's working
+        layout.  The basis rides as RUNTIME arguments (rebuilt into a
+        NamedTuple inside the traced function), so swapping bases —
+        another gauge field, a re-harvest after invalidation — never
+        retraces as long as ``nev`` matches.  Keyed separately from the
+        plain callable of the same plan: the deflated program has a
+        different argument signature and an extra projection prologue.
+        """
+        k = ("deflated",) + self.key(plan, mass, maxiter)
+        fn = self._fns.get(k)
+        if fn is not None:
+            self.hits += 1
+            return fn, True
+        self.misses += 1
+        mass_f, maxiter_i = float(mass), int(maxiter)
+
+        def solve_fn(u, b, tol, w, gram, _plan=plan):
+            basis = solvers.DeflationBasis(w=w, gram=gram)
+            return plan_mod.solve(_plan, u, b, mass_f, tol=tol,
+                                  maxiter=maxiter_i, deflation=basis)
+
+        fn = jax.jit(solve_fn)
+        self._fns[k] = fn
+        return fn, False
+
     def __len__(self) -> int:
         return len(self._fns)
 
@@ -80,3 +123,105 @@ class PlanCache:
     def stats(self) -> dict:
         return {"size": len(self), "hits": self.hits,
                 "misses": self.misses, "hit_rate": self.hit_rate}
+
+
+class DeflationCache:
+    """Per-gauge-field deflation-basis cache — the solver's KV cache.
+
+    Keys are the server's COALESCE key ``(gauge_id, family, mu, mass)``:
+    the exact identity of the Krylov operator whose low modes a harvested
+    basis approximates.  A basis is valid for precisely one gauge FIELD,
+    so:
+
+    * re-registering a gauge id (new field, old name) must call
+      :meth:`invalidate_gauge` — the server does;
+    * memory is bounded by LRU eviction over GAUGE IDS, not individual
+      keys: a gauge field owns every basis harvested on it (one per
+      operator family/mass it served), and when the field goes cold all
+      of them go cold together.
+
+    Lookup/store are O(1) dict operations on the event-loop thread; the
+    arrays themselves live on device and are only touched by the worker.
+    """
+
+    def __init__(self, max_gauges: int = 8):
+        if max_gauges < 1:
+            raise ValueError(f"max_gauges must be >= 1, got {max_gauges}")
+        self.max_gauges = int(max_gauges)
+        self._bases: dict[tuple, solvers.DeflationBasis] = {}
+        # gauge_id -> None; insertion order IS recency order (py3.7+ dict)
+        self._lru: dict[str, None] = {}
+        self.hits = 0
+        self.misses = 0
+        self.harvests = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    @staticmethod
+    def _gauge_of(key: tuple) -> str:
+        return str(key[0])
+
+    def _touch(self, gauge_id: str) -> None:
+        self._lru.pop(gauge_id, None)
+        self._lru[gauge_id] = None
+
+    def lookup(self, key: tuple) -> solvers.DeflationBasis | None:
+        """The basis for a coalesce key, counting hit/miss and touching
+        the owning gauge's LRU slot; None on miss."""
+        basis = self._bases.get(key)
+        if basis is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._touch(self._gauge_of(key))
+        return basis
+
+    def peek(self, key: tuple) -> solvers.DeflationBasis | None:
+        """Lookup without touching counters or recency (harvest guard)."""
+        return self._bases.get(key)
+
+    def store(self, key: tuple, basis: solvers.DeflationBasis) -> None:
+        """Record a freshly harvested basis, evicting the least-recently
+        used gauge's bases if a NEW gauge would exceed ``max_gauges``."""
+        gauge_id = self._gauge_of(key)
+        if gauge_id not in self._lru and len(self._lru) >= self.max_gauges:
+            coldest = next(iter(self._lru))
+            self._drop_gauge(coldest)
+            self.evictions += 1
+        self._bases[key] = basis
+        self._touch(gauge_id)
+        self.harvests += 1
+
+    def _drop_gauge(self, gauge_id: str) -> int:
+        self._lru.pop(gauge_id, None)
+        doomed = [k for k in self._bases if self._gauge_of(k) == gauge_id]
+        for k in doomed:
+            del self._bases[k]
+        return len(doomed)
+
+    def invalidate_gauge(self, gauge_id: str) -> int:
+        """Drop every basis of one gauge id (the field changed); returns
+        the number of bases invalidated."""
+        dropped = self._drop_gauge(str(gauge_id))
+        self.invalidations += dropped
+        return dropped
+
+    def bases(self) -> dict[tuple, solvers.DeflationBasis]:
+        """Snapshot of the cached bases (verification oracles re-solve
+        deflated responses with the SAME basis the server used)."""
+        return dict(self._bases)
+
+    def __len__(self) -> int:
+        return len(self._bases)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self._bases), "gauges": len(self._lru),
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate, "harvests": self.harvests,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations}

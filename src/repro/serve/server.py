@@ -82,7 +82,7 @@ from repro.serve.batching import (BatchPolicy, DEFAULT_LADDER, pad_batch,
                                   pad_tols, rung_for, validate_ladder)
 from repro.serve.errors import (RequestFailed, RequestRejected, ServerClosed,
                                 ServerOverloaded, SolveTimeout)
-from repro.serve.plan_cache import PlanCache
+from repro.serve.plan_cache import DeflationCache, PlanCache
 
 Array = jax.Array
 
@@ -133,6 +133,10 @@ class RequestStats:
     true_residual_norm2: float = 0.0  # ‖b - D x‖² from the verify matvec
     retried: bool = False   # served by the individual containment re-solve
     resumed: bool = False   # replayed from the journal after a crash
+    # solved with a cached DeflationBasis for this coalesce key (the
+    # warm-gauge-field fast path; strictly fewer iterations than the cold
+    # solve that harvested the basis)
+    deflation_cache_hit: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,7 +163,10 @@ class SolverServer:
                  admission_validation: bool = True,
                  max_queue_depth: int = 256,
                  fault_injector: Callable | None = None,
-                 journal_dir: str | None = None):
+                 journal_dir: str | None = None,
+                 deflation_nev: int = 0, deflation_m_max: int = 160,
+                 deflation_harvest_tol: float | None = None,
+                 deflation_cache: DeflationCache | None = None):
         self.mass = float(mass)
         self.backend = backend
         self.ladder = validate_ladder(ladder)
@@ -174,6 +181,23 @@ class SolverServer:
         self.max_queue_depth = int(max_queue_depth)
         # test hook (serve/chaos.py): rewrites the worker's (u, b) view
         self.fault_injector = fault_injector
+        # EigCG deflation (DESIGN.md §12) — OFF by default (nev=0): the
+        # first verified solve on a coalesce key harvests a low-mode
+        # basis; later primary dispatches on that key start from the
+        # Galerkin projection and converge in strictly fewer iterations.
+        # A deflated solve still passes the full §10 verification gate
+        # against the ORIGINAL system, so deflation can only ever cost
+        # a harvest solve — never correctness.
+        if deflation_nev < 0:
+            raise ValueError(
+                f"deflation_nev must be >= 0, got {deflation_nev}")
+        self.deflation_nev = int(deflation_nev)
+        self.deflation_m_max = int(deflation_m_max)
+        self.deflation_harvest_tol = (
+            None if deflation_harvest_tol is None
+            else float(deflation_harvest_tol))
+        self.deflations = deflation_cache or DeflationCache()
+        self._harvest_failures = 0
         # write-ahead journal (serve/journal.py): admitted requests are
         # durable; recover() replays whatever a crash left incomplete
         self.journal = (journal_mod.RequestJournal(journal_dir)
@@ -213,8 +237,16 @@ class SolverServer:
     # -- gauge registry ----------------------------------------------------
 
     def register_gauge(self, gauge_id: str, u: Array) -> None:
-        """Register a hot gauge field clients may reference by id."""
-        self._gauges[str(gauge_id)] = u
+        """Register a hot gauge field clients may reference by id.
+
+        Re-registering an id installs the NEW field and invalidates every
+        deflation basis harvested on the old one — a low-mode basis is a
+        statement about one specific gauge configuration.
+        """
+        gid = str(gauge_id)
+        if gid in self._gauges:
+            self.deflations.invalidate_gauge(gid)
+        self._gauges[gid] = u
 
     def gauge_ids(self) -> tuple[str, ...]:
         return tuple(self._gauges)
@@ -425,9 +457,20 @@ class SolverServer:
         first = requests[0]
         rung = rung_for(len(batch), self.ladder)
         mass = self.mass if first.mass is None else float(first.mass)
+        key = self._coalesce_key(first)
+        # warm-gauge fast path: primary dispatches on a key with a
+        # harvested basis run the deflated program; containment re-solves
+        # deliberately do NOT (a retry must be the plainest possible
+        # solve — if the basis itself were somehow bad, deflation-free
+        # retries keep it out of the blast radius)
+        basis = (self.deflations.lookup(key)
+                 if self.deflation_nev > 0 and not retried else None)
         try:
             plan = self._plan_for(first, rung)
-            fn, cache_hit = self.plans.get(plan, mass, self.maxiter)
+            fn, cache_hit = (
+                self.plans.get_deflated(plan, mass, self.maxiter)
+                if basis is not None
+                else self.plans.get(plan, mass, self.maxiter))
             u = self._gauges[str(first.gauge_id)]
             b = pad_batch([r.rhs for r in requests], rung)
             tol = pad_tols([r.tol for r in requests], rung)
@@ -437,7 +480,8 @@ class SolverServer:
 
             def run():
                 uu, bb = (u, b) if injector is None else injector(u, b)
-                x, stats = fn(uu, bb, tol)
+                x, stats = (fn(uu, bb, tol) if basis is None
+                            else fn(uu, bb, tol, basis.w, basis.gram))
                 jax.block_until_ready(x)
                 return x, stats
 
@@ -506,13 +550,72 @@ class SolverServer:
                     converged=bool(converged[i]),
                     residual_norm2=float(res2[i]), plan_cache_hit=cache_hit,
                     verdict=verdict, verified=bool(verified[i]),
-                    true_residual_norm2=float(true_res2[i]), retried=retried)
+                    true_residual_norm2=float(true_res2[i]), retried=retried,
+                    deflation_cache_hit=basis is not None)
                 self._journal_complete(p, "ok")
                 if not p.future.done():
                     p.future.set_result(SolveResult(x=x[i], stats=st))
         for p in retry:
             self._lane_retries += 1
             await self._solve_batch([p], retried=True)
+        # EigCG harvest: the FIRST verified primary batch on a cold key
+        # pays one extra unbatched solve to mine the low modes every
+        # later request on this (gauge, operator) reuses.  Only a lane
+        # that passed the full verification gate may seed the basis — a
+        # poisoned or faulted lane never can.
+        if (self.deflation_nev > 0 and not retried and basis is None
+                and self.deflations.peek(key) is None):
+            for i, p in enumerate(batch):
+                if bool(converged[i]) and bool(verified[i]):
+                    await self._harvest_basis(key, p.request)
+                    break
+
+    async def _harvest_basis(self, key: tuple, request: SolveRequest):
+        """Harvest a DeflationBasis from one just-verified request.
+
+        Runs :func:`repro.core.plan.harvest_deflation` — an unbatched
+        solve of the same system recording its Lanczos data — on the
+        worker thread (one accelerator, dispatch order preserved).  The
+        harvest tolerance defaults to the triggering request's tol;
+        ``deflation_harvest_tol`` overrides it when the operator is ill-
+        conditioned enough that a deeper Krylov space buys a better basis.
+
+        Deflation is an accelerator, never a correctness dependency: a
+        harvest that fails, diverges, fails verification or produces
+        non-finite arrays is dropped (counted in
+        ``metrics()["deflation"]["harvest_failures"]``) and serving
+        continues undeflated.
+        """
+        loop = asyncio.get_running_loop()
+        u = self._gauges[str(request.gauge_id)]
+        mass = key[3]
+        htol = (float(request.tol) if self.deflation_harvest_tol is None
+                else self.deflation_harvest_tol)
+        plan = self._plan_for(request, None)
+        nev, m_max, maxiter = (self.deflation_nev, self.deflation_m_max,
+                               self.maxiter)
+
+        def run():
+            # verification of the harvest x gates at the REQUEST tol: the
+            # harvest may deliberately iterate past it (see
+            # harvest_deflation), and only the basis is kept anyway
+            _, stats, harvested = plan_mod.harvest_deflation(
+                plan, u, request.rhs, mass, tol=htol, maxiter=maxiter,
+                nev=nev, m_max=m_max, verify_tol=float(request.tol))
+            ok = (bool(jax.device_get(stats.converged))
+                  and bool(jax.device_get(stats.verified)))
+            finite = bool(jnp.all(jnp.isfinite(harvested.w))
+                          and jnp.all(jnp.isfinite(harvested.gram)))
+            return harvested if ok and finite else None
+
+        try:
+            harvested = await loop.run_in_executor(self._exec, run)
+        except Exception:
+            harvested = None
+        if harvested is not None:
+            self.deflations.store(key, harvested)
+        else:
+            self._harvest_failures += 1
 
     # -- lifecycle / telemetry --------------------------------------------
 
@@ -533,6 +636,12 @@ class SolverServer:
                                        / self._served if self._served
                                        else 0.0),
             "plan_cache": self.plans.stats(),
+            "deflation": {
+                "enabled": self.deflation_nev > 0,
+                "nev": self.deflation_nev,
+                "harvest_failures": self._harvest_failures,
+                **self.deflations.stats(),
+            },
             "containment": {
                 "admission_rejected": self._admission_rejected,
                 "overload_rejected": self._overload_rejected,

@@ -1,0 +1,306 @@
+"""Block CG + EigCG deflation (DESIGN.md §12): solver paths, caches, server.
+
+Three tiers, cheapest first:
+
+* pure cache/guard tests — no solves at all (dummy bases);
+* smoke-mass solves (0.1, ~14 iterations) — matvec accounting, blockcg
+  correctness, harvest plumbing.  Deflation is physically INERT here (the
+  Krylov space is too shallow for Ritz pairs to matter), so these assert
+  wiring, not iteration drops;
+* near-critical-mass solves (-1.7, ~120 iterations) — the actual
+  iteration cut, end-to-end through the core API and the serving layer.
+  Kept to a handful of solves; the bench lane (BENCH_solvers_baseline
+  ``eo_deflation`` / ``blockcg_16rhs`` / ``deflation_serve``) guards the
+  exact counts.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LatticeShape, random_gauge, random_spinor
+from repro.core import plan as plan_mod
+from repro.core import resilience, solvers
+from repro.core.plan import SolverPlan
+from repro.serve import DeflationCache, PlanCache, SolveRequest, SolverServer
+
+LAT = LatticeShape(4, 4, 4, 4)
+TOL = 1e-6
+MAXITER = 500
+SMOKE_MASS = 0.1
+DEFL_MASS = -1.7   # near-critical: ~120-iteration Krylov space
+
+
+@pytest.fixture(scope="module")
+def fields():
+    key = jax.random.PRNGKey(7)
+    ku, kb = jax.random.split(key)
+    gauges = {f"cfg{g}": random_gauge(jax.random.fold_in(ku, g), LAT)
+              for g in range(2)}
+    pool = [random_spinor(jax.random.fold_in(kb, i), LAT) for i in range(4)]
+    return gauges, pool
+
+
+def _eo(nrhs=None, **kw):
+    return SolverPlan(operator="eo-schur", operator_family="wilson",
+                      nrhs=nrhs, **kw)
+
+
+def _dummy_basis(nev=2):
+    w = jnp.zeros((nev, 8), jnp.complex64)
+    return solvers.DeflationBasis(w=w, gram=jnp.eye(nev, dtype=w.dtype))
+
+
+def _key(gid, mass=DEFL_MASS):
+    return (gid, "wilson", 0.0, mass)
+
+
+# -- DeflationCache lifecycle (no solves) ------------------------------------
+
+def test_deflation_cache_miss_store_hit_and_stats():
+    cache = DeflationCache()
+    assert cache.lookup(_key("g0")) is None          # miss
+    basis = _dummy_basis()
+    cache.store(_key("g0"), basis)
+    assert cache.lookup(_key("g0")) is basis          # hit
+    assert cache.peek(_key("g0")) is basis            # peek: no counters
+    assert cache.lookup(_key("g0", mass=0.2)) is None  # mass is in the key
+    s = cache.stats()
+    assert (s["hits"], s["misses"], s["harvests"]) == (1, 2, 1)
+    assert s["hit_rate"] == pytest.approx(1 / 3)
+    assert (s["size"], s["gauges"]) == (1, 1)
+
+
+def test_deflation_cache_lru_evicts_coldest_gauge_wholesale():
+    cache = DeflationCache(max_gauges=2)
+    cache.store(_key("g0"), _dummy_basis())
+    cache.store(_key("g0", mass=0.2), _dummy_basis())  # same gauge: no evict
+    cache.store(_key("g1"), _dummy_basis())
+    assert cache.lookup(_key("g0")) is not None        # touch g0: g1 coldest
+    cache.store(_key("g2"), _dummy_basis())            # third gauge: evict g1
+    assert cache.peek(_key("g1")) is None
+    assert cache.peek(_key("g0")) is not None
+    assert cache.peek(_key("g0", mass=0.2)) is not None
+    assert cache.peek(_key("g2")) is not None
+    s = cache.stats()
+    assert s["evictions"] == 1 and s["gauges"] == 2 and s["size"] == 3
+
+
+def test_deflation_cache_invalidate_gauge_drops_every_key():
+    cache = DeflationCache()
+    cache.store(_key("g0"), _dummy_basis())
+    cache.store(_key("g0", mass=0.2), _dummy_basis())
+    cache.store(_key("g1"), _dummy_basis())
+    assert cache.invalidate_gauge("g0") == 2
+    assert cache.peek(_key("g0")) is None
+    assert cache.peek(_key("g1")) is not None
+    assert cache.invalidate_gauge("nope") == 0
+    s = cache.stats()
+    assert s["invalidations"] == 2 and s["size"] == 1
+
+
+def test_deflation_cache_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        DeflationCache(max_gauges=0)
+
+
+# -- plan construction / dispatch guards (no solves) -------------------------
+
+def test_blockcg_plan_requires_nrhs():
+    with pytest.raises(ValueError):
+        SolverPlan(operator="eo-schur", solver="blockcg")
+
+
+def test_deflation_guard_rejects_unsupported_compositions(fields):
+    gauges, pool = fields
+    u, b = gauges["cfg0"], pool[0]
+    basis = _dummy_basis()
+    for plan in (_eo(solver="pipecg"), _eo(precision="mixed")):
+        with pytest.raises(NotImplementedError):
+            plan_mod.solve(plan, u, b, SMOKE_MASS, tol=TOL, maxiter=MAXITER,
+                           deflation=basis)
+    with pytest.raises(NotImplementedError):
+        plan_mod.solve(_eo(), u, b, SMOKE_MASS, tol=TOL, maxiter=MAXITER,
+                       deflation=basis,
+                       checkpoint=plan_mod.CheckpointPolicy(dir="/tmp/x"))
+
+
+def test_harvest_guard_rejects_batched_and_full(fields):
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    with pytest.raises(NotImplementedError):
+        plan_mod.harvest_deflation(
+            _eo(nrhs=2), u, jnp.stack(pool[:2]), SMOKE_MASS)
+    with pytest.raises(NotImplementedError):
+        plan_mod.harvest_deflation(
+            SolverPlan(operator="full"), u, pool[0], SMOKE_MASS)
+
+
+# -- PlanCache.get_deflated ---------------------------------------------------
+
+def test_plan_cache_deflated_entry_is_distinct_and_basis_is_runtime(fields):
+    gauges, pool = fields
+    u, b = gauges["cfg0"], pool[0]
+    cache = PlanCache()
+    fn_plain, _ = cache.get(_eo(), SMOKE_MASS, MAXITER)
+    fn_defl, hit1 = cache.get_deflated(_eo(), SMOKE_MASS, MAXITER)
+    fn_defl2, hit2 = cache.get_deflated(_eo(), SMOKE_MASS, MAXITER)
+    assert (hit1, hit2) == (False, True)
+    assert fn_defl is fn_defl2 and fn_defl is not fn_plain
+    assert len(cache) == 2
+    # the basis is a RUNTIME argument: swapping bases reuses the callable,
+    # and an all-zero basis (in the plan's WORKING layout — the Schur
+    # even field) is an inert x0=0 warm start — bitwise the plain solve
+    x_plain, st_plain = fn_plain(u, b, jnp.float32(TOL))
+    _, _, harvested = plan_mod.harvest_deflation(
+        _eo(), u, b, SMOKE_MASS, tol=1e-8, maxiter=MAXITER, nev=4,
+        m_max=48, verify_tol=TOL)
+    zero = solvers.DeflationBasis(
+        w=jnp.zeros_like(harvested.w),
+        gram=jnp.eye(harvested.w.shape[0], dtype=harvested.w.dtype))
+    x_defl, st_defl = fn_defl(u, b, jnp.float32(TOL), zero.w, zero.gram)
+    assert np.array_equal(np.asarray(x_plain), np.asarray(x_defl))
+    assert int(st_plain.iterations) == int(st_defl.iterations)
+
+
+# -- matvec accounting (smoke mass) ------------------------------------------
+
+def test_matvecs_counted_on_each_dispatch_path(fields):
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    # unbatched eo: one Krylov matvec per iteration from x0 = 0
+    _, st = plan_mod.solve(_eo(), u, pool[0], SMOKE_MASS, tol=TOL,
+                           maxiter=MAXITER)
+    assert int(st.matvecs) == int(st.iterations)
+    # batched eo: per-RHS counters freeze with the RHS
+    _, stb = plan_mod.solve(_eo(nrhs=2), u, jnp.stack(pool[:2]), SMOKE_MASS,
+                            tol=TOL, maxiter=MAXITER)
+    assert np.array_equal(np.asarray(stb.matvecs),
+                          np.asarray(stb.rhs_iterations))
+    # full-operator path counts too
+    _, stf = plan_mod.solve(SolverPlan(operator="full"), u, pool[0],
+                            SMOKE_MASS, tol=TOL, maxiter=MAXITER)
+    assert int(stf.matvecs) == int(stf.iterations) > 0
+
+
+def test_blockcg_solves_every_rhs_and_counts_matvecs(fields):
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    n = 3
+    plan = _eo(nrhs=n, solver="blockcg")
+    x, st = plan_mod.solve(plan, u, jnp.stack(pool[:n]), SMOKE_MASS,
+                           tol=TOL, maxiter=MAXITER)
+    assert np.asarray(st.converged).all() and np.asarray(st.verified).all()
+    assert np.array_equal(np.asarray(st.matvecs),
+                          np.asarray(st.rhs_iterations))
+    # true residual of every RHS against the full operator
+    from repro.core.operators import dslash_g
+    res = jax.vmap(lambda xx, bb: dslash_g(u, xx, SMOKE_MASS) - bb)(
+        x, jnp.stack(pool[:n]))
+    rels = (jnp.linalg.norm(res.reshape(n, -1), axis=1)
+            / jnp.linalg.norm(jnp.stack(pool[:n]).reshape(n, -1), axis=1))
+    assert float(jnp.max(rels)) < 10 * TOL
+
+
+# -- harvest plumbing (smoke mass, cheap) ------------------------------------
+
+def test_harvest_verify_tol_gates_the_true_residual_check(fields):
+    """A deep harvest (tol 1e-8) converges by RECURSIVE residual but f32
+    cannot push the TRUE residual below ~1e-7 relative — so verification
+    must be gated at the tolerance the x is served at, not the mining
+    depth."""
+    gauges, pool = fields
+    u, b = gauges["cfg0"], pool[0]
+    x, st, basis = plan_mod.harvest_deflation(
+        _eo(), u, b, SMOKE_MASS, tol=1e-8, maxiter=MAXITER, nev=4,
+        m_max=48, verify_tol=TOL)
+    assert bool(np.asarray(st.verified).all())
+    assert bool(np.asarray(st.converged).all())
+    assert basis.nev == 4 and basis.w.shape[0] == 4
+    # the WᴴAW projection is charged to the harvest solve
+    assert int(st.matvecs) > int(st.iterations)
+    _, st_deep, _ = plan_mod.harvest_deflation(
+        _eo(), u, b, SMOKE_MASS, tol=1e-8, maxiter=MAXITER, nev=4,
+        m_max=48)   # default gate = harvest tol: below the f32 floor
+    assert not bool(np.asarray(st_deep.verified).all())
+
+
+def test_defended_solve_passes_deflation_to_first_attempt(fields):
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    _, _, basis = plan_mod.harvest_deflation(
+        _eo(), u, pool[0], SMOKE_MASS, tol=1e-8, maxiter=MAXITER, nev=4,
+        m_max=48, verify_tol=TOL)
+    x, st, attempts = resilience.defended_solve(
+        _eo(), u, pool[1], SMOKE_MASS, tol=TOL, maxiter=MAXITER,
+        deflation=basis)
+    assert len(attempts) == 1 and attempts[0].verified
+    assert bool(np.asarray(st.verified).all())
+
+
+# -- the actual iteration cut (near-critical mass) ---------------------------
+
+@pytest.fixture(scope="module")
+def light_mass_basis(fields):
+    gauges, pool = fields
+    u = gauges["cfg0"]
+    x, st, basis = plan_mod.harvest_deflation(
+        _eo(), u, pool[0], DEFL_MASS, tol=1e-8, maxiter=MAXITER, nev=32,
+        m_max=160, verify_tol=TOL)
+    assert bool(np.asarray(st.verified).all())
+    return u, basis
+
+
+def test_deflated_solve_cuts_iterations_at_light_mass(fields,
+                                                      light_mass_basis):
+    _, pool = fields
+    u, basis = light_mass_basis
+    b = pool[1]
+    _, st_cold = plan_mod.solve(_eo(), u, b, DEFL_MASS, tol=TOL,
+                                maxiter=MAXITER)
+    _, st_defl = plan_mod.solve(_eo(), u, b, DEFL_MASS, tol=TOL,
+                                maxiter=MAXITER, deflation=basis)
+    assert bool(np.asarray(st_defl.verified).all())
+    assert int(st_defl.iterations) < int(st_cold.iterations)
+    # deflated warm start costs ONE extra matvec (r0 = b - A x0)
+    assert int(st_defl.matvecs) == int(st_defl.iterations) + 1
+
+
+def test_server_harvests_then_hits_with_iteration_drop(fields):
+    gauges, pool = fields
+
+    async def main():
+        server = SolverServer(
+            plan_cache=PlanCache(), mass=DEFL_MASS, maxiter=MAXITER,
+            ladder=(1, 4), deflation_nev=32, deflation_m_max=160,
+            deflation_harvest_tol=1e-8)
+        server.register_gauge("cfg0", gauges["cfg0"])
+        async with server:
+            def req(i):
+                return SolveRequest(operator_family="wilson",
+                                    gauge_id="cfg0", rhs=pool[i], tol=TOL)
+            cold = await asyncio.wait_for(server.submit(req(0)), timeout=600)
+            # results resolve BEFORE the harvest runs; wait for it
+            for _ in range(600):
+                if server.deflations.stats()["harvests"] > 0:
+                    break
+                await asyncio.sleep(0.1)
+            warm = await asyncio.wait_for(server.submit(req(1)), timeout=600)
+            m = server.metrics()
+            # re-registering the gauge invalidates its bases
+            server.register_gauge("cfg0", gauges["cfg0"])
+            key = ("cfg0", "wilson", 0.0, DEFL_MASS)
+            return cold, warm, m, server.deflations.peek(key)
+
+    cold, warm, metrics, peeked = asyncio.run(main())
+    assert not cold.stats.deflation_cache_hit
+    assert warm.stats.deflation_cache_hit
+    assert warm.stats.verified and cold.stats.verified
+    assert warm.stats.iterations < cold.stats.iterations
+    d = metrics["deflation"]
+    assert d["enabled"] and d["harvests"] == 1 and d["hits"] >= 1
+    assert d["harvest_failures"] == 0
+    assert peeked is None   # invalidated on re-register
