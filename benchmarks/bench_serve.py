@@ -30,8 +30,9 @@ import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # `benchmarks` package for direct script runs
 
 from repro.launch.serve_solver import build_config, make_parser  # noqa: E402
 from repro.serve.loadgen import WorkloadConfig, run_workload  # noqa: E402
@@ -61,7 +62,11 @@ DEFLATION_SERVE = WorkloadConfig(
 
 def run():
     """Harness protocol: yield (name, us_per_call, derived) rows."""
+    from benchmarks import bench_config
     report = run_workload(SMOKE)
+    # uniform label block, same schema as bench_dslash/bench_solvers
+    report["labels"] = bench_config.labels()
+    report["launch"] = bench_config.launch_env()
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -114,6 +119,9 @@ def main(argv=None) -> int:
               f"{'OK' if deflation_ok else 'FAIL'} (strict iteration "
               f"drop on every warm-gauge hit)")
     if args.out:
+        from benchmarks import bench_config
+        report["labels"] = bench_config.labels()
+        report["launch"] = bench_config.launch_env()
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -47,6 +47,8 @@ import subprocess
 import sys
 import time
 
+from benchmarks import bench_config
+
 # Kept in sync with tests/test_eo.py's module fixture so the committed
 # baseline guards the same solve the tier-1 suite runs.
 SMOKE_DIMS = (4, 4, 4, 4)
@@ -202,6 +204,24 @@ def _run_eo_smoke() -> dict:
     def sites_per_s(st, us):
         return lat.volume * int(st.iterations) / max(us / 1e6, 1e-12)
 
+    # compiled-lowering row (launch_bench.sh / --compiled): the SAME solve
+    # through the kernels' compiled path — on CPU the XLA half-spinor
+    # lowering, on device Mosaic.  Not iteration-guarded (compiled
+    # reductions may reorder; counts can differ by roundoff), the perf
+    # trajectory consumes its warm timing.
+    compiled_entries = []
+    if bench_config.is_compiled():
+        (x_cmp, st_cmp), us_cmp_first, us_cmp = _timed(
+            lambda: solve_wilson_eo(
+                u, b, SMOKE_MASS, tol=SMOKE_TOL, maxiter=1000,
+                use_pallas=True, interpret=False))
+        compiled_entries.append({
+            "name": "cgnr_eo_pallas_compiled", "backend": "pallas",
+            "interpret": False, "iters": int(st_cmp.iterations),
+            "matvecs": int(st_cmp.matvecs), "us_first": us_cmp_first,
+            "us_warm": us_cmp, "rel_res": rel(x_cmp),
+            "sites_per_s": sites_per_s(st_cmp, us_cmp)})
+
     return {
         "lattice": str(lat), "mass": SMOKE_MASS, "tol": SMOKE_TOL,
         "seed": SMOKE_SEED,
@@ -225,7 +245,7 @@ def _run_eo_smoke() -> dict:
              "interpret": True, "iters": int(st_pal.iterations),
              "matvecs": int(st_pal.matvecs), "us_first": us_pal_first,
              "us_warm": us_pal},
-        ],
+        ] + compiled_entries,
     }
 
 
@@ -711,6 +731,40 @@ def run() -> list[tuple[str, float, str]]:
     except Exception as e:
         rows.append(("fused_engine_shape", -1.0, f"FAILED:{e!r:.200}"))
     report["rows"] = [list(row) for row in rows]
+
+    # Uniform labels + achieved-vs-roofline bandwidth on every tagged
+    # entry (ISSUE 10).  The traffic model: one Schur matvec streams
+    # ~one full-lattice dslash's §6 traffic ((144/N + 48)·4 bytes/site
+    # over the two half-lattice hop passes), a LOWER bound that ignores
+    # the CG vector engine's 48 reals/site — so bw_fraction here is
+    # conservative.  Entries keep their own interpret/backend tags (a
+    # row that deliberately ran the other lowering says so).
+    from benchmarks.roofline import dslash_intensity
+    smoke_volume = 1
+    for d in SMOKE_DIMS:
+        smoke_volume *= d
+
+    def _annotate(e):
+        n = int(e.get("n_rhs", 1))
+        mv = e.get("matvecs")
+        if mv and e.get("us_warm"):
+            model = dslash_intensity(n_rhs=n, dtype_bytes=4)
+            total = model["bytes_per_site"] * smoke_volume * n * mv
+            bw = total / (e["us_warm"] / 1e6) / 1e9
+            e = {**e, "model_bw_gbs": bw,
+                 "bw_fraction": bench_config.bw_fraction(bw)}
+        return bench_config.label_entry(e)
+
+    for sec_name in ("eo_smoke", "eo_smoke_tm", "batch_sweep"):
+        sec = report.get(sec_name)
+        if sec and "entries" in sec:
+            sec["entries"] = [_annotate(e) for e in sec["entries"]]
+    report["labels"] = bench_config.labels()
+    report["launch"] = bench_config.launch_env()
+    try:
+        report["peak_bw_gbs"] = bench_config.peak_bandwidth_gbs()
+    except Exception:
+        pass
 
     path = os.environ.get("BENCH_SOLVERS_JSON", "BENCH_solvers.json")
     try:

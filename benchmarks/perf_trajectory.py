@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Append-per-PR performance trajectory (``BENCH_perf_trajectory.json``).
+
+Condenses one compiled-backend bench run (the ``BENCH_dslash.json`` and
+``BENCH_solvers.json`` artifacts produced under ``launch_bench.sh``)
+into a snapshot — warm sites·RHS/s, warm/first split, and
+achieved-vs-roofline ``bw_fraction`` per perf-critical entry — and
+appends it to the committed trajectory file.  One snapshot per commit:
+re-running on the same commit replaces its snapshot instead of
+duplicating it, so CI re-runs stay idempotent.
+
+``check_solver_regression.py --perf`` gates on this file: within the
+latest snapshot the compiled Pallas dslash rows must beat the jnp
+reference at equal N (the interpret-mode inversion stays closed), and
+across snapshots on the same device_kind the warm throughput and
+bandwidth fraction must not collapse (generous slack — wall-clock on
+shared runners is noisy; the hard, noise-free signal stays the
+iteration-count guard).
+
+Usage:  perf_trajectory.py --append [--dslash BENCH_dslash.json]
+            [--solvers BENCH_solvers.json] [--out BENCH_perf_trajectory.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEFAULT_OUT = "BENCH_perf_trajectory.json"
+
+# dslash entries whose trajectory the --perf gate watches (warm
+# steady-state rows of the compiled lane; name prefixes)
+PERF_PREFIXES = ("dslash_jnp_", "dslash_pallas_")
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def snapshot(dslash_doc, solvers_doc, commit: str | None = None) -> dict:
+    """One trajectory snapshot from the bench artifacts."""
+    entries = []
+    labels = {}
+    if dslash_doc:
+        for e in dslash_doc.get("entries", []):
+            if not e["name"].startswith(PERF_PREFIXES):
+                continue
+            entries.append({k: e[k] for k in (
+                "name", "us_warm", "us_first", "sites_rhs_per_s",
+                "model_bw_gbs", "bw_fraction", "n_rhs", "interpret",
+                "lowering") if k in e})
+        labels = {k: dslash_doc["entries"][0].get(k) for k in
+                  ("platform", "device_kind", "compiled")
+                  if dslash_doc.get("entries")}
+    if solvers_doc:
+        for sec in ("eo_smoke", "batch_sweep"):
+            for e in (solvers_doc.get(sec) or {}).get("entries", []):
+                name = e.get("name") or f"cgnr_eo_batched_n{e['n_rhs']}"
+                row = {"name": f"solver_{name}", "us_warm": e.get("us_warm"),
+                       "us_first": e.get("us_first")}
+                for k in ("sites_per_s", "sites_rhs_per_s", "bw_fraction",
+                          "model_bw_gbs", "iters", "n_rhs", "interpret",
+                          "lowering"):
+                    if k in e:
+                        row[k] = e[k]
+                entries.append(row)
+    snap = {
+        "commit": commit or _git_commit(),
+        "date": time.strftime("%Y-%m-%d"),
+        "entries": entries,
+    }
+    snap.update(labels)
+    for doc in (dslash_doc, solvers_doc):
+        if doc and "peak_bw_gbs" in doc:
+            snap["peak_bw_gbs"] = doc["peak_bw_gbs"]
+            break
+    if dslash_doc and "launch" in dslash_doc:
+        snap["launch"] = dslash_doc["launch"]
+    return snap
+
+
+def append(snap: dict, out_path: str) -> dict:
+    doc = _load(out_path) or {
+        "schema": 1,
+        "comment": "append-per-PR compiled-backend perf trajectory; "
+                   "regenerate a snapshot with benchmarks/launch_bench.sh; "
+                   "gated by check_solver_regression.py --perf",
+        "snapshots": [],
+    }
+    doc["snapshots"] = [s for s in doc["snapshots"]
+                        if s.get("commit") != snap["commit"]]
+    doc["snapshots"].append(snap)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="append a perf snapshot")
+    p.add_argument("--append", action="store_true",
+                   help="append/replace the snapshot for the current commit")
+    p.add_argument("--dslash", default=os.environ.get(
+        "BENCH_DSLASH_JSON", "BENCH_dslash.json"))
+    p.add_argument("--solvers", default=os.environ.get(
+        "BENCH_SOLVERS_JSON", "BENCH_solvers.json"))
+    p.add_argument("--out", default=os.environ.get(
+        "BENCH_PERF_TRAJECTORY_JSON", DEFAULT_OUT))
+    p.add_argument("--commit", default=None,
+                   help="override the snapshot's commit id")
+    args = p.parse_args(argv)
+
+    dslash_doc = _load(args.dslash)
+    solvers_doc = _load(args.solvers)
+    if dslash_doc is None and solvers_doc is None:
+        print(f"perf_trajectory: neither {args.dslash} nor {args.solvers} "
+              "readable; run the benches first", file=sys.stderr)
+        return 1
+    snap = snapshot(dslash_doc, solvers_doc, commit=args.commit)
+    if not snap["entries"]:
+        print("perf_trajectory: no perf-critical entries found",
+              file=sys.stderr)
+        return 1
+    if args.append:
+        doc = append(snap, args.out)
+        print(f"perf_trajectory: {len(snap['entries'])} entries @ "
+              f"{snap['commit']} -> {args.out} "
+              f"({len(doc['snapshots'])} snapshots)")
+    else:
+        json.dump(snap, sys.stdout, indent=2, sort_keys=True)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

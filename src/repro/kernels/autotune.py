@@ -1,0 +1,198 @@
+"""Offline autotuner for the dslash launch space (DESIGN.md §13).
+
+Sweeps the tile knobs of the plane-streaming kernels — z-block ``bz``,
+y-block ``by``, RHS-batch placement ``batch``, gauge streaming mode
+``stream`` — compiling each candidate and timing warm steady state, then
+persists the winner per ``(backend, lattice_shape, nrhs, dtype)`` via
+:func:`repro.kernels.dispatch.save_tuning_cache` into the checked-in
+``kernels/tuning_cache.json`` that :func:`~repro.kernels.dispatch.
+pick_tile` consults at trace time.
+
+Every candidate is **bitwise-identical** to every other (the tile changes
+HBM->VMEM data movement only, never per-site FMA order — asserted in
+``tests/test_autotune.py``), so the sweep needs no accuracy check and the
+cache can only change speed, never results.
+
+The sweep times the lowering the tiles actually steer: the Pallas
+interpreter on CPU, compiled Mosaic on GPU/TPU (the compiled-CPU path is
+the XLA fallback, which has no tiles — ``resolve_lowering`` routes around
+them there).  Interpret-mode ordering on CPU is a *data-movement* signal;
+device sweeps produce the numbers that matter and land in the same cache
+under their own backend key.
+
+CLI::
+
+    python -m repro.kernels.autotune --dims 4x4x4x8 --nrhs 1 8 \
+        --out src/repro/kernels/tuning_cache.json
+
+(paper lineage: arXiv 2111.14958 treats per-device kernel tuning as the
+portability layer; this module is that layer for the Pallas port.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LatticeShape, pack_gauge, pack_spinor
+from repro.kernels.dispatch import (TileConfig, cache_key, device_kind,
+                                    load_tuning_cache, save_tuning_cache)
+from repro.kernels.wilson_dslash.kernel import _divisors, dslash_pallas
+
+_BENCH_MASS = 0.1
+
+
+def candidates(lattice_shape: tuple[int, int, int, int], nrhs: int, *,
+               max_bz: int = 8, sweep_by: bool = True) -> list[TileConfig]:
+    """The candidate tiles for one (lattice, nrhs) point.
+
+    bz sweeps the divisors of Z up to ``max_bz``; by sweeps {Y, Y/2}
+    (smaller y-blocks only shrink VMEM working set, the interesting
+    boundary); batch="grid" applies only to real batches; stream="db"
+    only to the layouts it supports (untiled Y, batch="block").
+    """
+    t, z, y, x = lattice_shape
+    bzs = [c for c in _divisors(z) if c <= max_bz]
+    bys = [y]
+    if sweep_by and y % 2 == 0 and y > 1:
+        bys.append(y // 2)
+    batches = ["block"] + (["grid"] if nrhs > 1 else [])
+    out = []
+    for bz, by, batch, stream in itertools.product(
+            bzs, bys, batches, ("blockspec", "db")):
+        if stream == "db" and (by < y or batch == "grid"):
+            continue
+        out.append(TileConfig(bz=bz, by=by, batch=batch, stream=stream))
+    return out
+
+
+def _problem(lattice_shape, nrhs: int, dtype):
+    lat = LatticeShape(*lattice_shape)
+    key = jax.random.PRNGKey(1234)
+    ku, kp = jax.random.split(key)
+    from repro.core import random_gauge, random_spinor
+    up = pack_gauge(random_gauge(ku, lat)).astype(dtype)
+    pp = pack_spinor(random_spinor(kp, lat)).astype(dtype)
+    if nrhs > 1:
+        pp = jnp.stack([pp] * nrhs)
+    return up, pp
+
+
+def time_tile(up, pp, tile: TileConfig, *, iters: int = 2, reps: int = 3,
+              interpret: bool | None = None) -> dict:
+    """Compile one candidate and time warm steady state (best-of-reps
+    mean-of-iters, the standard min-timing protocol)."""
+    fn = jax.jit(lambda u, p: dslash_pallas(
+        u, p, _BENCH_MASS, bz=tile.bz, by=tile.by, batch=tile.batch,
+        stream=tile.stream, interpret=interpret))
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(up, pp))       # compile + first call
+    us_first = (time.perf_counter() - t0) * 1e6
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(up, pp)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return {"us_warm": best * 1e6, "us_first": us_first}
+
+
+def sweep(lattice_shape: tuple[int, int, int, int], nrhs: int = 1,
+          dtype=jnp.float32, *, max_bz: int = 8, sweep_by: bool = True,
+          iters: int = 2, reps: int = 3, interpret: bool | None = None,
+          verbose: bool = False) -> tuple[TileConfig, list[dict]]:
+    """Time every candidate for one point; returns (winner, all results)."""
+    up, pp = _problem(lattice_shape, nrhs, dtype)
+    results = []
+    for tile in candidates(lattice_shape, nrhs, max_bz=max_bz,
+                           sweep_by=sweep_by):
+        timing = time_tile(up, pp, tile, iters=iters, reps=reps,
+                           interpret=interpret)
+        results.append({**tile.to_entry(), **timing})
+        if verbose:
+            print(f"  {tile.to_entry()} -> {timing['us_warm']:.0f}us warm",
+                  file=sys.stderr)
+    winner = min(results, key=lambda r: r["us_warm"])
+    return (TileConfig(bz=winner["bz"], by=winner["by"],
+                       batch=winner["batch"], stream=winner["stream"]),
+            results)
+
+
+def autotune(points: list[tuple[tuple[int, int, int, int], int]],
+             dtype=jnp.float32, *, max_bz: int = 8, sweep_by: bool = True,
+             iters: int = 2, reps: int = 3, interpret: bool | None = None,
+             verbose: bool = False) -> dict:
+    """Sweep a list of (lattice_shape, nrhs) points; returns cache entries
+    keyed by :func:`~repro.kernels.dispatch.cache_key` (winner tile plus
+    its warm timing, for provenance)."""
+    backend = jax.default_backend()
+    entries = {}
+    for lattice_shape, nrhs in points:
+        if verbose:
+            print(f"sweep {lattice_shape} nrhs={nrhs}", file=sys.stderr)
+        winner, results = sweep(lattice_shape, nrhs, dtype, max_bz=max_bz,
+                                sweep_by=sweep_by, iters=iters, reps=reps,
+                                interpret=interpret, verbose=verbose)
+        best = min(results, key=lambda r: r["us_warm"])
+        entries[cache_key(backend, lattice_shape, nrhs, dtype)] = {
+            **winner.to_entry(),
+            "us_warm": round(best["us_warm"], 1),
+            "candidates": len(results),
+        }
+    return entries
+
+
+def _parse_dims(s: str) -> tuple[int, int, int, int]:
+    dims = tuple(int(d) for d in s.lower().split("x"))
+    if len(dims) != 4:
+        raise argparse.ArgumentTypeError(
+            f"dims must be TxZxYxX, got {s!r}")
+    return dims
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="sweep the dslash launch space, persist winners")
+    p.add_argument("--dims", type=_parse_dims, nargs="+",
+                   default=[(4, 4, 4, 8)],
+                   help="lattice extents TxZxYxX (repeatable)")
+    p.add_argument("--nrhs", type=int, nargs="+", default=[1, 8],
+                   help="RHS-batch sizes to tune (each is its own key)")
+    p.add_argument("--dtype", default="float32",
+                   choices=["float32", "bfloat16"])
+    p.add_argument("--out", default=None,
+                   help="cache JSON path (default: the package's "
+                        "tuning_cache.json)")
+    p.add_argument("--max-bz", type=int, default=8)
+    p.add_argument("--no-by", action="store_true",
+                   help="skip the y-tiling dimension")
+    p.add_argument("--iters", type=int, default=2)
+    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--merge", action="store_true",
+                   help="merge into the existing cache instead of "
+                        "replacing it (keeps other backends' entries)")
+    p.add_argument("-v", "--verbose", action="store_true")
+    args = p.parse_args(argv)
+
+    dtype = jnp.dtype(args.dtype)
+    points = [(dims, n) for dims in args.dims for n in args.nrhs]
+    entries = autotune(points, dtype, max_bz=args.max_bz,
+                       sweep_by=not args.no_by, iters=args.iters,
+                       reps=args.reps, verbose=args.verbose)
+    if args.merge:
+        entries = {**load_tuning_cache(args.out), **entries}
+    meta = {"backend": jax.default_backend(), "device_kind": device_kind(),
+            "jax": jax.__version__}
+    path = save_tuning_cache(entries, path=args.out, meta=meta)
+    print(f"wrote {len(entries)} entries -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,12 @@
 Fields are flattened to a (rows, 128) streaming view; a zero pad (which
 contributes 0 to the residual reduction and is sliced off afterwards)
 handles sizes that are not multiples of 128*block_rows.
+
+Lowering: like the dslash wrappers, ``interpret=False`` on CPU (where
+``pallas_call`` cannot compile) routes to the jnp reference triad — for
+these pure vector ops the ref IS the compiled-XLA implementation; XLA
+fuses the a*x+y chains into the same streaming passes the kernel
+hand-codes, so the "xla" lowering loses nothing.
 """
 
 from __future__ import annotations
@@ -18,6 +24,7 @@ from repro.kernels.cg_fused.kernel import (LANE, cg_update_batched_pallas,
                                            cg_xpay_pallas)
 from repro.kernels.cg_fused.ref import (cg_update_batched_ref, cg_update_ref,
                                         cg_xpay_batched_ref, cg_xpay_ref)
+from repro.kernels.dispatch import resolve_lowering
 
 __all__ = ["cg_update", "cg_xpay", "cg_update_batched", "cg_xpay_batched",
            "cg_pallas", "fused_engine", "fused_engine_batched"]
@@ -52,7 +59,7 @@ def _to_stream_batched(v: jax.Array):
 def cg_update(alpha, x, r, p, ap, *, interpret: bool | None = None,
               use_pallas: bool = True):
     """Fused (x + alpha p, r - alpha Ap, ||r_new||^2) for any field shape."""
-    if not use_pallas:
+    if not use_pallas or resolve_lowering(interpret) == "xla":
         return cg_update_ref(alpha, x, r, p, ap)
     shape = x.shape
     xs, _ = _to_stream(x)
@@ -71,7 +78,7 @@ def cg_update(alpha, x, r, p, ap, *, interpret: bool | None = None,
 def cg_xpay(beta, r, p, *, interpret: bool | None = None,
             use_pallas: bool = True):
     """p <- r + beta p for any field shape."""
-    if not use_pallas:
+    if not use_pallas or resolve_lowering(interpret) == "xla":
         return cg_xpay_ref(beta, r, p)
     shape = p.shape
     rstream, _ = _to_stream(r)
@@ -90,7 +97,7 @@ def cg_update_batched(alpha, x, r, p, ap, *, interpret: bool | None = None,
     Returns (x', r', rs) with rs the per-RHS ||r'_n||² of shape (N,).
     A frozen RHS (α_n = 0) keeps its x/r slices bitwise unchanged.
     """
-    if not use_pallas:
+    if not use_pallas or resolve_lowering(interpret) == "xla":
         return cg_update_batched_ref(alpha, x, r, p, ap)
     shape = x.shape
     xs, _ = _to_stream_batched(x)
@@ -115,7 +122,7 @@ def cg_xpay_batched(beta, r, p, gate, *, interpret: bool | None = None,
     ``r + beta p``; a cleared gate freezes the slice (p returned as-is) —
     the in-kernel form of the solver's convergence mask.
     """
-    if not use_pallas:
+    if not use_pallas or resolve_lowering(interpret) == "xla":
         return cg_xpay_batched_ref(beta, r, p, gate)
     shape = p.shape
     rstream, _ = _to_stream_batched(r)

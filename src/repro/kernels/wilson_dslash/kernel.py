@@ -3,16 +3,20 @@
 This is the TPU re-think of the paper's FPGA compute kernel (Fig. 1) and
 cyclic-buffer transport (its Ref. [11]):
 
-* **grid = (T, Z/BZ)** — the kernel streams (t, z-block) lattice *planes*;
-  Pallas's software pipeline double-buffers the next planes' HBM->VMEM DMA
-  behind the current plane's compute — the cyclic-buffer / II=1 analogue.
-* **neighbour planes as extra BlockSpecs** — ψ(t±1), ψ(z-block boundary)
-  and the backward links U_t(t-1), U_z(z-1) arrive through their own
-  index-maps (periodic wrap via modular index arithmetic), so the kernel
-  body never touches HBM addresses — exactly the paper's separation of
-  "transport mechanism" from "stencil evaluation".
-* **Y/X hops stay inside the block** — the block spans full Y and X, so
-  those neighbours are register/VMEM rolls (X is the 128-lane axis).
+* **grid = (T, Z/BZ[, Y/BY][, N])** — the kernel streams (t, z-block)
+  lattice *planes* (optionally further tiled along Y, optionally with the
+  RHS batch as the trailing grid axis); Pallas's software pipeline
+  double-buffers the next planes' HBM->VMEM DMA behind the current
+  plane's compute — the cyclic-buffer / II=1 analogue.
+* **neighbour planes as extra BlockSpecs** — ψ(t±1), ψ(z-block boundary),
+  ψ(y-block boundary when Y is tiled) and the backward links U_t(t-1),
+  U_z(z-1), U_y(y-1) arrive through their own index-maps (periodic wrap
+  via modular index arithmetic), so the kernel body never touches HBM
+  addresses — exactly the paper's separation of "transport mechanism"
+  from "stencil evaluation".
+* **Y/X hops stay inside the block** — when the block spans full Y those
+  neighbours are register/VMEM rolls (X is the 128-lane axis); a tiled Y
+  switches to the same boundary-splice scheme as Z, bitwise identically.
 * **spin-projection trick** — each hop projects 4-spinors to 2 half
   spinors before the SU(3) multiply (stage 2 of the paper's Fig. 1
   pipeline), halving the matvec work: 8 hops × 2 matvecs = the standard
@@ -21,6 +25,27 @@ cyclic-buffer transport (its Ref. [11]):
   into the trace-time projection/reconstruction tables (a sign flip on
   constant coefficients), so D†ψ = γ5 D γ5 ψ and the CGNR normal operator
   cost ZERO extra full-field HBM passes versus plain D.
+
+**Launch space (DESIGN.md §13).**  Tile parameters — z-block ``bz``,
+y-block ``by``, RHS-batch placement ``batch`` ("block" keeps the whole
+batch inside every block; "grid" makes it the trailing, fastest-varying
+grid axis so consecutive steps revisit one gauge block), and gauge
+streaming mode ``stream`` ("blockspec" = the implicit Pallas pipeline;
+"db" = explicit double-buffering of the center gauge planes through a
+2-slot VMEM scratch with async copies, so the next (t, z-block) plane's
+DMA overlaps the current plane's compute) — are all **bitwise-neutral**:
+they change HBM->VMEM data movement only, never the per-site FMA order.
+When none is given explicitly the wrappers consult the autotuner's
+checked-in ``kernels/tuning_cache.json`` (:func:`repro.kernels.dispatch.
+pick_tile`); a cold or disabled cache falls back to the deterministic
+historical defaults.
+
+**Lowerings.**  ``interpret=None`` interprets on CPU and compiles
+(Mosaic) on GPU/TPU; ``interpret=False`` on CPU routes to the
+compiled-XLA half-spinor implementation in
+:mod:`repro.kernels.wilson_dslash.xla` — ``pallas_call`` cannot compile
+on the CPU backend, and the XLA path is this host's honest compiled
+number (see :func:`repro.kernels.dispatch.resolve_lowering`).
 
 Two kernel families share the machinery:
 
@@ -59,10 +84,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lattice import GAUGE_G, NCOL, NDIRS, NSPIN, SPINOR_S
 from repro.core.wilson import _projectors
-from repro.kernels.dispatch import resolve_interpret
+from repro.kernels.dispatch import pick_tile, resolve_lowering
 
 # ---------------------------------------------------------------------------
 # Trace-time tables for the spin-projection trick.
@@ -212,7 +238,7 @@ def _repack_spinor_block(out_r, out_i, dtype):
     return jnp.stack(flat, axis=-2).astype(dtype)
 
 
-# Within a block element (..., BZ, Y, X): Y rolls on axis -2, X (lane) rolls
+# Within a block element (..., BZ, BY, X): Y rolls on axis -2, X (lane) rolls
 # on axis -1, the z-shift splices along axis -3 — negative so the same
 # kernel body serves the plain blocks and the batched (NB leading) blocks.
 _Y_AXIS, _X_AXIS, _Z_AXIS = -2, -1, -3
@@ -228,21 +254,26 @@ def _where_sc(sel, a_lists, b_lists):
             for ra, rb in zip(a_lists, b_lists)]
 
 
-def _shift_z(lists, boundary, forward: bool):
-    """Shift [..][..] lists of (..., BZ, Y, X) along BZ, splicing the
-    boundary plane (..., 1, Y, X) in at the open end."""
+def _shift(lists, boundary, forward: bool, axis: int):
+    """Shift [..][..] lists of (..., BZ, BY, X) along ``axis``, splicing
+    the boundary plane (extent 1 on that axis) in at the open end.
+
+    Bitwise-equivalent to ``jnp.roll`` when the block spans the full
+    extent — the Y-tiled launch switches rolls to shifts without changing
+    any per-site value or FMA order.
+    """
     out = []
     for r, row in enumerate(lists):
         orow = []
         for c, e in enumerate(row):
             b = boundary[r][c]
-            nz = e.shape[_Z_AXIS]
-            if forward:  # value at z+1: drop plane 0, append boundary
-                body = jax.lax.slice_in_dim(e, 1, nz, axis=_Z_AXIS)
-                orow.append(jnp.concatenate([body, b], axis=_Z_AXIS))
-            else:        # value at z-1: prepend boundary, drop last
-                body = jax.lax.slice_in_dim(e, 0, nz - 1, axis=_Z_AXIS)
-                orow.append(jnp.concatenate([b, body], axis=_Z_AXIS))
+            n = e.shape[axis]
+            if forward:  # value at +1: drop plane 0, append boundary
+                body = jax.lax.slice_in_dim(e, 1, n, axis=axis)
+                orow.append(jnp.concatenate([body, b], axis=axis))
+            else:        # value at -1: prepend boundary, drop last
+                body = jax.lax.slice_in_dim(e, 0, n - 1, axis=axis)
+                orow.append(jnp.concatenate([b, body], axis=axis))
         out.append(orow)
     return out
 
@@ -252,55 +283,212 @@ def _shift_z(lists, boundary, forward: bool):
 # ---------------------------------------------------------------------------
 
 
+def _divisors(n: int) -> list[int]:
+    return [c for c in range(1, n + 1) if n % c == 0]
+
+
 def _pick_bz(z: int, bz: int | None) -> int:
-    if bz is None:  # largest divisor of Z not exceeding 4
-        bz = max(c for c in (1, 2, 3, 4) if z % c == 0)
-    assert z % bz == 0, f"Z={z} must be divisible by bz={bz}"
+    """Validate/default the z-block size. Default: largest divisor ≤ 4."""
+    if bz is None:
+        return max(c for c in (1, 2, 3, 4) if z % c == 0)
+    bz = int(bz)
+    if bz < 1 or z % bz != 0:
+        raise ValueError(
+            f"bz={bz} does not tile the Z extent {z}: the z-block size "
+            f"must be a positive divisor of Z; legal bz values for Z={z}: "
+            f"{_divisors(z)}")
     return bz
 
 
-def _site_spec(zblk: int, y: int, s: int, x: int, tmap, zmap,
-               nb: int | None):
-    """BlockSpec for one (t, z-block) plane of a site field.
+def _pick_by(y: int, by: int | None) -> int:
+    """Validate/default the y-block size. Default: the full Y extent."""
+    if by is None:
+        return y
+    by = int(by)
+    if by < 1 or y % by != 0:
+        raise ValueError(
+            f"by={by} does not tile the Y extent {y}: the y-block size "
+            f"must be a positive divisor of Y; legal by values for Y={y}: "
+            f"{_divisors(y)}")
+    return by
 
-    ``nb`` is the RHS-batch extent: None produces the plain 5D layout
-    (1, zblk, y, s, x); an int prepends a FULL batch axis (nb, 1, zblk, y,
-    s, x) whose block index is pinned to 0 — every grid step sees all N
-    spinor planes while the gauge specs (no batch axis) deliver each link
-    plane exactly once, which is the gauge-amortization contract.
+
+def _site_spec(zblk: int, yblk: int, s: int, x: int, tmap, zmap, ymap,
+               nb: int | None, grid_batch: bool, y_tiled: bool):
+    """BlockSpec for one (t, z-block[, y-block]) plane of a site field.
+
+    ``nb`` is the RHS-batch extent: None produces the plain 5D layout;
+    with a batch the placement decides the block shape — "block"
+    (``grid_batch=False``) prepends a FULL batch axis whose block index
+    is pinned to 0 (every grid step sees all N spinor planes while the
+    gauge specs deliver each link plane exactly once: the
+    gauge-amortization contract), "grid" (``grid_batch=True``) prepends a
+    size-1 batch axis indexed by the TRAILING grid dimension, so
+    consecutive grid steps revisit the same gauge block with an N-times
+    smaller spinor working set.
     """
+    def site_idx(ids):
+        ti, zi = ids[0], ids[1]
+        yi = ids[2] if y_tiled else 0
+        return (tmap(ti), zmap(zi), ymap(yi), 0, 0)
     if nb is None:
-        return pl.BlockSpec((1, zblk, y, s, x),
-                            lambda ti, zi: (tmap(ti), zmap(zi), 0, 0, 0))
-    return pl.BlockSpec((nb, 1, zblk, y, s, x),
-                        lambda ti, zi: (0, tmap(ti), zmap(zi), 0, 0, 0))
+        return pl.BlockSpec((1, zblk, yblk, s, x),
+                            lambda *ids: site_idx(ids))
+    if grid_batch:
+        return pl.BlockSpec((1, 1, zblk, yblk, s, x),
+                            lambda *ids: (ids[-1],) + site_idx(ids))
+    return pl.BlockSpec((nb, 1, zblk, yblk, s, x),
+                        lambda *ids: (0,) + site_idx(ids))
 
 
-def _spinor_specs(t: int, z: int, bz: int, y: int, x: int,
-                  nb: int | None = None):
-    """center, t-1, t+1 blocks and the z-boundary planes of a spinor field."""
+def _spinor_specs(t: int, z: int, bz: int, y: int, by: int, x: int,
+                  nb: int | None = None, grid_batch: bool = False):
+    """center, t±1, z-boundary (and, when Y is tiled, y-boundary) specs.
+
+    Returns a list of 5 specs (full-Y blocks) or 7 (Y-tiled: +ym, +yp).
+    """
     s = SPINOR_S
-    ti_id = lambda ti: ti
-    zi_id = lambda zi: zi
-    c = _site_spec(bz, y, s, x, ti_id, zi_id, nb)
-    tm = _site_spec(bz, y, s, x, lambda ti: (ti - 1 + t) % t, zi_id, nb)
-    tp = _site_spec(bz, y, s, x, lambda ti: (ti + 1) % t, zi_id, nb)
-    # single boundary z-planes (block size 1 on z -> block index = plane idx)
-    zm = _site_spec(1, y, s, x, ti_id, lambda zi: (zi * bz - 1 + z) % z, nb)
-    zp = _site_spec(1, y, s, x, ti_id, lambda zi: (zi * bz + bz) % z, nb)
-    return c, tm, tp, zm, zp
+    y_tiled = by < y
+    idf = lambda i: i
+    mk = functools.partial(_site_spec, nb=nb, grid_batch=grid_batch,
+                           y_tiled=y_tiled)
+    c = mk(bz, by, s, x, idf, idf, idf)
+    tm = mk(bz, by, s, x, lambda ti: (ti - 1 + t) % t, idf, idf)
+    tp = mk(bz, by, s, x, lambda ti: (ti + 1) % t, idf, idf)
+    # single boundary planes (block size 1 -> block index = plane idx)
+    zm = mk(1, by, s, x, idf, lambda zi: (zi * bz - 1 + z) % z, idf)
+    zp = mk(1, by, s, x, idf, lambda zi: (zi * bz + bz) % z, idf)
+    specs = [c, tm, tp, zm, zp]
+    if y_tiled:
+        ym = mk(bz, 1, s, x, idf, idf, lambda yi: (yi * by - 1 + y) % y)
+        yp = mk(bz, 1, s, x, idf, idf, lambda yi: (yi * by + by) % y)
+        specs += [ym, yp]
+    return specs
 
 
-def _gauge_specs(t: int, z: int, bz: int, y: int, x: int):
-    """center (all 4 dirs), U_t(t-1) and the U_z(z-1) boundary plane."""
+def _gauge_specs(t: int, z: int, bz: int, y: int, by: int, x: int,
+                 grid_batch: bool = False):
+    """center (all 4 dirs), U_t(t-1), the U_z(z-1) boundary plane and,
+    when Y is tiled, the U_y(y-1) boundary plane.
+
+    Gauge fields never carry a batch axis; with the batch on the grid the
+    index maps simply ignore the trailing grid id — consecutive steps
+    then ask for the SAME gauge block, which the pipeline need not
+    refetch.
+    """
     g = GAUGE_G
-    c = pl.BlockSpec((NDIRS, 1, bz, y, g, x),
-                     lambda ti, zi: (0, ti, zi, 0, 0, 0))
-    tm = pl.BlockSpec((1, 1, bz, y, g, x),
-                      lambda ti, zi: (0, (ti - 1 + t) % t, zi, 0, 0, 0))
-    zm = pl.BlockSpec((1, 1, 1, y, g, x),
-                      lambda ti, zi: (1, ti, (zi * bz - 1 + z) % z, 0, 0, 0))
-    return c, tm, zm
+    y_tiled = by < y
+
+    def gmap(dmap, tfn, zfn, yfn):
+        def imap(*ids):
+            ti, zi = ids[0], ids[1]
+            yi = ids[2] if y_tiled else 0
+            return (dmap, tfn(ti), zfn(zi), yfn(yi), 0, 0)
+        return imap
+
+    idf = lambda i: i
+    c = pl.BlockSpec((NDIRS, 1, bz, by, g, x), gmap(0, idf, idf, idf))
+    tm = pl.BlockSpec((1, 1, bz, by, g, x),
+                      gmap(0, lambda ti: (ti - 1 + t) % t, idf, idf))
+    zm = pl.BlockSpec((1, 1, 1, by, g, x),
+                      gmap(1, idf, lambda zi: (zi * bz - 1 + z) % z, idf))
+    specs = [c, tm, zm]
+    if y_tiled:
+        ym = pl.BlockSpec((1, 1, bz, 1, g, x),
+                          gmap(2, idf, idf, lambda yi: (yi * by - 1 + y) % y))
+        specs.append(ym)
+    return specs
+
+
+def _resolve_tile(bz, by, batch, stream, t, z, y, x, nb, dtype):
+    """Explicit args > tuning cache > deterministic defaults.
+
+    Any explicitly-passed knob disables the cache for the whole launch
+    (tests and the autotuner stay deterministic); all-None consults
+    :func:`repro.kernels.dispatch.pick_tile`, whose miss path IS the
+    historical default.
+    """
+    if bz is None and by is None and batch is None and stream is None:
+        tile = pick_tile((t, z, y, x), nb or 1, dtype)
+        bz, by, batch, stream = tile.bz, tile.by, tile.batch, tile.stream
+    batch = batch or "block"
+    stream = stream or "blockspec"
+    bz = _pick_bz(z, bz)
+    by = _pick_by(y, by)
+    y_tiled = by < y
+    # an unbatched field has no batch axis to place — "grid" degenerates
+    # to the plain layout
+    grid_batch = batch == "grid" and nb is not None
+    if stream == "db" and (y_tiled or grid_batch):
+        raise ValueError(
+            "gauge stream 'db' double-buffers whole (t, z-block) gauge "
+            "planes and supports only the untiled-Y, batch='block' "
+            f"layout; got by={by} (Y={y}), batch={batch!r}")
+    return bz, by, batch, stream, y_tiled, grid_batch
+
+
+def _launch_grid(t, z, bz, y, by, nb, y_tiled, grid_batch):
+    grid = (t, z // bz)
+    if y_tiled:
+        grid += (y // by,)
+    if grid_batch:
+        grid += (nb,)
+    return grid
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered gauge streaming (stream="db")
+#
+# The center gauge operand (4 dirs × 18 reals = 144 reals/site — the
+# dominant stream; boundary fix-up planes stay on the implicit pipeline)
+# lives in ANY memory and is copied (t, z-block)-plane by plane into a
+# 2-slot VMEM scratch: at grid step i the kernel STARTS the DMA for step
+# i+1 into slot (i+1)%2, then WAITS on slot i%2 and computes from it —
+# the copy of the next plane overlaps the current plane's compute.  All
+# grid/program ids are hoisted OUT of the pl.when closures (a program_id
+# primitive inside a cond branch cannot lower on the interpret path).
+# ---------------------------------------------------------------------------
+
+
+def _db_gauge_plane(u_any, u_vmem, sem, bz: int):
+    """Prefetch-next / wait-current on one gauge stream; returns the
+    current step's (NDIRS, bz, Y, G, X) VMEM plane."""
+    ti, zi = pl.program_id(0), pl.program_id(1)
+    nzb = pl.num_programs(1)
+    total = pl.num_programs(0) * nzb
+    step = ti * nzb + zi
+    slot = jax.lax.rem(step, 2)
+    nxt = step + 1
+    nslot = jax.lax.rem(nxt, 2)
+    ti_n, zi_n = nxt // nzb, jax.lax.rem(nxt, nzb)
+
+    def start(s, t_, z_):
+        pltpu.make_async_copy(
+            u_any.at[:, t_, pl.ds(z_ * bz, bz)],
+            u_vmem.at[s], sem.at[s]).start()
+
+    @pl.when(step == 0)
+    def _prologue():
+        start(slot, ti, zi)
+
+    @pl.when(nxt < total)
+    def _prefetch():
+        start(nslot, ti_n, zi_n)
+
+    pltpu.make_async_copy(
+        u_any.at[:, ti, pl.ds(zi * bz, bz)],
+        u_vmem.at[slot], sem.at[slot]).wait()
+    return u_vmem[slot]
+
+
+def _db_scratch(bz: int, y: int, x: int, dtype, streams: int):
+    """Scratch shapes for ``streams`` double-buffered gauge streams."""
+    shapes = []
+    for _ in range(streams):
+        shapes.append(pltpu.VMEM((2, NDIRS, bz, y, GAUGE_G, x), dtype))
+    for _ in range(streams):
+        shapes.append(pltpu.SemaphoreType.DMA((2,)))
+    return shapes
 
 
 # ---------------------------------------------------------------------------
@@ -314,18 +502,32 @@ def _take_plane(ref, batched: bool):
     return ref[:, 0] if batched else ref[0]
 
 
-def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
-                   u_c, u_tm, u_zm, out_ref, *, mass: float,
-                   twist: float = 0.0, g5in: bool, g5out: bool,
-                   batched: bool = False):
+def _dslash_kernel(*refs, mass: float, twist: float = 0.0, g5in: bool,
+                   g5out: bool, batched: bool = False, y_tiled: bool = False,
+                   stream_db: bool = False, bz_sz: int = 0):
     f32 = jnp.float32
+    psi_ym = psi_yp = u_ym = None
+    if stream_db:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_any, u_tm, u_zm,
+         out_ref, u_vmem, sem) = refs
+    elif y_tiled:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp, psi_ym, psi_yp,
+         u_c, u_tm, u_zm, u_ym, out_ref) = refs
+    else:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
+         u_c, u_tm, u_zm, out_ref) = refs
+
     # ---- stage 1: load & unpack (all data now in VMEM) ----
     pc_r, pc_i = _split_spinor_block(_take_plane(psi_c, batched))
     ptm_r, ptm_i = _split_spinor_block(_take_plane(psi_tm, batched))
     ptp_r, ptp_i = _split_spinor_block(_take_plane(psi_tp, batched))
     pzm_r, pzm_i = _split_spinor_block(_take_plane(psi_zm, batched))
     pzp_r, pzp_i = _split_spinor_block(_take_plane(psi_zp, batched))
-    u = [_split_gauge_block(u_c[mu, 0]) for mu in range(NDIRS)]
+    if stream_db:
+        uv = _db_gauge_plane(u_any, u_vmem, sem, bz_sz)
+        u = [_split_gauge_block(uv[mu]) for mu in range(NDIRS)]
+    else:
+        u = [_split_gauge_block(u_c[mu, 0]) for mu in range(NDIRS)]
     utm_r, utm_i = _split_gauge_block(u_tm[0, 0])
     uzm_r, uzm_i = _split_gauge_block(u_zm[0, 0])
 
@@ -356,21 +558,36 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     hop(out_r, out_i, ptm_r, ptm_i, utm_r, utm_i, 0, "bwd")
 
     # ---- Z direction (mu=1): in-block shift + boundary planes ----
-    fz_r = _shift_z(pc_r, pzp_r, forward=True)
-    fz_i = _shift_z(pc_i, pzp_i, forward=True)
+    fz_r = _shift(pc_r, pzp_r, forward=True, axis=_Z_AXIS)
+    fz_i = _shift(pc_i, pzp_i, forward=True, axis=_Z_AXIS)
     hop(out_r, out_i, fz_r, fz_i, u[1][0], u[1][1], 1, "fwd")
-    bz_r = _shift_z(pc_r, pzm_r, forward=False)
-    bz_i = _shift_z(pc_i, pzm_i, forward=False)
-    ubz_r = _shift_z(u[1][0], uzm_r, forward=False)
-    ubz_i = _shift_z(u[1][1], uzm_i, forward=False)
+    bz_r = _shift(pc_r, pzm_r, forward=False, axis=_Z_AXIS)
+    bz_i = _shift(pc_i, pzm_i, forward=False, axis=_Z_AXIS)
+    ubz_r = _shift(u[1][0], uzm_r, forward=False, axis=_Z_AXIS)
+    ubz_i = _shift(u[1][1], uzm_i, forward=False, axis=_Z_AXIS)
     hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
 
-    # ---- Y direction (mu=2): rolls on the Y axis of (..., BZ, Y, X) ----
-    hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS), _roll_sc(pc_i, -1, _Y_AXIS),
-        u[2][0], u[2][1], 2, "fwd")
-    hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS), _roll_sc(pc_i, 1, _Y_AXIS),
-        _roll_sc(u[2][0], 1, _Y_AXIS), _roll_sc(u[2][1], 1, _Y_AXIS),
-        2, "bwd")
+    # ---- Y direction (mu=2): in-block rolls when the block spans full Y,
+    # the Z-style boundary-splice when Y is tiled (bitwise identical) ----
+    if y_tiled:
+        pym_r, pym_i = _split_spinor_block(_take_plane(psi_ym, batched))
+        pyp_r, pyp_i = _split_spinor_block(_take_plane(psi_yp, batched))
+        uym_r, uym_i = _split_gauge_block(u_ym[0, 0])
+        fy_r = _shift(pc_r, pyp_r, forward=True, axis=_Y_AXIS)
+        fy_i = _shift(pc_i, pyp_i, forward=True, axis=_Y_AXIS)
+        hop(out_r, out_i, fy_r, fy_i, u[2][0], u[2][1], 2, "fwd")
+        by_r = _shift(pc_r, pym_r, forward=False, axis=_Y_AXIS)
+        by_i = _shift(pc_i, pym_i, forward=False, axis=_Y_AXIS)
+        uby_r = _shift(u[2][0], uym_r, forward=False, axis=_Y_AXIS)
+        uby_i = _shift(u[2][1], uym_i, forward=False, axis=_Y_AXIS)
+        hop(out_r, out_i, by_r, by_i, uby_r, uby_i, 2, "bwd")
+    else:
+        hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS),
+            _roll_sc(pc_i, -1, _Y_AXIS), u[2][0], u[2][1], 2, "fwd")
+        hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS),
+            _roll_sc(pc_i, 1, _Y_AXIS),
+            _roll_sc(u[2][0], 1, _Y_AXIS), _roll_sc(u[2][1], 1, _Y_AXIS),
+            2, "bwd")
 
     # ---- X direction (mu=3): lane rolls ----
     hop(out_r, out_i, _roll_sc(pc_r, -1, _X_AXIS), _roll_sc(pc_i, -1, _X_AXIS),
@@ -388,7 +605,9 @@ def _dslash_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
 
 
 def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
-                  bz: int | None = None, interpret: bool | None = None,
+                  bz: int | None = None, by: int | None = None,
+                  batch: str | None = None, stream: str | None = None,
+                  interpret: bool | None = None,
                   twist: float = 0.0, gamma5_in: bool = False,
                   gamma5_out: bool = False) -> jax.Array:
     """Dirac-Wilson dslash via the Pallas plane-streaming kernel.
@@ -402,8 +621,16 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
       mass: bare mass (trace-time constant, like the paper's #define).
       twist: site-term twist (operator registry): adds ``i·twist·γ5 ψ`` to
         the mass term inside the kernel (twisted-mass Wilson); 0 = Wilson.
-      bz:   z-planes per block (VMEM working-set knob). Default: min(Z, 4).
-      interpret: None = interpret only on CPU; bool forces the mode.
+      bz:   z-planes per block (VMEM working-set knob); must divide Z.
+      by:   y-extent per block; must divide Y (default: full Y).
+      batch: RHS-batch placement, "block" or "grid" (see DESIGN.md §13).
+      stream: gauge streaming, "blockspec" or "db" (double-buffered).
+        When bz/by/batch/stream are ALL None the tuning cache decides
+        (:func:`repro.kernels.dispatch.pick_tile`); every choice is
+        bitwise-neutral.
+      interpret: None = interpret only on CPU; True forces the
+        interpreter; False forces compiled execution (Mosaic on GPU/TPU,
+        the XLA half-spinor lowering on CPU).
       gamma5_in/gamma5_out: compute γ5out D (γ5in ψ) with γ5 folded into the
         constant hop tables — both True gives D† for free.
     Returns:
@@ -415,23 +642,38 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
     nb = pp.shape[0] if pp.ndim == 6 else None
     tt, zz, yy, s, xx = pp.shape[-5:]
     assert (tt, zz, yy, xx) == (t, z, y, x) and s == SPINOR_S
-    bz = _pick_bz(z, bz)
 
-    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x, nb)
-    u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
+    lowering = resolve_lowering(interpret)
+    if lowering == "xla":
+        from repro.kernels.wilson_dslash import xla as _xla
+        return _xla.dslash_xla(up, pp, mass, twist=twist,
+                               gamma5_in=gamma5_in, gamma5_out=gamma5_out)
+
+    bz, by, batch, stream, y_tiled, grid_batch = _resolve_tile(
+        bz, by, batch, stream, t, z, y, x, nb, pp.dtype)
+    stream_db = stream == "db"
+
+    psi_specs = _spinor_specs(t, z, bz, y, by, x, nb, grid_batch)
+    gauge_specs = _gauge_specs(t, z, bz, y, by, x, grid_batch)
+    if stream_db:
+        gauge_specs[0] = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
 
     kernel = functools.partial(_dslash_kernel, mass=float(mass),
                                twist=float(twist), g5in=bool(gamma5_in),
                                g5out=bool(gamma5_out),
-                               batched=nb is not None)
+                               batched=nb is not None, y_tiled=y_tiled,
+                               stream_db=stream_db, bz_sz=bz)
+    n_psi = len(psi_specs)
     return pl.pallas_call(
         kernel,
-        grid=(t, z // bz),
-        in_specs=[psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_tm, u_zm],
-        out_specs=psi_c,
+        grid=_launch_grid(t, z, bz, y, by, nb, y_tiled, grid_batch),
+        in_specs=psi_specs + gauge_specs,
+        out_specs=psi_specs[0],
         out_shape=jax.ShapeDtypeStruct(pp.shape, pp.dtype),
-        interpret=resolve_interpret(interpret),
-    )(*([pp] * 5), *([up] * 3))
+        scratch_shapes=(_db_scratch(bz, y, x, up.dtype, streams=1)
+                        if stream_db else ()),
+        interpret=lowering == "interpret",
+    )(*([pp] * n_psi), *([up] * len(gauge_specs)))
 
 
 # ---------------------------------------------------------------------------
@@ -439,26 +681,41 @@ def dslash_pallas(up: jax.Array, pp: jax.Array, mass: float, *,
 # ---------------------------------------------------------------------------
 
 
-def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
-                          u_oc, u_nc, u_ntm, u_nzm, *rest, parity: int,
-                          hop_coeff: float, acc_coeff: float, has_acc: bool,
+def _dslash_parity_kernel(*refs, parity: int, hop_coeff: float,
+                          acc_coeff: float, has_acc: bool,
                           hop_twist: float = 0.0, acc_twist: float = 0.0,
-                          g5in: bool, g5out: bool, batched: bool = False):
+                          g5in: bool, g5out: bool, batched: bool = False,
+                          y_tiled: bool = False, stream_db: bool = False,
+                          bz_sz: int = 0):
     """Half-lattice hopping block: hop_coeff · γ5out Hop(γ5in ψ) [+ acc].
 
     ``u_oc`` holds the links attached to the OUTPUT-parity sites (forward
     hops use U_mu(x) at the output site x), ``u_nc``/``u_ntm``/``u_nzm``
-    the links attached to the neighbour parity (backward hops use
-    U_mu(x-mu)† at the neighbour site).  ``parity`` selects which parity
-    the output sites are: output rows sit at x = 2j + s_out with
-    s_out = (t + z + y + parity) mod 2.
+    (and ``u_nym`` when Y is tiled) the links attached to the neighbour
+    parity (backward hops use U_mu(x-mu)† at the neighbour site).
+    ``parity`` selects which parity the output sites are: output rows sit
+    at x = 2j + s_out with s_out = (t + z + y + parity) mod 2.
 
     ``batched``: the spinor blocks (center, neighbours, accumulator, out)
     carry a leading RHS-batch axis; the gauge blocks never do — one gauge
     fetch feeds all N half-spinor planes, and every hop below is rank-
     polymorphic (negative-axis rolls/shifts, broadcasting selects).
     """
-    out_ref = rest[-1]
+    psi_ym = psi_yp = u_nym = None
+    if stream_db:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp, uo_any, un_any,
+         u_ntm, u_nzm, *rest) = refs
+        out_ref = rest[-5]
+        uo_vmem, un_vmem, sem_o, sem_n = rest[-4:]
+        rest = rest[:-4]
+    elif y_tiled:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp, psi_ym, psi_yp,
+         u_oc, u_nc, u_ntm, u_nzm, u_nym, *rest) = refs
+        out_ref = rest[-1]
+    else:
+        (psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
+         u_oc, u_nc, u_ntm, u_nzm, *rest) = refs
+        out_ref = rest[-1]
     acc_ref = rest[0] if has_acc else None
 
     pc_r, pc_i = _split_spinor_block(_take_plane(psi_c, batched))
@@ -466,19 +723,29 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     ptp_r, ptp_i = _split_spinor_block(_take_plane(psi_tp, batched))
     pzm_r, pzm_i = _split_spinor_block(_take_plane(psi_zm, batched))
     pzp_r, pzp_i = _split_spinor_block(_take_plane(psi_zp, batched))
-    uo = [_split_gauge_block(u_oc[mu, 0]) for mu in range(NDIRS)]
-    un = [_split_gauge_block(u_nc[mu, 0]) for mu in range(NDIRS)]
+    if stream_db:
+        uov = _db_gauge_plane(uo_any, uo_vmem, sem_o, bz_sz)
+        unv = _db_gauge_plane(un_any, un_vmem, sem_n, bz_sz)
+        uo = [_split_gauge_block(uov[mu]) for mu in range(NDIRS)]
+        un = [_split_gauge_block(unv[mu]) for mu in range(NDIRS)]
+    else:
+        uo = [_split_gauge_block(u_oc[mu, 0]) for mu in range(NDIRS)]
+        un = [_split_gauge_block(u_nc[mu, 0]) for mu in range(NDIRS)]
     untm_r, untm_i = _split_gauge_block(u_ntm[0, 0])
     unzm_r, unzm_i = _split_gauge_block(u_nzm[0, 0])
 
     nbz, ny = pc_r[0][0].shape[-3:-1]
     # Row parity selector: True where the output site offset s_out == 1, i.e.
     # output sites sit at x = 2j + 1 within the row (see lattice.eo_row_offset).
-    # Shape (BZ, Y, 1) broadcasts across both the lane axis and any leading
-    # RHS-batch axis.
+    # Shape (BZ, BY, 1) broadcasts across both the lane axis and any leading
+    # RHS-batch axis.  Global row index = t + (zi·bz + local z) +
+    # (yi·by + local y) + parity; the yi·by term appears only when Y is
+    # tiled (otherwise yi == 0 and local y IS global y).
     zy = (jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 0)
           + jax.lax.broadcasted_iota(jnp.int32, (nbz, ny, 1), 1))
     row = pl.program_id(0) + pl.program_id(1) * nbz + zy + parity
+    if y_tiled:
+        row = row + pl.program_id(2) * ny
     sel = row % 2 == 1
 
     zero = jnp.zeros(pc_r[0][0].shape, jnp.float32)
@@ -492,21 +759,36 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
     hop(out_r, out_i, ptm_r, ptm_i, untm_r, untm_i, 0, "bwd")
 
     # ---- Z direction (mu=1): in-block shift + boundary planes ----
-    fz_r = _shift_z(pc_r, pzp_r, forward=True)
-    fz_i = _shift_z(pc_i, pzp_i, forward=True)
+    fz_r = _shift(pc_r, pzp_r, forward=True, axis=_Z_AXIS)
+    fz_i = _shift(pc_i, pzp_i, forward=True, axis=_Z_AXIS)
     hop(out_r, out_i, fz_r, fz_i, uo[1][0], uo[1][1], 1, "fwd")
-    bz_r = _shift_z(pc_r, pzm_r, forward=False)
-    bz_i = _shift_z(pc_i, pzm_i, forward=False)
-    ubz_r = _shift_z(un[1][0], unzm_r, forward=False)
-    ubz_i = _shift_z(un[1][1], unzm_i, forward=False)
+    bz_r = _shift(pc_r, pzm_r, forward=False, axis=_Z_AXIS)
+    bz_i = _shift(pc_i, pzm_i, forward=False, axis=_Z_AXIS)
+    ubz_r = _shift(un[1][0], unzm_r, forward=False, axis=_Z_AXIS)
+    ubz_i = _shift(un[1][1], unzm_i, forward=False, axis=_Z_AXIS)
     hop(out_r, out_i, bz_r, bz_i, ubz_r, ubz_i, 1, "bwd")
 
-    # ---- Y direction (mu=2): rolls on the Y axis of (..., BZ, Y, X) ----
-    hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS), _roll_sc(pc_i, -1, _Y_AXIS),
-        uo[2][0], uo[2][1], 2, "fwd")
-    hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS), _roll_sc(pc_i, 1, _Y_AXIS),
-        _roll_sc(un[2][0], 1, _Y_AXIS), _roll_sc(un[2][1], 1, _Y_AXIS),
-        2, "bwd")
+    # ---- Y direction (mu=2): rolls when the block spans full Y, the
+    # Z-style boundary splice when Y is tiled (bitwise identical) ----
+    if y_tiled:
+        pym_r, pym_i = _split_spinor_block(_take_plane(psi_ym, batched))
+        pyp_r, pyp_i = _split_spinor_block(_take_plane(psi_yp, batched))
+        unym_r, unym_i = _split_gauge_block(u_nym[0, 0])
+        fy_r = _shift(pc_r, pyp_r, forward=True, axis=_Y_AXIS)
+        fy_i = _shift(pc_i, pyp_i, forward=True, axis=_Y_AXIS)
+        hop(out_r, out_i, fy_r, fy_i, uo[2][0], uo[2][1], 2, "fwd")
+        by_r = _shift(pc_r, pym_r, forward=False, axis=_Y_AXIS)
+        by_i = _shift(pc_i, pym_i, forward=False, axis=_Y_AXIS)
+        uby_r = _shift(un[2][0], unym_r, forward=False, axis=_Y_AXIS)
+        uby_i = _shift(un[2][1], unym_i, forward=False, axis=_Y_AXIS)
+        hop(out_r, out_i, by_r, by_i, uby_r, uby_i, 2, "bwd")
+    else:
+        hop(out_r, out_i, _roll_sc(pc_r, -1, _Y_AXIS),
+            _roll_sc(pc_i, -1, _Y_AXIS), uo[2][0], uo[2][1], 2, "fwd")
+        hop(out_r, out_i, _roll_sc(pc_r, 1, _Y_AXIS),
+            _roll_sc(pc_i, 1, _Y_AXIS),
+            _roll_sc(un[2][0], 1, _Y_AXIS), _roll_sc(un[2][1], 1, _Y_AXIS),
+            2, "bwd")
 
     # ---- X direction (mu=3): parity-compressed lane axis.  The neighbour
     # of compressed index j is j + s_out (forward) / j - (1 - s_out)
@@ -572,6 +854,8 @@ def _dslash_parity_kernel(psi_c, psi_tm, psi_tp, psi_zm, psi_zp,
 
 def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
                           *, parity: int, bz: int | None,
+                          by: int | None = None, batch: str | None = None,
+                          stream: str | None = None,
                           interpret: bool | None, gamma5_in: bool,
                           gamma5_out: bool, psi_acc: jax.Array | None,
                           acc_coeff: float, hop_coeff: float,
@@ -587,15 +871,33 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
     assert t % 2 == z % 2 == y % 2 == 0, (
         "even-odd kernels need even T/Z/Y extents: an odd periodic extent "
         f"breaks bipartiteness, got {(t, z, y)}")
-    bz = _pick_bz(z, bz)
 
-    psi_c, psi_tm, psi_tp, psi_zm, psi_zp = _spinor_specs(t, z, bz, y, x, nb)
-    u_c, u_tm, u_zm = _gauge_specs(t, z, bz, y, x)
-    in_specs = [psi_c, psi_tm, psi_tp, psi_zm, psi_zp, u_c, u_c, u_tm, u_zm]
-    operands = [*([pp] * 5), u_out, *([u_nbr] * 3)]
+    lowering = resolve_lowering(interpret)
+    if lowering == "xla":
+        from repro.kernels.wilson_dslash import xla as _xla
+        return _xla.dslash_parity_xla(
+            u_out, u_nbr, pp, parity=int(parity) % 2,
+            gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
+            acc_coeff=acc_coeff, hop_coeff=hop_coeff,
+            acc_twist=acc_twist, hop_twist=hop_twist)
+
+    bz, by, batch, stream, y_tiled, grid_batch = _resolve_tile(
+        bz, by, batch, stream, t, z, y, x, nb, pp.dtype)
+    stream_db = stream == "db"
+
+    psi_specs = _spinor_specs(t, z, bz, y, by, x, nb, grid_batch)
+    gauge_specs = _gauge_specs(t, z, bz, y, by, x, grid_batch)
+    u_c, u_tm, u_zm = gauge_specs[0], gauge_specs[1], gauge_specs[2]
+    if stream_db:
+        u_c = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    in_specs = list(psi_specs) + [u_c, u_c, u_tm, u_zm]
+    operands = [*([pp] * len(psi_specs)), u_out, *([u_nbr] * 3)]
+    if y_tiled:
+        in_specs.append(gauge_specs[3])  # U_y(y-1) boundary, neighbour links
+        operands.append(u_nbr)
     if psi_acc is not None:
         assert psi_acc.shape == pp.shape
-        in_specs.append(psi_c)
+        in_specs.append(psi_specs[0])
         operands.append(psi_acc)
 
     kernel = functools.partial(
@@ -603,19 +905,24 @@ def _dslash_parity_pallas(u_out: jax.Array, u_nbr: jax.Array, pp: jax.Array,
         hop_coeff=float(hop_coeff), acc_coeff=float(acc_coeff),
         hop_twist=float(hop_twist), acc_twist=float(acc_twist),
         has_acc=psi_acc is not None, g5in=bool(gamma5_in),
-        g5out=bool(gamma5_out), batched=nb is not None)
+        g5out=bool(gamma5_out), batched=nb is not None, y_tiled=y_tiled,
+        stream_db=stream_db, bz_sz=bz)
     return pl.pallas_call(
         kernel,
-        grid=(t, z // bz),
+        grid=_launch_grid(t, z, bz, y, by, nb, y_tiled, grid_batch),
         in_specs=in_specs,
-        out_specs=psi_c,
+        out_specs=psi_specs[0],
         out_shape=jax.ShapeDtypeStruct(pp.shape, pp.dtype),
-        interpret=resolve_interpret(interpret),
+        scratch_shapes=(_db_scratch(bz, y, x, u_out.dtype, streams=2)
+                        if stream_db else ()),
+        interpret=lowering == "interpret",
     )(*operands)
 
 
 def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
-                     bz: int | None = None, interpret: bool | None = None,
+                     bz: int | None = None, by: int | None = None,
+                     batch: str | None = None, stream: str | None = None,
+                     interpret: bool | None = None,
                      gamma5_in: bool = False, gamma5_out: bool = False,
                      psi_acc: jax.Array | None = None,
                      acc_coeff: float = 0.0, hop_coeff: float = 1.0,
@@ -639,19 +946,24 @@ def dslash_eo_pallas(u_e: jax.Array, u_o: jax.Array, pp_o: jax.Array, *,
         (trace-time constants; zero extra passes), which is exactly what
         a site-diagonal ``i·μ·γ5`` term (twisted mass) needs to fold its
         Schur blocks into the same two launches as Wilson.
+      bz/by/batch/stream: launch-space knobs (DESIGN.md §13); all None
+        consults the tuning cache, every choice is bitwise-neutral.
       gamma5_in/gamma5_out: fold γ5 around the hop (tables only, free).
     Returns:
       packed even-parity half field(s), shape/dtype of ``pp_o``.
     """
     return _dslash_parity_pallas(
-        u_e, u_o, pp_o, parity=0, bz=bz, interpret=interpret,
+        u_e, u_o, pp_o, parity=0, bz=bz, by=by, batch=batch, stream=stream,
+        interpret=interpret,
         gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
         acc_coeff=acc_coeff, hop_coeff=hop_coeff,
         acc_twist=acc_twist, hop_twist=hop_twist)
 
 
 def dslash_oe_pallas(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
-                     bz: int | None = None, interpret: bool | None = None,
+                     bz: int | None = None, by: int | None = None,
+                     batch: str | None = None, stream: str | None = None,
+                     interpret: bool | None = None,
                      gamma5_in: bool = False, gamma5_out: bool = False,
                      psi_acc: jax.Array | None = None,
                      acc_coeff: float = 0.0, hop_coeff: float = 1.0,
@@ -659,7 +971,8 @@ def dslash_oe_pallas(u_e: jax.Array, u_o: jax.Array, pp_e: jax.Array, *,
                      hop_twist: float = 0.0) -> jax.Array:
     """D_oe: even -> odd hopping block on packed half fields (see above)."""
     return _dslash_parity_pallas(
-        u_o, u_e, pp_e, parity=1, bz=bz, interpret=interpret,
+        u_o, u_e, pp_e, parity=1, bz=bz, by=by, batch=batch, stream=stream,
+        interpret=interpret,
         gamma5_in=gamma5_in, gamma5_out=gamma5_out, psi_acc=psi_acc,
         acc_coeff=acc_coeff, hop_coeff=hop_coeff,
         acc_twist=acc_twist, hop_twist=hop_twist)
